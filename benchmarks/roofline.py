@@ -1,0 +1,35 @@
+"""Roofline report: reads results/dryrun.json and prints the per-cell
+three-term analysis (compute / memory / collective seconds, dominant term,
+useful-FLOPs ratio)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun.json")
+
+
+def run(path: str = DEFAULT_PATH, mesh: str = "single_pod") -> None:
+    if not os.path.exists(path):
+        print(f"# roofline: {path} missing — run `python -m repro.launch.dryrun`")
+        return
+    with open(path) as f:
+        records = json.load(f)
+    rows = [r for r in records if r.get("status") == "ok" and r.get("mesh") == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    for r in rows:
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}",
+            r["step_time_s"],
+            f"dom={r['dominant']} comp={r['compute_s']:.3g}s "
+            f"mem={r['memory_s']:.3g}s coll={r['collective_s']:.3g}s "
+            f"useful={r['useful_flops_ratio']:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Benchmark harness — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV. ``--fast`` shrinks dataset scales
+for CI; table selection via ``--only table5,table9``.
+
+  table3  link-pred training epoch time (incl. DyGLib-style baseline)
+  table4  node property prediction (PF / TGN / GCN, NDCG@10)
+  table5  discretization latency (vectorized vs UTG dict)
+  table6  snapshot granularity vs MRR (RQ2)
+  table8  eval batch size / unit vs MRR (RQ3)
+  table9  one-vs-many validation latency (batch dedup on/off)
+  kernels kernel reference-path microbenchmarks
+  roofline per-cell roofline terms (reads results/dryrun.json)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--fast", action="store_true", help="smaller scales")
+    p.add_argument("--only", default="", help="comma-separated table list")
+    args = p.parse_args()
+    fast = args.fast
+    only = set(filter(None, args.only.split(",")))
+
+    from benchmarks import (
+        kernels_bench,
+        roofline,
+        table3_linkpred,
+        table4_nodeprop,
+        table5_discretize,
+        table6_granularity,
+        table8_batchsize,
+        table9_validation,
+        table11_profile,
+    )
+
+    jobs = [
+        ("table5", lambda: table5_discretize.run(scale=0.01 if fast else 0.05)),
+        ("table3", lambda: table3_linkpred.run(scale=0.005 if fast else 0.02)),
+        ("table4", lambda: table4_nodeprop.run(scale=0.005 if fast else 0.02)),
+        ("table6", lambda: table6_granularity.run(scale=0.005 if fast else 0.01)),
+        ("table8", lambda: table8_batchsize.run(scale=0.005 if fast else 0.01)),
+        ("table9", lambda: table9_validation.run(scale=0.005 if fast else 0.02)),
+        ("table11", lambda: table11_profile.run(scale=0.005 if fast else 0.01)),
+        ("kernels", kernels_bench.run),
+        ("roofline", roofline.run),
+    ]
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in jobs:
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name}/FAILED,0,see stderr", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table 11: runtime breakdown of TGAT training via the built-in
+profiler (data loading / hooks / sampler / forward / backward+opt)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import TRAIN_KEY
+from repro.core.tg_hooks import RecencyNeighborHook
+from repro.data import generate
+from repro.train import LinkPredictionTrainer
+from repro.utils import Profiler
+
+from benchmarks.common import emit
+
+
+def run(scale: float = 0.01, dataset: str = "wikipedia") -> None:
+    data = generate(dataset, scale=scale)
+    tr = LinkPredictionTrainer("tgat", data, batch_size=200, k=10,
+                               model_kwargs={"num_layers": 1})
+    tr.train_epoch()  # warm compile
+
+    prof = Profiler(block=True)
+    tr.reset_epoch_state()
+    with tr.manager.activate(TRAIN_KEY):
+        loader = tr._loader(tr.train_data)
+        it = iter(loader)
+        while True:
+            with prof("data_loading"):
+                try:
+                    batch = next(it)
+                except StopIteration:
+                    break
+                bt = {k: batch[k] for k in batch.keys()}
+            with prof("train_step"):
+                tr.params, tr.opt_state, _ = tr._train_step(
+                    tr.params, tr.opt_state, bt)
+    total = prof.total()
+    for path, secs in sorted(prof.times.items()):
+        emit(f"table11/{dataset}/{path}", secs / max(prof.counts[path], 1),
+             f"pct={100 * secs / total:.1f}")
+    print(prof.report(), flush=True)
+
+
+if __name__ == "__main__":
+    run()

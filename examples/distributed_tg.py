@@ -1,0 +1,58 @@
+"""DistTGL-style data-parallel temporal-graph training with shard_map:
+4 (emulated) devices, gradient compression, and synchronized TGN-style
+node state. Run standalone — it forces a 4-device CPU topology.
+
+    python examples/distributed_tg.py            # (PYTHONPATH=src)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.dp_trainer import DataParallelTrainer
+from repro.optim import AdamWConfig
+
+
+def main():
+    mesh = jax.make_mesh((4,), ("data",))
+    N, D = 64, 16  # nodes, embedding dim
+
+    # Toy memory model: per-event, predict dst embedding from src memory.
+    def loss_fn(params, state, batch):
+        src, dst = batch["src"], batch["dst"]
+        h = state["memory"][src] @ params["w"]
+        target = params["emb"][dst]
+        loss = ((h - target) ** 2).mean()
+        new_mem = state["memory"].at[src].set(0.9 * state["memory"][src] + 0.1 * target)
+        touched = jnp.zeros(N, bool).at[src].set(True)
+        return loss, ({"memory": new_mem}, touched)
+
+    key = jax.random.PRNGKey(0)
+    params = {"w": jnp.eye(D), "emb": jax.random.normal(key, (N, D)) * 0.5}
+    state = {"memory": jnp.zeros((N, D))}
+
+    for scheme in ("none", "bf16", "int8_ef"):
+        tr = DataParallelTrainer(loss_fn, mesh, AdamWConfig(lr=5e-3),
+                                 compression=scheme, accum_steps=2)
+        opt, err = tr.init(params)
+        tr.build_step(stateful=True)
+        err = {} if err is None else err
+        rng = np.random.default_rng(0)
+        p, st, losses = params, state, []
+        for step in range(20):
+            batch = {
+                "src": jnp.asarray(rng.integers(0, N, (2, 32)), jnp.int32),
+                "dst": jnp.asarray(rng.integers(0, N, (2, 32)), jnp.int32),
+            }
+            p, opt, err, st, loss = tr._step(p, opt, err, st, batch)
+            losses.append(float(loss))
+        print(f"compression={scheme:8s} loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+              f"(4-way DP, grads: {scheme})")
+
+
+if __name__ == "__main__":
+    main()

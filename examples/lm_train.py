@@ -1,0 +1,20 @@
+"""Train an assigned-architecture LM on the synthetic token stream.
+
+Any of the 10 archs is selectable; ``--reduced`` uses the smoke config
+(CPU-friendly), otherwise pass ``--layers/--d-model`` overrides to build a
+~100M variant. Checkpoints + resume come from the production driver.
+
+    PYTHONPATH=src python examples/lm_train.py --arch qwen3-0.6b --reduced \
+        --steps 200 --batch-size 8 --seq-len 64
+"""
+
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    argv = ["--workload", "lm"] + sys.argv[1:]
+    if "--arch" not in argv:
+        argv += ["--arch", "qwen3-0.6b", "--reduced"]
+    raise SystemExit(train_main(argv))

@@ -1,0 +1,47 @@
+"""Serve a small model with batched requests: prefill a batch of prompts,
+then decode tokens for all requests in lockstep (static shapes).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch hymba-1.5b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.lm import model as M
+from repro.serve import generate
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="hymba-1.5b")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--new-tokens", type=int, default=16)
+    args = p.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)}
+    if cfg.family in ("audio", "vlm"):
+        batch["frontend"] = jnp.zeros(
+            (args.batch, cfg.frontend_seq, cfg.d_model), jnp.float32)
+
+    t0 = time.perf_counter()
+    out = generate(params, cfg, batch, num_tokens=args.new_tokens,
+                   temperature=0.8, kv_block=16)
+    dt = time.perf_counter() - t0
+    tput = args.batch * args.new_tokens / dt
+    print(f"{args.arch} ({cfg.name}): generated {out.shape} in {dt:.1f}s "
+          f"({tput:.1f} tok/s incl. compile)")
+    print("sample token ids:", np.asarray(out[0])[:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "ARCHS", "get_arch", "cells"]
+
+
+def __getattr__(name):  # lazy to avoid import cycles with per-arch modules
+    if name in ("ARCHS", "get_arch"):
+        from repro.configs import archs
+
+        return getattr(archs, name)
+    if name == "cells":
+        from repro.configs.cells import cells
+
+        return cells
+    raise AttributeError(name)

@@ -1,0 +1,35 @@
+"""The 40 (architecture x shape) dry-run cells and applicability rules."""
+
+from __future__ import annotations
+
+from typing import Iterator, List, Tuple
+
+from repro.configs.archs import ARCHS
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runs?, reason). long_500k needs sub-quadratic sequence mixing."""
+    if shape.name == "long_500k" and not arch.supports_long_context:
+        return False, "pure full-attention arch; 500k decode needs sub-quadratic mixing"
+    return True, ""
+
+
+def cells(include_skipped: bool = False) -> List[Tuple[ArchConfig, ShapeConfig]]:
+    out = []
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            ok, _ = shape_applicable(arch, shape)
+            if ok or include_skipped:
+                out.append((arch, shape))
+    return out
+
+
+def skipped_cells() -> List[Tuple[str, str, str]]:
+    out = []
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            ok, reason = shape_applicable(arch, shape)
+            if not ok:
+                out.append((arch.name, shape.name, reason))
+    return out

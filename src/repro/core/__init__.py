@@ -1,0 +1,62 @@
+"""TGM core: the paper's primary contribution in JAX.
+
+Unified CTDG/DTDG temporal graphs (event storage + views + granularity),
+vectorized discretization, the hook/recipe formalism, and vectorized
+temporal neighbor sampling.
+"""
+
+from repro.core.batch import Batch
+from repro.core.discretize import discretize, discretize_jax, discretize_naive
+from repro.core.events import EdgeEvent, NodeEvent
+from repro.core.granularity import EventOrderedError, TimeDelta
+from repro.core.graph import DGData, DGraph
+from repro.core.hooks import BASE_ATTRS, Hook, HookManager, LambdaHook, RecipeError, resolve_order
+from repro.core.loader import DGDataLoader
+from repro.core.negatives import NegativeEdgeSampler
+from repro.core.recipes import (
+    EVAL_KEY,
+    RECIPE_ANALYTICS_DOS,
+    RECIPE_DTDG_SNAPSHOT,
+    RECIPE_TGB_LINK,
+    RECIPE_TGB_NODE,
+    TRAIN_KEY,
+    RecipeRegistry,
+)
+from repro.core.sampler import (
+    NeighborBlock,
+    RecencySampler,
+    SequentialRecencySampler,
+    UniformSampler,
+)
+
+__all__ = [
+    "Batch",
+    "BASE_ATTRS",
+    "DGData",
+    "DGraph",
+    "DGDataLoader",
+    "EdgeEvent",
+    "EventOrderedError",
+    "Hook",
+    "HookManager",
+    "LambdaHook",
+    "NegativeEdgeSampler",
+    "NeighborBlock",
+    "NodeEvent",
+    "RecencySampler",
+    "RecipeError",
+    "RecipeRegistry",
+    "SequentialRecencySampler",
+    "TimeDelta",
+    "UniformSampler",
+    "discretize",
+    "discretize_jax",
+    "discretize_naive",
+    "resolve_order",
+    "RECIPE_TGB_LINK",
+    "RECIPE_TGB_NODE",
+    "RECIPE_DTDG_SNAPSHOT",
+    "RECIPE_ANALYTICS_DOS",
+    "TRAIN_KEY",
+    "EVAL_KEY",
+]

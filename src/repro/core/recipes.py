@@ -1,0 +1,131 @@
+"""Pre-defined hook recipes (paper §4: "we provide pre-defined recipes for
+common tasks such as TGB link prediction, helping new practitioners avoid
+common pitfalls like mismanaging state across data splits or using incorrect
+negatives").
+
+A recipe is a named factory that builds a ``HookManager`` with the right
+hooks under the right activation keys:
+
+  RECIPE_TGB_LINK      : training negatives (random) + eval one-vs-many
+                         negatives + recency neighbors (+dedup) + edge-feature
+                         lookup + pad + device transfer.
+  RECIPE_TGB_NODE      : recency neighbors + pad + device transfer (labels
+                         come from the dataset).
+  RECIPE_DTDG_SNAPSHOT : snapshot pipeline (no sampling; models consume whole
+                         snapshots) + device transfer.
+  RECIPE_ANALYTICS_DOS : density-of-states analytics (paper Fig. 3).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.core.hooks import HookManager
+from repro.core.tg_hooks import (
+    DeviceTransferHook,
+    DOSEstimateHook,
+    EdgeFeatureLookupHook,
+    NegativeEdgeHook,
+    PadBatchHook,
+    RecencyNeighborHook,
+    TGBEvalNegativesHook,
+)
+
+RECIPE_TGB_LINK = "tgb_link"
+RECIPE_TGB_NODE = "tgb_node"
+RECIPE_DTDG_SNAPSHOT = "dtdg_snapshot"
+RECIPE_ANALYTICS_DOS = "analytics_dos"
+
+TRAIN_KEY = "train"
+EVAL_KEY = "eval"
+
+
+class RecipeRegistry:
+    _builders: Dict[str, Callable[..., HookManager]] = {}
+
+    @classmethod
+    def register(cls, name: str):
+        def deco(fn):
+            cls._builders[name] = fn
+            return fn
+
+        return deco
+
+    @classmethod
+    def build(cls, name: str, **kwargs) -> HookManager:
+        if name not in cls._builders:
+            raise KeyError(f"unknown recipe {name!r}; have {sorted(cls._builders)}")
+        return cls._builders[name](**kwargs)
+
+    @classmethod
+    def available(cls):
+        return sorted(cls._builders)
+
+
+@RecipeRegistry.register(RECIPE_TGB_LINK)
+def _tgb_link(
+    num_nodes: int,
+    k: int = 20,
+    num_hops: int = 1,
+    batch_size: int = 200,
+    eval_negatives: int = 100,
+    edge_feats: Optional[np.ndarray] = None,
+    edge_feat_dim: int = 0,
+    dst_pool: Optional[np.ndarray] = None,
+    seed: int = 0,
+    device=None,
+) -> HookManager:
+    m = HookManager()
+    # Padding runs FIRST so negatives/neighbor tensors come out fixed-shape;
+    # stateful hooks exclude padded events via batch_mask.
+    m.register(PadBatchHook(batch_size))
+    m.register(
+        NegativeEdgeHook(num_nodes, num_negatives=1, seed=seed, dst_pool=dst_pool),
+        key=TRAIN_KEY,
+    )
+    m.register(
+        TGBEvalNegativesHook(num_nodes, num_negatives=eval_negatives, seed=seed,
+                             dst_pool=dst_pool),
+        key=EVAL_KEY,
+    )
+    # One shared recency sampler serves both train and eval keys (state is
+    # shared; buffer updates exclude padding and happen once per batch).
+    m.register(RecencyNeighborHook(num_nodes, k, num_hops=num_hops, dedup=True))
+    m.register(EdgeFeatureLookupHook(edge_feats, edge_feat_dim))
+    if num_hops == 2:
+        m.register(EdgeFeatureLookupHook(edge_feats, edge_feat_dim, prefix="nbr2"))
+    m.register(DeviceTransferHook(device))
+    return m
+
+
+@RecipeRegistry.register(RECIPE_TGB_NODE)
+def _tgb_node(
+    num_nodes: int,
+    k: int = 20,
+    batch_size: int = 200,
+    edge_feats: Optional[np.ndarray] = None,
+    edge_feat_dim: int = 0,
+    device=None,
+) -> HookManager:
+    m = HookManager()
+    m.register(PadBatchHook(batch_size))
+    m.register(RecencyNeighborHook(num_nodes, k, include_negatives=False, dedup=True))
+    m.register(EdgeFeatureLookupHook(edge_feats, edge_feat_dim))
+    m.register(DeviceTransferHook(device))
+    return m
+
+
+@RecipeRegistry.register(RECIPE_DTDG_SNAPSHOT)
+def _dtdg_snapshot(device=None) -> HookManager:
+    m = HookManager()
+    m.register(DeviceTransferHook(device))
+    return m
+
+
+@RecipeRegistry.register(RECIPE_ANALYTICS_DOS)
+def _analytics_dos(num_nodes: int, num_moments: int = 10, seed: int = 0) -> HookManager:
+    m = HookManager()
+    m.register(DOSEstimateHook(num_nodes, num_moments=num_moments, seed=seed))
+    return m

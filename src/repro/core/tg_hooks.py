@@ -1,0 +1,333 @@
+"""Concrete hook library (paper Table 2): neighbor sampling, negative edge
+construction, TGB-style evaluation negatives, device transfer, padding, and
+analytics (density-of-states estimation).
+
+All hooks produce fixed-shape numpy tensors (padded + masked) so the jitted
+model steps compile exactly once per shape.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.batch import Batch
+from repro.core.hooks import Hook
+from repro.core.negatives import NegativeEdgeSampler
+from repro.core.sampler import RecencySampler, UniformSampler
+
+
+class NegativeEdgeHook(Hook):
+    """Produces ``neg``: (B, num_negatives) corrupted destinations."""
+
+    def __init__(self, num_nodes: int, num_negatives: int = 1,
+                 strategy: str = "random", seed: int = 0,
+                 dst_pool: Optional[np.ndarray] = None):
+        super().__init__(requires={"src", "dst", "time"}, produces={"neg"})
+        self._sampler = NegativeEdgeSampler(
+            num_nodes, strategy=strategy, num_negatives=num_negatives,
+            seed=seed, dst_pool=dst_pool,
+        )
+
+    def reset_state(self) -> None:
+        self._sampler.reset_state()
+
+    def __call__(self, batch: Batch) -> Batch:
+        src, dst, t = batch["src"], batch["dst"], batch["time"]
+        batch["neg"] = self._sampler.sample(src, dst, t)
+        if "batch_mask" in batch:
+            m = batch["batch_mask"]
+            self._sampler.observe(src[m], dst[m])
+        else:
+            self._sampler.observe(src, dst)
+        return batch
+
+
+class TGBEvalNegativesHook(Hook):
+    """One-vs-many evaluation negatives (TGB protocol).
+
+    Deterministic per (seed, batch_counter) so every epoch ranks positives
+    against the same negative sets. Produces ``neg``: (B, num_negatives).
+    """
+
+    def __init__(self, num_nodes: int, num_negatives: int = 100, seed: int = 0,
+                 dst_pool: Optional[np.ndarray] = None):
+        super().__init__(requires={"src", "dst", "time"}, produces={"neg"})
+        self.num_negatives = num_negatives
+        self._seed = seed
+        self._counter = 0
+        self._pool = (
+            np.arange(num_nodes, dtype=np.int64) if dst_pool is None
+            else np.asarray(dst_pool, dtype=np.int64)
+        )
+
+    def reset_state(self) -> None:
+        self._counter = 0
+
+    def __call__(self, batch: Batch) -> Batch:
+        rng = np.random.default_rng((self._seed, self._counter))
+        self._counter += 1
+        B = len(batch["src"])
+        batch["neg"] = rng.choice(self._pool, size=(B, self.num_negatives)).astype(np.int64)
+        return batch
+
+
+class RecencyNeighborHook(Hook):
+    """Temporal neighbor sampling from a recency circular buffer.
+
+    Seeds are the batch's (src, dst[, neg...]) nodes at the batch query
+    times. Produces hop-1 (and optionally hop-2) neighborhoods:
+
+      seed_nodes (S,), seed_times (S,),
+      nbr_ids/nbr_times/nbr_eids/nbr_mask (S, K)
+      [hop2: nbr2_ids/... (S*K, K)]
+
+    With ``dedup=True`` (the paper's batch-level de-duplication, §5.1), the
+    unique (node) set is sampled once and results are gathered back to the
+    full seed list — the key optimization for one-vs-many eval where the same
+    src appears ``1+num_negatives`` times.
+
+    The buffer is updated with the batch's positive edges *after* sampling
+    (predict-then-reveal ordering).
+    """
+
+    def __init__(self, num_nodes: int, k: int, num_hops: int = 1,
+                 include_negatives: bool = True, dedup: bool = True,
+                 update_buffer: bool = True):
+        if num_hops not in (1, 2):
+            raise ValueError("num_hops must be 1 or 2")
+        produces = {"seed_nodes", "seed_times", "nbr_ids", "nbr_times",
+                    "nbr_eids", "nbr_mask"}
+        if num_hops == 2:
+            produces |= {"nbr2_ids", "nbr2_times", "nbr2_eids", "nbr2_mask"}
+        requires = {"src", "dst", "time"} | ({"neg"} if include_negatives else set())
+        super().__init__(requires=requires, produces=produces)
+        self.sampler = RecencySampler(num_nodes, k)
+        self.k = k
+        self.num_hops = num_hops
+        self.include_negatives = include_negatives
+        self.dedup = dedup
+        self.update_buffer = update_buffer
+
+    def reset_state(self) -> None:
+        self.sampler.reset_state()
+
+    def _seeds(self, batch: Batch):
+        src, dst, t = batch["src"], batch["dst"], batch["time"]
+        seeds = [src, dst]
+        times = [t, t]
+        if self.include_negatives and "neg" in batch:
+            neg = batch["neg"]  # (B, Nneg)
+            seeds.append(neg.reshape(-1))
+            times.append(np.repeat(t, neg.shape[1]))
+        return np.concatenate(seeds), np.concatenate(times)
+
+    def __call__(self, batch: Batch) -> Batch:
+        seed_nodes, seed_times = self._seeds(batch)
+
+        if self.dedup:
+            # Batch-level de-duplication: sample once per unique node. Within
+            # a batch all queries share the batch time frontier, so one sample
+            # per node is exact (buffer state is fixed during sampling).
+            uniq, inverse = np.unique(seed_nodes, return_inverse=True)
+            blk = self.sampler.sample(uniq)
+            sel = inverse
+            nbr_ids, nbr_times = blk.nbr_ids[sel], blk.nbr_times[sel]
+            nbr_eids, nbr_mask = blk.nbr_eids[sel], blk.mask[sel]
+        else:
+            blk = self.sampler.sample(seed_nodes)
+            nbr_ids, nbr_times = blk.nbr_ids, blk.nbr_times
+            nbr_eids, nbr_mask = blk.nbr_eids, blk.mask
+
+        batch["seed_nodes"], batch["seed_times"] = seed_nodes, seed_times
+        batch["nbr_ids"], batch["nbr_times"] = nbr_ids, nbr_times
+        batch["nbr_eids"], batch["nbr_mask"] = nbr_eids, nbr_mask
+
+        if self.num_hops == 2:
+            flat = nbr_ids.reshape(-1)
+            safe = np.where(flat >= 0, flat, 0)
+            if self.dedup:
+                uniq2, inv2 = np.unique(safe, return_inverse=True)
+                blk2 = self.sampler.sample(uniq2)
+                ids2, t2 = blk2.nbr_ids[inv2], blk2.nbr_times[inv2]
+                e2, m2 = blk2.nbr_eids[inv2], blk2.mask[inv2]
+            else:
+                blk2 = self.sampler.sample(safe)
+                ids2, t2, e2, m2 = blk2.nbr_ids, blk2.nbr_times, blk2.nbr_eids, blk2.mask
+            pad = (flat < 0)[:, None]
+            batch["nbr2_ids"] = np.where(pad, -1, ids2)
+            batch["nbr2_times"] = np.where(pad, 0, t2)
+            batch["nbr2_eids"] = np.where(pad, -1, e2)
+            batch["nbr2_mask"] = np.where(pad, False, m2)
+
+        if self.update_buffer:
+            eids = batch.meta.get("eids")
+            src, dst, t = batch["src"], batch["dst"], batch["time"]
+            if "batch_mask" in batch:  # exclude padded events from state
+                m = batch["batch_mask"]
+                src, dst, t = src[m], dst[m], t[m]
+                eids = None if eids is None else eids[m[: len(eids)]]
+            self.sampler.update(src, dst, t, eids)
+        return batch
+
+
+class UniformNeighborHook(Hook):
+    """Uniform temporal neighbor sampling (requires a pre-built adjacency)."""
+
+    def __init__(self, num_nodes: int, k: int, include_negatives: bool = False,
+                 seed: int = 0):
+        requires = {"src", "dst", "time"} | ({"neg"} if include_negatives else set())
+        super().__init__(
+            requires=requires,
+            produces={"seed_nodes", "seed_times", "nbr_ids", "nbr_times",
+                      "nbr_eids", "nbr_mask"},
+        )
+        self.sampler = UniformSampler(num_nodes, k, seed=seed)
+        self.include_negatives = include_negatives
+
+    def build(self, src, dst, t, eids=None) -> "UniformNeighborHook":
+        self.sampler.build(src, dst, t, eids)
+        return self
+
+    def reset_state(self) -> None:
+        self.sampler.reset_state()
+
+    def __call__(self, batch: Batch) -> Batch:
+        src, dst, t = batch["src"], batch["dst"], batch["time"]
+        seeds = [src, dst]
+        times = [t, t]
+        if self.include_negatives and "neg" in batch:
+            neg = batch["neg"]
+            seeds.append(neg.reshape(-1))
+            times.append(np.repeat(t, neg.shape[1]))
+        seed_nodes, seed_times = np.concatenate(seeds), np.concatenate(times)
+        blk = self.sampler.sample(seed_nodes, seed_times)
+        batch["seed_nodes"], batch["seed_times"] = seed_nodes, seed_times
+        batch["nbr_ids"], batch["nbr_times"] = blk.nbr_ids, blk.nbr_times
+        batch["nbr_eids"], batch["nbr_mask"] = blk.nbr_eids, blk.mask
+        return batch
+
+
+class EdgeFeatureLookupHook(Hook):
+    """Produces ``<prefix>_feats``: gather stored edge features for sampled
+    neighbor edge ids (zeros where padded / featureless)."""
+
+    def __init__(self, edge_feats: Optional[np.ndarray], feat_dim: int,
+                 prefix: str = "nbr"):
+        super().__init__(
+            requires={f"{prefix}_eids"}, produces={f"{prefix}_feats"}
+        )
+        self._feats = edge_feats
+        self._dim = feat_dim
+        self._prefix = prefix
+
+    def __call__(self, batch: Batch) -> Batch:
+        eids = batch[f"{self._prefix}_eids"]
+        out = np.zeros(eids.shape + (self._dim,), dtype=np.float32)
+        if self._feats is not None:
+            ok = eids >= 0
+            out[ok] = self._feats[eids[ok]]
+        batch[f"{self._prefix}_feats"] = out
+        return batch
+
+
+class PadBatchHook(Hook):
+    """Pads event tensors to a fixed batch size and emits ``batch_mask`` so
+    every training step has identical shapes (one XLA compilation)."""
+
+    PADDABLE = ("src", "dst", "time", "neg", "edge_feats", "labels")
+
+    def __init__(self, batch_size: int):
+        super().__init__(requires={"src"}, produces={"batch_mask"})
+        self.batch_size = batch_size
+
+    def __call__(self, batch: Batch) -> Batch:
+        n = len(batch["src"])
+        pad = self.batch_size - n
+        if pad < 0:
+            raise ValueError(f"batch of {n} exceeds fixed size {self.batch_size}")
+        mask = np.zeros(self.batch_size, dtype=bool)
+        mask[:n] = True
+        for key in self.PADDABLE:
+            if key in batch:
+                v = batch[key]
+                widths = [(0, pad)] + [(0, 0)] * (v.ndim - 1)
+                batch[key] = np.pad(v, widths)
+        batch["batch_mask"] = mask
+        return batch
+
+
+class DeviceTransferHook(Hook):
+    """Moves all array attributes to a JAX device (paper Table 2: R=∅, P=∅).
+
+    Register last; ordering among contract-free hooks follows registration.
+    """
+
+    def __init__(self, device=None):
+        super().__init__(requires=set(), produces=set())
+        self._device = device
+
+    def __call__(self, batch: Batch) -> Batch:
+        import jax
+        import jax.numpy as jnp
+
+        dev = self._device or jax.devices()[0]
+        for key in list(batch.keys()):
+            v = batch[key]
+            if isinstance(v, np.ndarray):
+                if v.dtype == np.int64:
+                    v = v.astype(np.int32)
+                batch[key] = jax.device_put(jnp.asarray(v), dev)
+        return batch
+
+
+class DOSEstimateHook(Hook):
+    """Analytics: spectral density-of-states estimate of the batch's
+    interaction graph via Hutchinson moment estimation (paper Fig. 3 recipe).
+
+    Produces ``dos``: (num_moments,) Chebyshev moment estimates of the
+    normalized adjacency spectrum.
+    """
+
+    def __init__(self, num_nodes: int, num_moments: int = 10, num_probes: int = 4,
+                 seed: int = 0):
+        super().__init__(requires={"src", "dst"}, produces={"dos"})
+        self.num_nodes = num_nodes
+        self.num_moments = num_moments
+        self.num_probes = num_probes
+        self._rng = np.random.default_rng(seed)
+
+    def reset_state(self) -> None:
+        pass
+
+    def __call__(self, batch: Batch) -> Batch:
+        src, dst = batch["src"], batch["dst"]
+        nodes = np.unique(np.concatenate([src, dst]))
+        n = len(nodes)
+        if n == 0:
+            batch["dos"] = np.zeros(self.num_moments, dtype=np.float32)
+            return batch
+        remap = {int(u): i for i, u in enumerate(nodes)}
+        r = np.array([remap[int(u)] for u in src])
+        c = np.array([remap[int(u)] for u in dst])
+        deg = np.bincount(np.concatenate([r, c]), minlength=n).astype(np.float64)
+        dinv = 1.0 / np.sqrt(np.maximum(deg, 1.0))
+
+        def matvec(x):
+            y = np.zeros_like(x)
+            w = dinv[r] * dinv[c]
+            np.add.at(y, r, w[:, None] * x[c])
+            np.add.at(y, c, w[:, None] * x[r])
+            return y
+
+        z = self._rng.choice([-1.0, 1.0], size=(n, self.num_probes))
+        tkm1, tk = z, matvec(z)
+        moments = [float((z * tkm1).sum() / (n * self.num_probes)),
+                   float((z * tk).sum() / (n * self.num_probes))]
+        for _ in range(self.num_moments - 2):
+            tkp1 = 2.0 * matvec(tk) - tkm1
+            moments.append(float((z * tkp1).sum() / (n * self.num_probes)))
+            tkm1, tk = tk, tkp1
+        batch["dos"] = np.asarray(moments[: self.num_moments], dtype=np.float32)
+        return batch

@@ -1,0 +1,4 @@
+from repro.data.synthetic import SyntheticSpec, generate, DATASET_SPECS
+from repro.data.tokens import synthetic_token_batches
+
+__all__ = ["SyntheticSpec", "generate", "DATASET_SPECS", "synthetic_token_batches"]

@@ -1,0 +1,28 @@
+from repro.distributed import checkpoint, compression
+from repro.distributed.dp_trainer import DataParallelTrainer
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    Rules,
+    get_mesh,
+    get_rules,
+    logical_sharding,
+    logical_spec,
+    set_sharding_context,
+    shard,
+    sharding_context,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "DataParallelTrainer",
+    "Rules",
+    "checkpoint",
+    "compression",
+    "get_mesh",
+    "get_rules",
+    "logical_sharding",
+    "logical_spec",
+    "set_sharding_context",
+    "shard",
+    "sharding_context",
+]

@@ -1,0 +1,155 @@
+"""Logical-axis sharding (MaxText-style rules).
+
+Every parameter and key activation is annotated with *logical* axis names
+("batch", "embed", "heads", ...). A rule table maps logical names to mesh
+axes; GSPMD derives the collectives. Rules differ per parallelism profile
+(pure TP, FSDP+TP, ...) and per mesh (single-pod vs multi-pod).
+
+The active (mesh, rules) pair is process-global context set by the launcher;
+model code calls ``shard(x, "batch", "seq", "embed")`` which is a no-op when
+no mesh is active (CPU tests).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, AxisVal]
+
+# Default rules: DP over (pod, data); TP over model for heads/mlp/vocab/
+# experts; FSDP (ZeRO-3) shards the embed axis of params over data.
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "embed_fsdp": "data",  # param-only embed axis for FSDP sharding
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qkv": "model",
+    "mlp": "model",
+    "moe_mlp": "model",
+    "experts": None,
+    "expert_cap": None,  # capacity axis of (E, C, d) expert batches
+    "vocab": "model",
+    "layers": None,
+    "state": None,
+    "conv": None,
+    "frames": None,
+    "patches": None,
+    "cache_seq": None,
+    "seq_shard": ("pod", "data"),  # sequence parallelism for long-context
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Rules = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+def set_sharding_context(mesh: Optional[Mesh], rules: Optional[Rules] = None) -> None:
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES if rules is None else rules)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def get_rules() -> Rules:
+    return _CTX.rules
+
+
+class sharding_context:
+    """``with sharding_context(mesh, rules): ...``"""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[Rules] = None):
+        self._new = (mesh, rules)
+        self._old: Tuple[Optional[Mesh], Rules] = (None, {})
+
+    def __enter__(self):
+        self._old = (_CTX.mesh, _CTX.rules)
+        set_sharding_context(*self._new)
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.mesh, _CTX.rules = self._old
+
+
+def _axis_size(mesh: Mesh, ax: str) -> int:
+    return mesh.shape[ax]
+
+
+def _mesh_axes_for(logical: Sequence[Optional[str]], rules: Rules, mesh: Mesh,
+                   shape: Optional[Sequence[int]] = None):
+    """Map logical axis names to mesh axes.
+
+    Rules whose mesh axis does not exist on this mesh (e.g. 'pod' on the
+    single-pod mesh) are dropped. When ``shape`` is given, mappings that do
+    not evenly divide the dimension are reduced (dropping axes from the
+    front of a tuple mapping) or dropped — JAX/GSPMD requires even tiling.
+    """
+    out = []
+    for i, name in enumerate(logical):
+        if name is None:
+            out.append(None)
+            continue
+        ax = rules.get(name)
+        if ax is None:
+            out.append(None)
+            continue
+        if isinstance(ax, str):
+            ax = (ax,)
+        live = tuple(a for a in ax if a in mesh.axis_names)
+        if shape is not None:
+            dim = shape[i]
+            # reduce the mapping until its product divides the dim
+            while live:
+                prod = int(np.prod([_axis_size(mesh, a) for a in live]))
+                if prod and dim % prod == 0:
+                    break
+                live = live[1:]
+        out.append(live if len(live) > 1 else (live[0] if live else None))
+    return out
+
+
+def logical_spec(logical: Sequence[Optional[str]],
+                 rules: Optional[Rules] = None,
+                 mesh: Optional[Mesh] = None,
+                 shape: Optional[Sequence[int]] = None) -> P:
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P()
+    return P(*_mesh_axes_for(logical, rules, mesh, shape))
+
+
+def logical_sharding(logical: Sequence[Optional[str]],
+                     rules: Optional[Rules] = None,
+                     mesh: Optional[Mesh] = None,
+                     shape: Optional[Sequence[int]] = None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_spec(logical, rules, mesh, shape))
+
+
+def shard(x, *logical: Optional[str]):
+    """Activation sharding constraint by logical axis names. No-op without
+    an active mesh; divisibility-checked against ``x.shape``."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, logical_spec(logical, shape=x.shape))
+    )

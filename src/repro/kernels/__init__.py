@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package has:
+  * ``kernel.py`` — pl.pallas_call with explicit BlockSpec VMEM tiling,
+  * ``ops.py``    — jit'd public wrapper (platform dispatch: TPU runs the
+                    kernel, CPU runs the reference),
+  * ``ref.py``    — pure-jnp oracle used for allclose validation.
+
+Kernels:
+  flash_attention    — blocked online-softmax attention (GQA, causal, SWA)
+  temporal_attention — TGAT seed->K-neighbor masked attention (the paper's
+                       top-2 hot spot, Table 11)
+  segment_reduce     — sorted-segment sum as MXU one-hot matmuls
+                       (discretization psi_r + GCN aggregation)
+  ssd_chunk          — mamba2 SSD intra-chunk + fused state recurrence
+"""

@@ -1,0 +1,20 @@
+"""Public jit'd wrapper: Pallas kernel on TPU, jnp reference elsewhere."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """q: (B, H, Sq, D); k, v: (B, Hk, Skv, D) -> (B, H, Sq, D)."""
+    if jax.default_backend() == "tpu":
+        return flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_k=block_k)
+    return flash_attention_ref(q, k, v, causal=causal, window=window)

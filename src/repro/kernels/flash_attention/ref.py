@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q: (B, H, Sq, D); k, v: (B, Hk, Skv, D). Returns (B, H, Sq, D).
+
+    GQA: H % Hk == 0 (query-head groups share a kv head).
+    """
+    B, H, Sq, D = q.shape
+    Hk, Skv = k.shape[1], k.shape[2]
+    G = H // Hk
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Hk, G, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    allow = jnp.ones((Sq, Skv), bool)
+    if causal:
+        allow &= kpos[None, :] <= qpos[:, None] + (Skv - Sq)
+    if window:
+        allow &= kpos[None, :] > qpos[:, None] + (Skv - Sq) - window
+    s = jnp.where(allow[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.segment_reduce.kernel import segment_sum_kernel
+from repro.kernels.segment_reduce.ops import segment_sum
+from repro.kernels.segment_reduce.ref import segment_sum_ref
+
+__all__ = ["segment_sum", "segment_sum_kernel", "segment_sum_ref"]

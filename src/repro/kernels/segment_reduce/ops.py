@@ -1,0 +1,34 @@
+"""Public jit'd wrapper with segment-space tiling.
+
+The kernel holds the whole (num_segments, D) tile in VMEM; larger segment
+spaces are processed in G-sized chunks (edges are pre-sorted by segment, so
+each chunk reads a contiguous edge range — ops here keeps it simple and
+passes the full edge set with out-of-range ids masked to -1).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_reduce.kernel import segment_sum_kernel
+from repro.kernels.segment_reduce.ref import segment_sum_ref
+
+_VMEM_TILE = 2048
+
+
+@partial(jax.jit, static_argnames=("num_segments", "block_e"))
+def segment_sum(data, seg_ids, num_segments: int, *, block_e: int = 256):
+    """data: (E, D); seg_ids: (E,) int32 -> (num_segments, D)."""
+    if jax.default_backend() != "tpu":
+        return segment_sum_ref(data, seg_ids, num_segments)
+    if num_segments <= _VMEM_TILE:
+        return segment_sum_kernel(data, seg_ids, num_segments, block_e=block_e)
+    parts = []
+    for lo in range(0, num_segments, _VMEM_TILE):
+        g = min(_VMEM_TILE, num_segments - lo)
+        local = jnp.where((seg_ids >= lo) & (seg_ids < lo + g), seg_ids - lo, -1)
+        parts.append(segment_sum_kernel(data, local, g, block_e=block_e))
+    return jnp.concatenate(parts, axis=0)

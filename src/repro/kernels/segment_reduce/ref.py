@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the sorted segment reduce kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(data, seg_ids, num_segments: int):
+    """data: (E, D); seg_ids: (E,) in [0, num_segments) (need not be sorted
+    for the oracle). Returns (num_segments, D)."""
+    return jax.ops.segment_sum(data, seg_ids, num_segments)

@@ -1,0 +1,5 @@
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_kernel
+from repro.kernels.ssd_chunk.ops import ssd
+from repro.kernels.ssd_chunk.ref import ssd_ref
+
+__all__ = ["ssd", "ssd_chunk_kernel", "ssd_ref"]

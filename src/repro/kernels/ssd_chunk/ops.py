@@ -1,0 +1,19 @@
+"""Public jit'd wrapper: Pallas kernel on TPU, exact recurrence elsewhere."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_kernel
+from repro.kernels.ssd_chunk.ref import ssd_ref
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt, a, B, C, *, chunk: int = 128):
+    """x: (S, H, P); dt: (S, H); a: (H,); B, C: (S, H, N) -> y (S, H, P)."""
+    if jax.default_backend() == "tpu":
+        return ssd_chunk_kernel(x, dt, a, B, C, chunk=chunk)
+    y, _ = ssd_ref(x, dt, a, B, C)
+    return y

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD chunk kernel: the naive sequential
+state-space recurrence (exact, O(S) steps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, B, C, init_state=None):
+    """x: (S, H, P); dt: (S, H); a: (H,) negative; B, C: (S, H, N).
+
+    Returns (y (S, H, P), final_state (H, P, N)).
+    """
+    S, H, P = x.shape
+    N = B.shape[-1]
+    s0 = jnp.zeros((H, P, N)) if init_state is None else init_state
+
+    def step(s, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * a)  # (H,)
+        s = s * decay[:, None, None] + jnp.einsum(
+            "h,hn,hp->hpn", dtt, Bt, xt
+        )
+        y = jnp.einsum("hpn,hn->hp", s, Ct)
+        return s, y
+
+    final, ys = jax.lax.scan(step, s0, (x, dt, B, C))
+    return ys, final

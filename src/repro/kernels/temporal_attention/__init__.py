@@ -1,0 +1,5 @@
+from repro.kernels.temporal_attention.kernel import temporal_attention_kernel
+from repro.kernels.temporal_attention.ops import temporal_attention
+from repro.kernels.temporal_attention.ref import temporal_attention_ref
+
+__all__ = ["temporal_attention", "temporal_attention_kernel", "temporal_attention_ref"]

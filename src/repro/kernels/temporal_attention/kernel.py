@@ -1,0 +1,85 @@
+"""Temporal neighbor attention Pallas TPU kernel.
+
+The paper's profiling (Table 11) puts TGAT attention + sampling at ~28% of
+epoch time. On TPU the hot loop is: for each seed node, attend its K most
+recent neighbors (K = 10..32, padded). This kernel tiles seeds into VMEM
+blocks and keeps the whole (block_s, K) score tile resident — one softmax
+pass, no HBM round-trip for the intermediate scores.
+
+Grid: (num_seed_blocks,) — embarrassingly parallel over seeds.
+Blocks (VMEM):
+  q:    (block_s, H, D)
+  k/v:  (block_s, K, H, D)   — gathered neighbor features (K padded to a
+                               lane multiple by ops.py)
+  mask: (block_s, K)
+  o:    (block_s, H, D)
+
+With block_s=128, K=32, H=2, D=64 the working set is ~4.5 MiB f32 — well
+inside the 16 MiB VMEM budget, and head_dim 64/128 keeps MXU tiles aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _temporal_attention_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *,
+                               scale: float):
+    q = q_ref[...].astype(jnp.float32) * scale  # (bs, H, D)
+    k = k_ref[...].astype(jnp.float32)  # (bs, K, H, D)
+    v = v_ref[...].astype(jnp.float32)
+    mask = mask_ref[...]  # (bs, K)
+
+    s = jnp.einsum("shd,skhd->shk", q, k)  # (bs, H, K)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    any_valid = mask.any(axis=-1)[:, None, None]
+    p = jnp.where(any_valid, p, 0.0)
+    o_ref[...] = jnp.einsum("shk,skhd->shd", p, v).astype(o_ref.dtype)
+
+
+def temporal_attention_kernel(q, k, v, mask, *, block_s: int = 128,
+                              scale: float | None = None,
+                              interpret: bool = False):
+    """q: (S, H, D); k, v: (S, K, H, D); mask: (S, K) -> (S, H, D)."""
+    S, H, D = q.shape
+    K = k.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+
+    block_s = min(block_s, S)
+    pad = (-S) % block_s
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, pad), (0, 0), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    ns = (S + pad) // block_s
+
+    out = pl.pallas_call(
+        functools.partial(_temporal_attention_kernel, scale=scale),
+        grid=(ns,),
+        in_specs=[
+            pl.BlockSpec((block_s, H, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_s, K, H, D), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((block_s, K, H, D), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((block_s, K), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, H, D), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S + pad, H, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)
+        ),
+        interpret=interpret,
+    )(q, k, v, mask)
+    return out[:S]

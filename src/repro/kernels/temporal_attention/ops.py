@@ -1,0 +1,18 @@
+"""Public jit'd wrapper: Pallas kernel on TPU, jnp reference elsewhere."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.temporal_attention.kernel import temporal_attention_kernel
+from repro.kernels.temporal_attention.ref import temporal_attention_ref
+
+
+@partial(jax.jit, static_argnames=("block_s",))
+def temporal_attention(q, k, v, mask, *, block_s: int = 128):
+    """q: (S, H, D); k, v: (S, K, H, D); mask: (S, K) -> (S, H, D)."""
+    if jax.default_backend() == "tpu":
+        return temporal_attention_kernel(q, k, v, mask, block_s=block_s)
+    return temporal_attention_ref(q, k, v, mask)

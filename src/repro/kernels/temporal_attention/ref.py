@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the temporal neighbor attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def temporal_attention_ref(q, k, v, mask, *, scale: float | None = None):
+    """Seed-to-neighborhood attention (TGAT layer core).
+
+    q: (S, H, D) seed queries; k, v: (S, K, H, D) per-seed neighbor keys /
+    values (already fused with edge features + time encoding by the caller);
+    mask: (S, K) neighbor validity. Returns (S, H, D); rows with no valid
+    neighbor are zero.
+    """
+    scale = scale if scale is not None else 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("shd,skhd->shk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    any_valid = mask.any(-1)[:, None, None]
+    p = jnp.where(any_valid, p, 0.0)
+    o = jnp.einsum("shk,skhd->shd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

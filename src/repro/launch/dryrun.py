@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+combination lowers, SPMD-partitions, and compiles.
+
+For each cell, ``jax.jit(step).lower(*abstract_args).compile()`` must
+succeed on both the single-pod (16, 16) mesh and the multi-pod (2, 16, 16)
+mesh; memory_analysis() proves per-device fit and cost_analysis() feeds the
+roofline table (single-pod).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod-only
+  PYTHONPATH=src python -m repro.launch.dryrun --out results/dryrun.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs.archs import ARCHS, get_arch
+from repro.configs.base import SHAPES
+from repro.configs.cells import cells, shape_applicable, skipped_cells
+from repro.distributed.sharding import sharding_context
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import donate_argnums, rules_for, step_and_args
+
+
+def _compile_cell(cfg, shape, mesh, rules, kv_block, *, ce_chunks=0,
+                  donate=(), accum_steps=1):
+    with sharding_context(mesh, rules):
+        step, args, _ = step_and_args(cfg, shape, mesh, rules,
+                                      kv_block=kv_block, ce_chunks=ce_chunks,
+                                      accum_steps=accum_steps)
+        with mesh:
+            lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+    return compiled
+
+
+def _depth_variant(cfg, units: int):
+    """Same config at ``units`` stacked units, unrolled (so XLA cost
+    analysis counts every layer — a lax.scan body is costed ONCE regardless
+    of trip count, which silently underreports FLOPs by ~L x)."""
+    import dataclasses as dc
+
+    kw = dict(scan_layers=False, name=f"{cfg.name}@{units}u")
+    if cfg.family == "vlm":
+        kw["num_layers"] = cfg.cross_attn_every * units
+    elif cfg.family == "audio":
+        kw["num_layers"] = units
+        kw["encoder_layers"] = units
+    else:
+        kw["num_layers"] = units
+    return dc.replace(cfg, **kw), _num_units(cfg)
+
+
+def _num_units(cfg) -> int:
+    if cfg.family == "vlm":
+        return cfg.num_layers // cfg.cross_attn_every
+    return cfg.num_layers
+
+
+def _extrapolated_roofline(cfg, shape, mesh, rules, kv_block, *,
+                           ce_chunks=0, donate=()):
+    """Exact-in-depth roofline stats: compile unrolled 1- and 2-unit
+    variants, take the per-unit delta, extrapolate to full depth."""
+    c1_cfg, n_units = _depth_variant(cfg, 1)
+    c2_cfg, _ = _depth_variant(cfg, 2)
+    kw = dict(ce_chunks=ce_chunks, donate=donate)
+    r1 = hlo_analysis.analyze(
+        _compile_cell(c1_cfg, shape, mesh, rules, kv_block, **kw), mesh.size)
+    r2 = hlo_analysis.analyze(
+        _compile_cell(c2_cfg, shape, mesh, rules, kv_block, **kw), mesh.size)
+    return hlo_analysis.extrapolate(r1, r2, n_units)
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+             kv_block: int = 1024, verbose: bool = True,
+             variant: str = "baseline") -> dict:
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name, "status": "skipped",
+                "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(shape, arch=cfg, variant=variant)
+    opt = variant == "opt"
+    ce_chunks = 8 if (opt and shape.kind == "train"
+                      and shape.seq_len % 8 == 0) else 0
+    donate = donate_argnums(shape) if opt else ()
+
+    # 1) Full-depth scanned compile: THE dry-run proof (sharding coherence,
+    #    per-device memory fit, collective schedule compiles).
+    t0 = time.perf_counter()
+    compiled = _compile_cell(cfg, shape, mesh, rules, kv_block,
+                             ce_chunks=ce_chunks, donate=donate)
+    t_compile = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+    roof_once = hlo_analysis.analyze(compiled, mesh.size)
+
+    # 2) Depth-exact roofline stats via 1-/2-unit unrolled extrapolation.
+    roof = _extrapolated_roofline(cfg, shape, mesh, rules, kv_block,
+                                  ce_chunks=ce_chunks, donate=donate)
+    if shape.kind == "train":
+        # AdamW moments are genuinely f32 on TPU as well: 2 moments x
+        # (read + write) x 4B per param, sharded across devices.
+        roof.legit_f32_bytes = 16.0 * cfg.param_count() / mesh.size
+
+    mf = hlo_analysis.model_flops(cfg, shape)
+    rec = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "variant": variant,
+        "mesh": "multi_pod" if multi_pod else "single_pod",
+        "devices": mesh.size,
+        "status": "ok",
+        "compile_s": round(t_compile, 2),
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(roof.flops_global, 1.0),
+        "mem_arg_gib": round(mem.argument_size_in_bytes / 2**30, 3),
+        "mem_temp_gib": round(mem.temp_size_in_bytes / 2**30, 3),
+        "fits_16g_hbm": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                         + mem.output_size_in_bytes) < 16 * 2**30,
+        "collective_kinds_full": roof_once.collective.op_bytes,
+        **roof.as_dict(),
+    }
+    if verbose:
+        print(
+            f"[{rec['mesh']}] {arch_name:22s} {shape_name:12s} "
+            f"compile={t_compile:6.1f}s "
+            f"mem(arg={mem.argument_size_in_bytes/2**30:6.2f}G "
+            f"tmp={mem.temp_size_in_bytes/2**30:6.2f}G)/dev "
+            f"flops/dev={roof.flops_per_device:.3e} "
+            f"coll={roof.collective.wire_bytes/2**20:8.1f}MiB "
+            f"dominant={roof.dominant} "
+            f"useful={rec['useful_flops_ratio']:.2f}",
+            flush=True,
+        )
+    return rec
+
+
+def main(argv: Optional[list] = None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None, help="single arch id (default: all)")
+    p.add_argument("--shape", default=None, help="single shape (default: all)")
+    p.add_argument("--single-pod-only", action="store_true")
+    p.add_argument("--multi-pod-only", action="store_true")
+    p.add_argument("--kv-block", type=int, default=1024)
+    p.add_argument("--variant", default="baseline", choices=["baseline", "opt"])
+    p.add_argument("--out", default="results/dryrun.json")
+    p.add_argument("--append", action="store_true",
+                   help="merge with existing results file")
+    args = p.parse_args(argv)
+
+    todo = []
+    for cfg, shape in cells():
+        if args.arch and cfg.name != args.arch:
+            continue
+        if args.shape and shape.name != args.shape:
+            continue
+        todo.append((cfg.name, shape.name))
+
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r.get("mesh")) for r in results}
+
+    failures = 0
+    for arch_name, shape_name in todo:
+        for mp in meshes:
+            key = (arch_name, shape_name, "multi_pod" if mp else "single_pod")
+            if key in done:
+                continue
+            try:
+                rec = run_cell(arch_name, shape_name, multi_pod=mp,
+                               kv_block=args.kv_block, variant=args.variant)
+            except Exception as e:  # a dry-run failure is a bug in the system
+                traceback.print_exc()
+                rec = {"arch": arch_name, "shape": shape_name,
+                       "mesh": "multi_pod" if mp else "single_pod",
+                       "status": "failed", "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            results.append(rec)
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    for arch, shape, reason in skipped_cells():
+        if args.arch and arch != args.arch:
+            continue
+        print(f"[skip] {arch:22s} {shape:12s} {reason}")
+
+    print(f"\n{len(results)} cells recorded, {failures} failures -> {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,50 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimbing driver: re-run a dry-run cell under a named
+optimization configuration and append (hypothesis, before, after) records
+to results/perf_iters.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell yi-9b:decode_32k \
+      --label donate+bf16attn --variant opt
+"""
+
+import argparse
+import json
+from typing import Optional
+
+from repro.launch.dryrun import run_cell
+
+
+def main(argv: Optional[list] = None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--cell", required=True, help="arch:shape")
+    p.add_argument("--label", required=True)
+    p.add_argument("--variant", default="opt")
+    p.add_argument("--kv-block", type=int, default=1024)
+    p.add_argument("--out", default="results/perf_iters.json")
+    args = p.parse_args(argv)
+
+    arch, shape = args.cell.split(":")
+    rec = run_cell(arch, shape, multi_pod=False, kv_block=args.kv_block,
+                   variant=args.variant)
+    rec["label"] = args.label
+
+    history = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            history = json.load(f)
+    history.append(rec)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(history, f, indent=1)
+    print(json.dumps({k: rec[k] for k in
+                      ("arch", "shape", "label", "compute_s", "memory_s",
+                       "collective_s", "dominant", "useful_flops_ratio",
+                       "mem_temp_gib")}, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

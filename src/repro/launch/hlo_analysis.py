@@ -1,0 +1,262 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+``cost_analysis()`` on an SPMD-partitioned module reports *per-device*
+FLOPs/bytes (verified empirically: a (M,K)x(K,N) matmul sharded data=2
+reports 2*(M/2)*K*N). Collective traffic is not in cost_analysis, so we
+parse the optimized HLO: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op's operand bytes (per-device shapes),
+plus a wire-byte estimate using standard ring-algorithm factors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+import numpy as np
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"%([\w.\-]+)\s*=\s*(\([^)]*\)|[^\s]+)\s")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota form: [num_groups,group_size]<=...
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op_bytes: Dict[str, int]  # per collective kind: sum of result bytes
+    operand_bytes: int  # per-device operand bytes, summed over ops
+    wire_bytes: int  # ring-algorithm wire-byte estimate per device
+    count: int
+    wire_bytes_raw: int = 0  # before the CPU f32-normalization correction
+
+    @property
+    def total_result_bytes(self) -> int:
+        return sum(self.op_bytes.values())
+
+
+def parse_collectives(hlo_text: str, bf16_model: bool = True) -> CollectiveStats:
+    """Sum collective traffic from the partitioned HLO.
+
+    CPU-backend caveat: XLA:CPU float-normalization promotes bf16 dots (and
+    the collectives fed by them) to f32, doubling measured bytes relative to
+    the TPU program. With ``bf16_model=True`` (params + activations are
+    bf16; only scalar/moment reductions are truly f32) f32 collective bytes
+    are halved to recover the TPU-dtype traffic. Raw bytes are kept too.
+    """
+    op_bytes: Dict[str, int] = {}
+    operand_total = 0
+    wire_total = 0.0
+    wire_raw = 0.0
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        _, result_type, kind = m.groups()
+        rb = _shape_bytes(result_type)
+        if rb == 0:
+            continue
+        n = max(_group_size(line), 1)
+        count += 1
+        # dtype correction: f32 tensors above scalar size are normalization
+        # artifacts of a bf16 model (TPU would run them in bf16).
+        corr = 1.0
+        if bf16_model and re.search(r"\bf32\[\d", result_type) and rb > 4096:
+            corr = 0.5
+        op_bytes[kind] = op_bytes.get(kind, 0) + int(rb * corr)
+        if kind == "all-gather":
+            operand = rb // n
+            wire = rb * (n - 1) / n
+        elif kind == "all-reduce":
+            operand = rb
+            wire = 2 * rb * (n - 1) / n
+        elif kind == "reduce-scatter":
+            operand = rb * n
+            wire = rb * (n - 1)
+        elif kind == "all-to-all":
+            operand = rb
+            wire = rb * (n - 1) / n
+        else:  # collective-permute
+            operand = rb
+            wire = rb
+        operand_total += int(operand * corr)
+        wire_total += wire * corr
+        wire_raw += wire
+    return CollectiveStats(op_bytes, operand_total, int(wire_total), count,
+                           int(wire_raw))
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective: CollectiveStats
+    num_devices: int
+    # memory_analysis
+    arg_bytes: int = 0
+    temp_bytes: int = 0
+    out_bytes: int = 0
+    # bytes that are genuinely f32 on TPU too (e.g. optimizer moments);
+    # everything else bf16 -> CPU float-normalization doubled it.
+    legit_f32_bytes: float = 0.0
+
+    @property
+    def flops_global(self) -> float:
+        return self.flops_per_device * self.num_devices
+
+    @property
+    def compute_s(self) -> float:
+        # == flops_global / (chips * peak)
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def bytes_corrected(self) -> float:
+        """TPU-dtype HBM traffic estimate: measured CPU bytes halve for the
+        bf16 share; genuinely-f32 traffic (moments) is added back at full."""
+        return self.bytes_per_device / 2.0 + self.legit_f32_bytes / 2.0
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_corrected / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective.wire_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline lower bound on step time (max of the three terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "flops_global": self.flops_global,
+            "bytes_per_device": self.bytes_per_device,
+            "bytes_per_device_corrected": self.bytes_corrected,
+            "collective_operand_bytes": self.collective.operand_bytes,
+            "collective_wire_bytes": self.collective.wire_bytes,
+            "collective_wire_bytes_raw": self.collective.wire_bytes_raw,
+            "collective_count": self.collective.count,
+            "collective_by_kind": self.collective.op_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "arg_bytes_per_device": self.arg_bytes,
+            "temp_bytes_per_device": self.temp_bytes,
+            "out_bytes_per_device": self.out_bytes,
+        }
+
+
+def extrapolate(r1: "Roofline", r2: "Roofline", n_units: int) -> "Roofline":
+    """Depth-exact stats from unrolled 1-unit and 2-unit compiles:
+    total = cost(1) + (n_units - 1) * (cost(2) - cost(1)).
+
+    The delta isolates one stacked unit; cost(1) carries the fixed parts
+    (embedding, head, loss/optimizer or cache plumbing)."""
+
+    def ext(a, b):
+        return a + (n_units - 1) * max(b - a, 0.0)
+
+    coll_kinds = {}
+    for k in set(r1.collective.op_bytes) | set(r2.collective.op_bytes):
+        a = r1.collective.op_bytes.get(k, 0)
+        b = r2.collective.op_bytes.get(k, 0)
+        coll_kinds[k] = int(ext(a, b))
+    coll = CollectiveStats(
+        coll_kinds,
+        int(ext(r1.collective.operand_bytes, r2.collective.operand_bytes)),
+        int(ext(r1.collective.wire_bytes, r2.collective.wire_bytes)),
+        int(ext(r1.collective.count, r2.collective.count)),
+        int(ext(r1.collective.wire_bytes_raw, r2.collective.wire_bytes_raw)),
+    )
+    out = Roofline(
+        ext(r1.flops_per_device, r2.flops_per_device),
+        ext(r1.bytes_per_device, r2.bytes_per_device),
+        coll,
+        r1.num_devices,
+        legit_f32_bytes=max(r1.legit_f32_bytes, r2.legit_f32_bytes),
+    )
+    out.arg_bytes = int(ext(r1.arg_bytes, r2.arg_bytes))
+    out.temp_bytes = max(r1.temp_bytes, r2.temp_bytes)
+    out.out_bytes = int(ext(r1.out_bytes, r2.out_bytes))
+    return out
+
+
+def analyze(compiled, num_devices: int, legit_f32_bytes: float = 0.0) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = parse_collectives(compiled.as_text())
+    r = Roofline(flops, byts, coll, num_devices, legit_f32_bytes=legit_f32_bytes)
+    try:
+        mem = compiled.memory_analysis()
+        r.arg_bytes = int(mem.argument_size_in_bytes)
+        r.temp_bytes = int(mem.temp_size_in_bytes)
+        r.out_bytes = int(mem.output_size_in_bytes)
+    except Exception:
+        pass
+    return r
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D for training (fwd+bwd), 2*N*D for inference,
+    using active params for MoE."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,137 @@
+"""Input ShapeDtypeStructs for every (arch x shape) dry-run cell.
+
+Everything is a ShapeDtypeStruct with a NamedSharding — weak-type correct,
+shardable, and never allocated. ``step_and_args`` returns the jittable step
+function plus its abstract arguments for a cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding import DEFAULT_RULES, Rules, logical_sharding
+from repro.models.lm import model as M
+from repro.optim import AdamWConfig
+from repro.train.lm_train import abstract_opt_state, make_train_step
+
+
+def rules_for(shape: ShapeConfig, base: Optional[Rules] = None,
+              arch: Optional[ArchConfig] = None,
+              variant: str = "baseline") -> Rules:
+    """Per-shape sharding rules.
+
+    decode shapes shard the KV-cache sequence axis over 'model' (kv heads
+    are often not divisible by 16) and keep batch on (pod, data); for
+    long_500k (batch=1) the batch rule is dropped automatically by the
+    divisibility check and state lives on heads/model.
+
+    ``variant="opt"`` applies the hillclimbed rules (EXPERIMENTS.md §Perf):
+    MoE experts go expert-parallel on the 'model' axis (each device owns
+    E/16 experts; activations move via all-to-all instead of every expert
+    weight being gathered + activation all-reduced).
+    """
+    rules = dict(base or DEFAULT_RULES)
+    if shape.kind == "decode":
+        rules["cache_seq"] = "model"
+        rules["kv_heads"] = None
+    if (variant == "opt" and arch is not None and arch.family == "moe"
+            and shape.kind != "decode"):
+        # Expert parallelism: each model-shard owns E/16 experts; the
+        # capacity axis shards over (pod, data) so expert matmuls are not
+        # replicated across data shards (§Perf dbrx iteration 3).
+        # Decode keeps the baseline (f-sharded) expert layout: with one
+        # token per step, per-layer EP weight gathers would dominate —
+        # weights must stay resident (§Perf cross-cell check).
+        rules["experts"] = "model"
+        rules["moe_mlp"] = None
+        rules["expert_cap"] = ("pod", "data")
+    return rules
+
+
+def _sds(shape, dtype, axes, mesh, rules):
+    sh = logical_sharding(axes, rules=rules, mesh=mesh, shape=shape)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh=None,
+                rules: Optional[Rules] = None) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    rules = rules or rules_for(shape)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = _sds((B, S), jnp.int32, ("batch", "seq"), mesh, rules)
+        specs["labels"] = _sds((B, S), jnp.int32, ("batch", "seq"), mesh, rules)
+    elif shape.kind == "prefill":
+        specs["tokens"] = _sds((B, S), jnp.int32, ("batch", "seq"), mesh, rules)
+    if shape.kind in ("train", "prefill") and cfg.family in ("audio", "vlm"):
+        F = cfg.frontend_seq
+        specs["frontend"] = _sds((B, F, cfg.d_model), cdt,
+                                 ("batch", "frames", None), mesh, rules)
+    return specs
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh=None,
+                rules: Optional[Rules] = None) -> Tuple[Any, ...]:
+    """Full abstract argument tuple for the cell's step function."""
+    rules = rules or rules_for(shape)
+    params = M.abstract_params(cfg, mesh, rules)
+    if shape.kind == "train":
+        opt = abstract_opt_state(cfg, mesh, rules)
+        return (params, opt, batch_specs(cfg, shape, mesh, rules))
+    if shape.kind == "prefill":
+        return (params, batch_specs(cfg, shape, mesh, rules))
+    # decode: params, cache at fill level seq_len, one new token per
+    # sequence. Cache length rounds up to a 512 multiple so the cache_seq
+    # axis stays shardable (S+1 = 32769 is coprime with the mesh and would
+    # silently drop the sharding rule -> 16x cache blow-up; §Perf iter 1).
+    B, S = shape.global_batch, shape.seq_len
+    cache = M.abstract_cache(cfg, B, _round_up(S + 1, 512), mesh, rules)
+    tokens = _sds((B,), jnp.int32, ("batch",), mesh, rules)
+    return (params, cache, tokens)
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def step_fn(cfg: ArchConfig, shape: ShapeConfig,
+            kv_block: int = 1024, ce_chunks: int = 0,
+            accum_steps: int = 1) -> Callable:
+    if shape.kind == "train":
+        return make_train_step(cfg, AdamWConfig(lr=3e-4), kv_block=kv_block,
+                               ce_chunks=ce_chunks, accum_steps=accum_steps)
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return M.prefill(params, cfg, batch,
+                             max_len=_round_up(shape.seq_len + 1, 512),
+                             kv_block=kv_block)
+        return prefill_step
+
+    def serve_step(params, cache, tokens):
+        return M.decode_step(params, cfg, cache, tokens)
+
+    return serve_step
+
+
+def step_and_args(cfg: ArchConfig, shape: ShapeConfig, mesh=None,
+                  rules: Optional[Rules] = None, kv_block: int = 1024,
+                  ce_chunks: int = 0, accum_steps: int = 1):
+    rules = rules or rules_for(shape, arch=cfg)
+    return (step_fn(cfg, shape, kv_block, ce_chunks, accum_steps),
+            input_specs(cfg, shape, mesh, rules), rules)
+
+
+def donate_argnums(shape: ShapeConfig):
+    """Buffer donation per step kind: train donates (params, opt_state);
+    decode donates the cache (in-place dynamic-update-slice instead of a
+    full cache copy per step). Prefill donates nothing (prompt reused)."""
+    if shape.kind == "train":
+        return (0, 1)
+    if shape.kind == "decode":
+        return (1,)
+    return ()

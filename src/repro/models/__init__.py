@@ -1,0 +1,3 @@
+from repro.models import tg
+
+__all__ = ["tg"]

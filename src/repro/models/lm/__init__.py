@@ -1,0 +1,3 @@
+from repro.models.lm import layers, model, params
+
+__all__ = ["layers", "model", "params"]

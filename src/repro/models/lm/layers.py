@@ -1,0 +1,731 @@
+"""LM building blocks: GQA attention (flash-style blocked softmax, sliding
+window, KV cache), SwiGLU/GELU MLPs, top-k MoE with sort-based capacity
+dispatch, and the Mamba2 SSD mixer — all pure JAX with logical sharding
+annotations, targeting TPU via GSPMD.
+
+Everything is written against the ``Spec`` param system (see params.py);
+each block has ``<block>_specs(cfg)`` + ``<block>(params, cfg, ...)``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models.lm.params import Spec
+
+NEG_INF = -2.0e38
+
+
+def cdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def cast_tree(params, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), params)
+
+
+# ======================================================================
+# Norms
+# ======================================================================
+def rms_norm_spec(dim: int) -> Spec:
+    return Spec((dim,), (None,), init="ones")
+
+
+def rms_norm(scale, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm_specs(dim: int):
+    return {"scale": Spec((dim,), (None,), "ones"),
+            "bias": Spec((dim,), (None,), "zeros")}
+
+
+def layer_norm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def norm_specs(cfg: ArchConfig, dim: Optional[int] = None):
+    """Family-appropriate norm: LayerNorm for whisper, RMSNorm otherwise."""
+    d = dim or cfg.d_model
+    if cfg.family == "audio":
+        return layer_norm_specs(d)
+    return rms_norm_spec(d)
+
+
+def norm(cfg: ArchConfig, p, x):
+    if cfg.family == "audio":
+        return layer_norm(p, x)
+    return rms_norm(p, x, cfg.norm_eps)
+
+
+# ======================================================================
+# RoPE
+# ======================================================================
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D) with D even; positions: scalar, (S,) or (B, S)."""
+    B, S, H, D = x.shape
+    half = D // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    pos = jnp.atleast_1d(jnp.asarray(positions, jnp.float32))
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    ang = pos[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+# ======================================================================
+# Flash-style blocked attention (pure JAX; Pallas kernel is the TPU path)
+# ======================================================================
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset=0, kv_len: Optional[jnp.ndarray] = None,
+                    kv_block: int = 1024):
+    """Online-softmax attention, O(S * kv_block) memory.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, Hk, D) with H % Hk == 0.
+    ``window`` > 0 enables sliding-window masking (kvpos > qpos - window).
+    ``q_offset`` is the absolute position of q[0] (decode/prefill chunks).
+    ``kv_len`` optionally masks positions >= kv_len (cache fill level).
+    Returns (B, Sq, H, D).
+    """
+    B, Sq, H, D = q.shape
+    Skv, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    scale = 1.0 / np.sqrt(D)
+
+    pad = (-Skv) % kv_block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = (Skv + pad) // kv_block
+
+    qg = q.reshape(B, Sq, Hk, G, D).astype(jnp.float32) * scale
+    kb = k.reshape(B, nb, kv_block, Hk, D)
+    vb = v.reshape(B, nb, kv_block, Hk, D)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kj, vj, j = blk
+        s = jnp.einsum("bqhgd,bthd->bqhgt", qg, kj.astype(jnp.float32))
+        kvpos = j * kv_block + jnp.arange(kv_block)
+        allow = jnp.ones((Sq, kv_block), bool)
+        if causal:
+            allow &= kvpos[None, :] <= qpos[:, None]
+        if window:
+            allow &= kvpos[None, :] > qpos[:, None] - window
+        allow &= kvpos[None, :] < (Skv if kv_len is None else kv_len)
+        s = jnp.where(allow[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgt,bthd->bqhgd", p, vj.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hk, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hk, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hk, G, D), jnp.float32)
+    # Checkpoint the kv-block body: without it, scan's backward stacks the
+    # per-block softmax residuals across blocks — i.e. the full (Sq, Skv)
+    # attention matrix in f32 (see EXPERIMENTS.md, hymba iteration 2). With
+    # it, backward recomputes each block's scores from (q, k): the
+    # flash-attention-backward recompute pattern.
+    body = jax.checkpoint(body, prevent_cse=False)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nb)),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def swa_flash_attention(q, k, v, *, window: int, kv_block: int = 1024):
+    """Sliding-window attention with block skipping.
+
+    For q block i (size = kv_block), only kv positions in
+    [(i*B - window), (i+1)*B) can be visible, i.e. at most 2 kv blocks when
+    window <= kv_block. We scan q blocks and dynamic-slice exactly that kv
+    span — attention work drops from O(Sq * Skv) to O(Sq * (B + window))
+    (§Perf hymba iteration 3).
+    """
+    B, Sq, H, D = q.shape
+    Skv, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    scale = 1.0 / np.sqrt(D)
+    assert window <= kv_block and Sq == Skv
+
+    pad = (-Sq) % kv_block
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = Sq + pad
+    nq = Sp // kv_block
+    qb = q.reshape(B, nq, kv_block, H, D)
+
+    span = 2 * kv_block  # kv slice covering the window + the diagonal block
+
+    def body(_, inp):
+        qi, i = inp  # (B, kvb, H, D), scalar block index
+        start = jnp.maximum(i * kv_block - kv_block, 0)
+        kj = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        qg = qi.reshape(B, kv_block, Hk, G, D).astype(jnp.float32) * scale
+        s = jnp.einsum("bqhgd,bthd->bqhgt", qg, kj.astype(jnp.float32))
+        qpos = i * kv_block + jnp.arange(kv_block)
+        kvpos = start + jnp.arange(span)
+        allow = (kvpos[None, :] <= qpos[:, None]) \
+            & (kvpos[None, :] > qpos[:, None] - window) \
+            & (kvpos[None, :] < Skv)
+        s = jnp.where(allow[None, :, None, None, :], s, NEG_INF)
+        m = s.max(-1, keepdims=True)
+        p = jnp.exp(s - m)
+        o = jnp.einsum("bqhgt,bthd->bqhgd", p, vj.astype(jnp.float32))
+        o = o / jnp.maximum(p.sum(-1)[..., None], 1e-30)
+        return None, o.reshape(B, kv_block, H, D).astype(q.dtype)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    _, out = jax.lax.scan(body, None, (qb.swapaxes(0, 1), jnp.arange(nq)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sp, H, D)
+    return out[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     fast: bool = True):
+    """Single-position attention over a cache. q: (B, 1, H, D);
+    k/v_cache: (B, Smax, Hk, D); cache_len: scalar current length.
+
+    ``fast=True`` keeps the cache in its storage dtype and accumulates the
+    dots in f32 (``preferred_element_type``) instead of materializing f32
+    copies of the whole cache — decode is HBM-bound, and the f32 converts
+    are 3x the useful traffic (see EXPERIMENTS.md §Perf).
+    """
+    B, _, H, D = q.shape
+    Smax, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hk
+    scale = 1.0 / np.sqrt(D)
+    pos = jnp.arange(Smax)
+    allow = pos < cache_len
+    if window:
+        allow &= pos > cache_len - 1 - window
+    if fast:
+        qg = (q.reshape(B, Hk, G, D) * jnp.asarray(scale, q.dtype))
+        s = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache,
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(allow[None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgt,bthd->bhgd", p.astype(v_cache.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(B, 1, H, D).astype(q.dtype)
+    qg = q.reshape(B, Hk, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache.astype(jnp.float32))
+    s = jnp.where(allow[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ======================================================================
+# Attention block (self-attention w/ optional cache; cross-attention)
+# ======================================================================
+def attention_specs(cfg: ArchConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    H, Hk, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s = {
+        "wq": Spec((d, H, Dh), ("embed_fsdp", "heads", "head_dim"), "fan_in"),
+        "wk": Spec((d, Hk, Dh), ("embed_fsdp", "kv_heads", "head_dim"), "fan_in"),
+        "wv": Spec((d, Hk, Dh), ("embed_fsdp", "kv_heads", "head_dim"), "fan_in"),
+        "wo": Spec((H, Dh, d), ("heads", "head_dim", "embed_fsdp"), "fan_in"),
+    }
+    if cfg.attn_bias:
+        s["bq"] = Spec((H, Dh), ("heads", "head_dim"), "zeros")
+        s["bk"] = Spec((Hk, Dh), ("kv_heads", "head_dim"), "zeros")
+        s["bv"] = Spec((Hk, Dh), ("kv_heads", "head_dim"), "zeros")
+        s["bo"] = Spec((d,), (None,), "zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = Spec((Dh,), (None,), "ones")
+        s["k_norm"] = Spec((Dh,), (None,), "ones")
+    return s
+
+
+def _qkv(p, cfg: ArchConfig, x, positions, rope: bool):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def self_attention(p, cfg: ArchConfig, x, positions, *, causal=True,
+                   rope=True, window=0, kv_block=1024):
+    """Full-sequence self-attention (train / prefill). Returns (out, (k, v))."""
+    q, k, v = _qkv(p, cfg, x, positions, rope)
+    if (causal and window and window <= kv_block
+            and q.shape[1] == k.shape[1] and q.shape[1] > 2 * kv_block):
+        o = swa_flash_attention(q, k, v, window=window, kv_block=kv_block)
+    else:
+        o = flash_attention(q, k, v, causal=causal, window=window,
+                            kv_block=kv_block)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    if cfg.attn_bias:
+        out = out + p["bo"].astype(x.dtype)
+    return shard(out, "batch", "seq", None), (k, v)
+
+
+def cached_self_attention(p, cfg: ArchConfig, x, cache, *, window=0):
+    """Single-token decode. x: (B, 1, d); cache: {k, v, idx}."""
+    idx = cache["idx"]
+    q, k_new, v_new = _qkv(p, cfg, x, idx, rope=True)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), idx, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), idx, axis=1)
+    o = decode_attention(q, k_cache, v_cache, idx + 1, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    if cfg.attn_bias:
+        out = out + p["bo"].astype(x.dtype)
+    new_cache = {"k": k_cache, "v": v_cache, "idx": idx + 1}
+    return out, new_cache
+
+
+def cached_swa_attention(p, cfg: ArchConfig, x, cache, window: int):
+    """Single-token decode with a ring-buffer sliding-window cache of size W.
+
+    cache: {"k","v": (B, W, Hk, D), "slot_pos": (W,), "idx": scalar}. Keys
+    are stored post-RoPE at absolute positions, so ring overwrites are safe.
+    This is what makes hymba's long_500k decode O(W) instead of O(S).
+    """
+    idx = cache["idx"]
+    W = cache["k"].shape[1]
+    q, k_new, v_new = _qkv(p, cfg, x, idx, rope=True)
+    slot = idx % W
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    slot_pos = cache["slot_pos"].at[slot].set(idx)
+
+    B, _, H, D = q.shape
+    Hk = k_cache.shape[2]
+    G = H // Hk
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Hk, G, D) * jnp.asarray(scale, q.dtype)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    allow = (slot_pos >= 0) & (slot_pos <= idx) & (slot_pos > idx - window)
+    s = jnp.where(allow[None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", pr.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, H, D).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    if cfg.attn_bias:
+        out = out + p["bo"].astype(x.dtype)
+    new_cache = {"k": k_cache, "v": v_cache, "slot_pos": slot_pos, "idx": idx + 1}
+    return out, new_cache
+
+
+def cross_attention(p, cfg: ArchConfig, x, enc_k, enc_v):
+    """Cross-attention over precomputed encoder K/V (no rope, no mask)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(dt)
+    o = flash_attention(q, enc_k.astype(dt), enc_v.astype(dt), causal=False,
+                        kv_block=min(1024, enc_k.shape[1]))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+    if cfg.attn_bias:
+        out = out + p["bo"].astype(dt)
+    return out
+
+
+def encode_kv(p, cfg: ArchConfig, enc_out):
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    if cfg.attn_bias:
+        k, v = k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    return k, v
+
+
+# ======================================================================
+# MLP (SwiGLU / GELU)
+# ======================================================================
+def mlp_specs(cfg: ArchConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "silu":
+        return {
+            "wi": Spec((d, f), ("embed_fsdp", "mlp"), "fan_in"),
+            "wg": Spec((d, f), ("embed_fsdp", "mlp"), "fan_in"),
+            "wo": Spec((f, d), ("mlp", "embed_fsdp"), "fan_in"),
+        }
+    return {
+        "wi": Spec((d, f), ("embed_fsdp", "mlp"), "fan_in"),
+        "bi": Spec((f,), ("mlp",), "zeros"),
+        "wo": Spec((f, d), ("mlp", "embed_fsdp"), "fan_in"),
+        "bo": Spec((d,), (None,), "zeros"),
+    }
+
+
+def mlp_block(p, cfg: ArchConfig, x):
+    dt = x.dtype
+    if cfg.act == "silu":
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wi"].astype(dt))
+        h = shard(h, "batch", "seq", "mlp")
+        return shard(h @ p["wo"].astype(dt), "batch", "seq", None)
+    h = jax.nn.gelu(x @ p["wi"].astype(dt) + p["bi"].astype(dt))
+    h = shard(h, "batch", "seq", "mlp")
+    return shard(h @ p["wo"].astype(dt) + p["bo"].astype(dt), "batch", "seq", None)
+
+
+# ======================================================================
+# MoE: top-k routing with sort-based capacity dispatch (dropless-ish)
+# ======================================================================
+def moe_specs(cfg: ArchConfig):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    s = {
+        "router": Spec((d, E), ("embed_fsdp", None), "fan_in"),
+        "wi": Spec((E, d, f), ("experts", "embed_fsdp", "moe_mlp"), "fan_in"),
+        "wg": Spec((E, d, f), ("experts", "embed_fsdp", "moe_mlp"), "fan_in"),
+        "wo": Spec((E, f, d), ("experts", "moe_mlp", "embed_fsdp"), "fan_in"),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        s["shared"] = {
+            "wi": Spec((d, fs), ("embed_fsdp", "mlp"), "fan_in"),
+            "wg": Spec((d, fs), ("embed_fsdp", "mlp"), "fan_in"),
+            "wo": Spec((fs, d), ("mlp", "embed_fsdp"), "fan_in"),
+        }
+    return s
+
+
+def _moe_groups() -> int:
+    """Number of token groups = data-parallel shard count of the active
+    mesh (GShard-style per-group routing)."""
+    from repro.distributed.sharding import get_mesh
+
+    mesh = get_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            g *= mesh.shape[ax]
+    return g
+
+
+def _route_group(xt, router, E: int, K: int, C: int, dt):
+    """Group-local routing: sort assignments, gather expert batches.
+
+    xt: (Tg, d). Returns (buf (E, C, d), combine metadata, aux). Pure
+    gathers — all index ops stay inside the group/shard.
+    """
+    Tg, d = xt.shape
+    A = Tg * K
+    logits = (xt @ router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate, ids = jax.lax.top_k(probs, K)  # (Tg, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = ids.reshape(-1).astype(jnp.int32)
+    sorted_e, order = jax.lax.sort_key_val(flat_e, jnp.arange(A, dtype=jnp.int32))
+    _, inv = jax.lax.sort_key_val(order, jnp.arange(A, dtype=jnp.int32))
+    start = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=jnp.int32))
+    end = jnp.concatenate([start[1:], jnp.array([A], jnp.int32)])
+
+    slot_src = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (E, C)
+    valid = slot_src < end[:, None]
+    slot_src = jnp.clip(slot_src, 0, A - 1)
+    buf_tok = (order // K)[slot_src]  # (E, C)
+    buf = xt[buf_tok] * valid[..., None].astype(dt)
+
+    me = probs.mean(0)
+    counts = (end - start).astype(jnp.float32)
+    aux = E * jnp.sum(me * counts / A)
+    meta = (sorted_e, start, inv, gate)
+    return buf, meta, aux
+
+
+def _combine_group(out_e, meta, K: int, C: int, dt):
+    """out_e: (E, C, d) -> (Tg, d), undoing the group-local sort."""
+    sorted_e, start, inv, gate = meta
+    A = inv.shape[0]
+    pos = jnp.arange(A, dtype=jnp.int32)
+    rank_sorted = pos - start[sorted_e]
+    keep = (rank_sorted < C)[:, None].astype(dt)
+    out_sorted = out_e[sorted_e, jnp.clip(rank_sorted, 0, C - 1)] * keep
+    out_flat = out_sorted[inv]  # (A, d) in (token, k) row-major order
+    Tg = A // K
+    return (out_flat.reshape(Tg, K, -1) * gate[..., None].astype(dt)).sum(1)
+
+
+def moe_block(p, cfg: ArchConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out, aux_loss). x: (B, S, d).
+
+    Group-local scatter-free MoE (EXPERIMENTS.md §Perf, dbrx iterations
+    2-4): tokens are split into G groups matching the data-parallel shards;
+    ALL routing index ops (sort, searchsorted, gathers) are vmapped inside
+    a group, so they never cross shards. Because TP replicates activations
+    across the model axis anyway, placing experts on the model axis means
+    every (group, expert) pair is computed exactly where both already live:
+    no token all-to-all, no scatter (the scatter formulation made GSPMD
+    replicate full (T*K, d)-shaped u32 index tensors — hundreds of GiB of
+    wire per step). Capacity is per (group, expert), the GShard convention.
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    dt = x.dtype
+    G = _moe_groups()
+    while T % G:
+        G //= 2
+    Tg = T // G
+
+    C = int(np.ceil(Tg * K / E * cfg.capacity_factor))
+    C = max(8, min(C, Tg))
+
+    xg = shard(x.reshape(G, Tg, d), "expert_cap", None, None)
+    router = p["router"].astype(dt)
+
+    buf, meta, aux = jax.vmap(
+        lambda xt: _route_group(xt, router, E, K, C, dt))(xg)
+    buf = shard(buf, "expert_cap", "experts", None, None)  # (G, E, C, d)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["wg"].astype(dt)))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, p["wi"].astype(dt))
+    h = shard(h, "expert_cap", "experts", None, "moe_mlp")
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))
+    out_e = shard(out_e, "expert_cap", "experts", None, None)
+
+    y = jax.vmap(lambda oe, m: _combine_group(oe, m, K, C, dt))(out_e, meta)
+    y = y.reshape(T, d)
+
+    if cfg.num_shared_experts:
+        xt = x.reshape(T, d)
+        sp = p["shared"]
+        hs = jax.nn.silu(xt @ sp["wg"].astype(dt)) * (xt @ sp["wi"].astype(dt))
+        y = y + hs @ sp["wo"].astype(dt)
+
+    return shard(y.reshape(B, S, d), "batch", "seq", None), aux.mean()
+
+
+# ======================================================================
+# Mamba2 SSD mixer (chunked state-space duality; Dao & Gu 2024)
+# ======================================================================
+def ssd_specs(cfg: ArchConfig):
+    d = cfg.d_model
+    di = cfg.d_inner_ssm
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    conv_ch = di + 2 * G * N
+    d_in_proj = 2 * di + 2 * G * N + H
+    return {
+        "in_proj": Spec((d, d_in_proj), ("embed_fsdp", "heads"), "fan_in"),
+        "conv_w": Spec((cfg.conv_kernel, conv_ch), ("conv", "heads"), "fan_in"),
+        "conv_b": Spec((conv_ch,), ("heads",), "zeros"),
+        "a_log": Spec((H,), ("heads",), "ones"),
+        "D": Spec((H,), ("heads",), "ones"),
+        "dt_bias": Spec((H,), ("heads",), "zeros"),
+        "norm": Spec((di,), (None,), "ones"),
+        "out_proj": Spec((di, d), ("heads", "embed_fsdp"), "fan_in"),
+    }
+
+
+def _causal_conv(w, b, x):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _segsum(a):
+    """Log-decay matrix: L[..., i, j] = sum a[j+1..i] for i >= j else -inf.
+
+    a: (..., Q). Returns (..., Q, Q).
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum (j, i]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_mix(cfg: ArchConfig, xh, dt, A, Bm, Cm, chunk: int = 256,
+            init_state=None, return_state: bool = False):
+    """Chunked SSD. xh: (B, S, H, P); dt: (B, S, H); A: (H,) (negative);
+    Bm, Cm: (B, S, G, N). Returns (B, S, H, P) [, final_state (B, H, P, N)].
+
+    Matmul-heavy einsums run in the INPUT dtype with f32 scalar/decay math
+    (the original all-f32 version materialized 4x the bytes), and the B/C
+    group tensors broadcast to heads inside the einsums via a split
+    (G, H/G) head axis instead of jnp.repeat (which materialized
+    (B, S, H, N) copies) — §Perf hymba iterations.
+    """
+    Bsz, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Hg = H // G
+    ct = xh.dtype
+    pad = (-S) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    # reshape to chunks; head axis split (G, Hg) for repeat-free broadcast
+    xc = xh.reshape(Bsz, nc, chunk, G, Hg, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, chunk, G, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, G, N)
+
+    a = dtc * A  # (B, nc, Q, H) log-decay per step, f32
+    a_hc = jnp.moveaxis(a, -1, 2).reshape(Bsz, nc, G, Hg, Sp // nc)
+    L = jnp.exp(_segsum(a_hc)).astype(ct)  # (B, nc, G, Hg, Q, Q)
+
+    xdt = xc * dtc.reshape(Bsz, nc, chunk, G, Hg)[..., None].astype(ct)
+
+    # Intra-chunk (diagonal blocks): Y_d = (C B^T ∘ L) (dt x)
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)  # (B,nc,G,Q,Q)
+    y_diag = jnp.einsum("bcgqk,bcghqk,bckghp->bcqghp", cb, L, xdt)
+
+    # Chunk states: S_c = sum_j exp(cum_end - cum_j) * B_j (dt x)_j^T
+    cum = jnp.cumsum(a_hc, -1)  # (B,nc,G,Hg,Q) f32
+    decay_to_end = jnp.exp(cum[..., -1:] - cum).astype(ct)
+    states = jnp.einsum("bcghq,bcqgn,bcqghp->bcghpn",
+                        decay_to_end, Bc, xdt)  # (B,nc,G,Hg,P,N)
+
+    # Inter-chunk recurrence over nc (sequential scan, nc is small); the
+    # carried state stays f32 for stability across many chunks.
+    chunk_decay = jnp.exp(cum[..., -1])  # (B, nc, G, Hg) f32
+
+    def scan_body(s_prev, inp):
+        st, dec = inp  # (B,G,Hg,P,N), (B,G,Hg)
+        s_new = s_prev * dec[..., None, None] + st.astype(jnp.float32)
+        return s_new, s_prev.astype(ct)
+
+    if init_state is None:
+        s0 = jnp.zeros((Bsz, G, Hg, P, N), jnp.float32)
+    else:
+        s0 = init_state.reshape(Bsz, G, Hg, P, N).astype(jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_body,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,G,Hg,P,N)
+
+    # Off-diagonal contribution: Y_off = (C · S_prev) * exp(cum)
+    state_decay = jnp.exp(cum).astype(ct)  # (B,nc,G,Hg,Q)
+    y_off = jnp.einsum("bcqgn,bcghpn,bcghq->bcqghp",
+                       Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, Sp, H, P)[:, :S]
+    final_state = final_state.reshape(Bsz, H, P, N).astype(ct)
+    if return_state:
+        return y, final_state
+    return y
+
+
+def ssd_block(p, cfg: ArchConfig, x, *, chunk: int = 256):
+    """Full mamba2 mixer block (train/prefill). x: (B, S, d)."""
+    B, S, d = x.shape
+    di = cfg.d_inner_ssm
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    dt_ = x.dtype
+
+    zxbcdt = x @ p["in_proj"].astype(dt_)  # (B,S, 2di+2GN+H)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(p["conv_w"].astype(dt_), p["conv_b"].astype(dt_), xbc))
+    xh, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+
+    xh = shard(xh.reshape(B, S, H, P), "batch", "seq", "heads", None)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+
+    y = ssd_mix(cfg, xh, dt, A, Bm, Cm, chunk=chunk)
+    y = y + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return shard(y @ p["out_proj"].astype(dt_), "batch", "seq", None)
+
+
+def ssd_decode(p, cfg: ArchConfig, x, state):
+    """Single-token SSD step. x: (B, 1, d);
+    state: {"conv": (B, K-1, conv_ch), "ssm": (B, H, P, N)}."""
+    B, _, d = x.shape
+    di = cfg.d_inner_ssm
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    Kc = cfg.conv_kernel
+    dt_ = x.dtype
+
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(dt_)  # (B, ...)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+
+    conv_buf = jnp.concatenate([state["conv"], xbc[:, None, :]], 1)  # (B,K,C)
+    w = p["conv_w"].astype(dt_)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_buf, w) + p["conv_b"].astype(dt_))
+    new_conv = conv_buf[:, 1:]
+
+    xh, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xh = xh.reshape(B, H, P).astype(jnp.float32)
+    Bm = Bm.reshape(B, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(B, G, N).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)  # (B,H)
+
+    ssm = state["ssm"].astype(jnp.float32)  # (B,H,P,N)
+    ssm = ssm * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, Bh, xh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, Ch) + xh * p["D"][None, :, None]
+    y = y.reshape(B, di).astype(dt_)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(dt_))[:, None, :]
+    return out, {"conv": new_conv, "ssm": ssm.astype(state["ssm"].dtype)}
+
+
+def ssd_init_state(cfg: ArchConfig, batch: int, dtype):
+    di = cfg.d_inner_ssm
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = di + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, N), dtype),
+    }

@@ -1,0 +1,790 @@
+"""Unified LM model: one composable definition covering all five assigned
+families (dense / moe / ssm / hybrid / audio / vlm).
+
+Structure:
+  * homogeneous decoder stacks are scanned over a stacked (L, ...) param
+    tree (small HLO, O(1) compile in depth, remat-friendly);
+  * llama-3.2-vision uses a nested scan: 8 groups x [1 cross-attn block +
+    inner scan over 5 self-attn layers];
+  * whisper is encoder stack + decoder stack with cross-attention over
+    precomputed encoder K/V.
+
+Entry points:
+  param_specs(cfg)                      -> Spec pytree
+  init(cfg, key)                        -> params
+  forward(params, cfg, tokens, ...)     -> logits (train/prefill, causal)
+  loss_fn(params, cfg, batch)           -> scalar CE loss
+  prefill(params, cfg, batch)           -> (last logits, cache)
+  decode_step(params, cfg, cache, tok)  -> (logits, cache)
+  init_cache / abstract_cache           -> cache pytrees
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding import get_mesh, logical_sharding, shard
+from repro.models.lm import layers as L
+from repro.models.lm.params import Spec, abstract, materialize
+
+# ======================================================================
+# Param specs
+# ======================================================================
+
+
+def _stack(specs, n: int):
+    """Prepend a scanned 'layers' axis to every Spec in a subtree."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        specs,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def _block_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    """One decoder block's params, per family."""
+    fam = cfg.family
+    if fam == "ssm":
+        return {"norm": L.norm_specs(cfg), "ssd": L.ssd_specs(cfg)}
+    s: Dict[str, Any] = {
+        "norm1": L.norm_specs(cfg),
+        "attn": L.attention_specs(cfg),
+        "norm2": L.norm_specs(cfg),
+    }
+    if fam == "moe":
+        s["moe"] = L.moe_specs(cfg)
+    else:
+        s["mlp"] = L.mlp_specs(cfg)
+    if fam == "hybrid":
+        s["ssd"] = L.ssd_specs(cfg)
+        s["attn_norm"] = L.norm_specs(cfg)
+        s["ssd_norm"] = L.norm_specs(cfg)
+    return s
+
+
+def _enc_block_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "norm1": L.norm_specs(cfg),
+        "attn": L.attention_specs(cfg),
+        "norm2": L.norm_specs(cfg),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def _cross_block_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "norm1": L.norm_specs(cfg),
+        "xattn": L.attention_specs(cfg),
+        "norm2": L.norm_specs(cfg),
+        "mlp": L.mlp_specs(cfg),
+        "gate_attn": Spec((1,), (None,), "zeros"),
+        "gate_mlp": Spec((1,), (None,), "zeros"),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.vocab_size
+    specs: Dict[str, Any] = {
+        "embed": Spec((V, d), ("vocab", "embed_fsdp"), "normal", 0.02),
+        "final_norm": L.norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = Spec((d, V), ("embed_fsdp", "vocab"), "fan_in")
+
+    fam = cfg.family
+    if fam == "vlm":
+        g = cfg.cross_attn_every
+        n_groups = cfg.num_layers // g
+        specs["blocks"] = _stack(_stack(_block_specs(cfg), g), n_groups)
+        specs["cross_blocks"] = _stack(_cross_block_specs(cfg), n_groups)
+        specs["vision_proj"] = Spec((d, d), ("embed_fsdp", None), "fan_in")
+    elif fam == "audio":
+        specs["enc_blocks"] = _stack(_enc_block_specs(cfg), cfg.encoder_layers)
+        specs["enc_norm"] = L.norm_specs(cfg)
+        specs["enc_pos"] = Spec((cfg.frontend_seq, d), ("frames", None), "normal", 0.01)
+        dec = {
+            "norm1": L.norm_specs(cfg),
+            "attn": L.attention_specs(cfg),
+            "norm_x": L.norm_specs(cfg),
+            "xattn": L.attention_specs(cfg),
+            "norm2": L.norm_specs(cfg),
+            "mlp": L.mlp_specs(cfg),
+        }
+        specs["blocks"] = _stack(dec, cfg.num_layers)
+        specs["dec_pos"] = Spec((cfg.max_position_embeddings, d), (None, None),
+                                "normal", 0.01)
+    else:
+        specs["blocks"] = _stack(_block_specs(cfg), cfg.num_layers)
+    return specs
+
+
+def init(cfg: ArchConfig, key):
+    return materialize(param_specs(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg: ArchConfig, mesh=None, rules=None):
+    return abstract(param_specs(cfg), mesh, rules, jnp.dtype(cfg.param_dtype))
+
+
+# ======================================================================
+# Blocks (forward)
+# ======================================================================
+
+
+def _decoder_block(p, cfg: ArchConfig, x, positions, *, kv_block=1024):
+    fam = cfg.family
+    if fam == "ssm":
+        return x + L.ssd_block(p["ssd"], cfg, L.norm(cfg, p["norm"], x))
+    h = L.norm(cfg, p["norm1"], x)
+    if fam == "hybrid":
+        a, _ = L.self_attention(p["attn"], cfg, h, positions,
+                                window=cfg.sliding_window, kv_block=kv_block)
+        s = L.ssd_block(p["ssd"], cfg, h)
+        mix = 0.5 * (L.norm(cfg, p["attn_norm"], a) + L.norm(cfg, p["ssd_norm"], s))
+        x = x + mix
+    else:
+        a, _ = L.self_attention(p["attn"], cfg, h, positions,
+                                window=cfg.sliding_window, kv_block=kv_block)
+        x = x + a
+    h2 = L.norm(cfg, p["norm2"], x)
+    if fam == "moe":
+        y, aux = L.moe_block(p["moe"], cfg, h2)
+        return x + y, aux
+    return x + L.mlp_block(p["mlp"], cfg, h2)
+
+
+def _scan_blocks(blocks, cfg: ArchConfig, x, positions, *, kv_block=1024):
+    """Scan the homogeneous decoder stack; accumulates MoE aux loss."""
+    is_moe = cfg.family == "moe"
+
+    def body(carry, layer_p):
+        x, aux = carry
+        layer_p = L.cast_tree(layer_p, x.dtype) if cfg.param_dtype != cfg.compute_dtype else layer_p
+        if is_moe:
+            x, a = _decoder_block(layer_p, cfg, x, positions, kv_block=kv_block)
+            return (x, aux + a), None
+        x = _decoder_block(layer_p, cfg, x, positions, kv_block=kv_block)
+        return (x, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        nl = jax.tree.leaves(blocks)[0].shape[0]
+        for i in range(nl):
+            layer = jax.tree.map(lambda a: a[i], blocks)
+            (x, aux), _ = body((x, aux), layer)
+    return x, aux
+
+
+def _cross_block(p, cfg: ArchConfig, x, enc_k, enc_v):
+    h = L.norm(cfg, p["norm1"], x)
+    a = L.cross_attention(p["xattn"], cfg, h, enc_k, enc_v)
+    x = x + jnp.tanh(p["gate_attn"].astype(x.dtype)) * a
+    h = L.norm(cfg, p["norm2"], x)
+    x = x + jnp.tanh(p["gate_mlp"].astype(x.dtype)) * L.mlp_block(p["mlp"], cfg, h)
+    return x
+
+
+# ======================================================================
+# Forward (train / prefill full-sequence)
+# ======================================================================
+
+
+def _embed_tokens(params, cfg: ArchConfig, tokens):
+    emb = params["embed"]
+    x = emb.astype(jnp.dtype(cfg.compute_dtype))[tokens]
+    return shard(x, "batch", "seq", None)
+
+
+def _lm_head(params, cfg: ArchConfig, x):
+    x = L.norm(cfg, params["final_norm"], x)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ w.astype(x.dtype)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def _encode_audio(params, cfg: ArchConfig, frames):
+    """frames: (B, F, d) stub post-conv features."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + params["enc_pos"].astype(x.dtype)[None]
+
+    def body(carry, layer_p):
+        x = carry
+        h = L.norm(cfg, layer_p["norm1"], x)
+        a, _ = L.self_attention(layer_p["attn"], cfg, h,
+                                jnp.arange(x.shape[1]), causal=False,
+                                rope=False, kv_block=min(1024, x.shape[1]))
+        x = x + a
+        x = x + L.mlp_block(layer_p["mlp"], cfg, L.norm(cfg, layer_p["norm2"], x))
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    else:
+        nl = jax.tree.leaves(params["enc_blocks"])[0].shape[0]
+        for i in range(nl):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_blocks"]))
+    return L.norm(cfg, params["enc_norm"], x)
+
+
+def _forward_hidden(params, cfg: ArchConfig, tokens, *, frontend=None,
+                    kv_block=1024):
+    """Causal forward up to (but excluding) the LM head -> (hidden, aux)."""
+    fam = cfg.family
+    x = _embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(tokens.shape[1])
+    aux = jnp.zeros((), jnp.float32)
+
+    if fam == "audio":
+        enc = _encode_audio(params, cfg, frontend)
+        x = x + params["dec_pos"].astype(x.dtype)[None, : x.shape[1]]
+
+        def body(carry, layer_p):
+            x = carry
+            h = L.norm(cfg, layer_p["norm1"], x)
+            a, _ = L.self_attention(layer_p["attn"], cfg, h, positions,
+                                    rope=False, kv_block=kv_block)
+            x = x + a
+            h = L.norm(cfg, layer_p["norm_x"], x)
+            ek, ev = L.encode_kv(layer_p["xattn"], cfg, enc)
+            x = x + L.cross_attention(layer_p["xattn"], cfg, h, ek, ev)
+            x = x + L.mlp_block(layer_p["mlp"], cfg, L.norm(cfg, layer_p["norm2"], x))
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["blocks"])
+        else:
+            nl = jax.tree.leaves(params["blocks"])[0].shape[0]
+            for i in range(nl):
+                x, _ = body(x, jax.tree.map(lambda a: a[i], params["blocks"]))
+
+    elif fam == "vlm":
+        enc = frontend.astype(x.dtype) @ params["vision_proj"].astype(x.dtype)
+
+        def group_body(carry, grp):
+            x = carry
+            cross_p, self_p = grp
+            x = _cross_block(cross_p, cfg, x, *L.encode_kv(cross_p["xattn"], cfg, enc))
+            x, _ = _scan_blocks(self_p, cfg, x, positions, kv_block=kv_block)
+            return x, None
+
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(group_body, x,
+                                (params["cross_blocks"], params["blocks"]))
+        else:
+            ng = jax.tree.leaves(params["cross_blocks"])[0].shape[0]
+            for i in range(ng):
+                grp = jax.tree.map(lambda a: a[i],
+                                   (params["cross_blocks"], params["blocks"]))
+                x, _ = group_body(x, grp)
+    else:
+        x, aux = _scan_blocks(params["blocks"], cfg, x, positions, kv_block=kv_block)
+
+    return x, aux
+
+
+def forward(params, cfg: ArchConfig, tokens, *, frontend=None, kv_block=1024):
+    """Causal forward over full sequences -> (logits (B, S, V), aux).
+
+    ``frontend``: (B, F, d) stub embeddings for audio (mel frames) / vlm
+    (vision patches); required for those families.
+    """
+    x, aux = _forward_hidden(params, cfg, tokens, frontend=frontend,
+                             kv_block=kv_block)
+    return _lm_head(params, cfg, x), aux
+
+
+def _ce_sum(params, cfg: ArchConfig, x, labels):
+    """CE sum from hidden states: logits stay in compute dtype; only the
+    reductions run in f32 — no full f32 (B, S, V) materialization."""
+    logits = _lm_head(params, cfg, x)
+    m = jax.lax.stop_gradient(logits.max(-1))
+    z = jnp.exp((logits - m[..., None]).astype(jnp.float32)).sum(-1)
+    logz = m.astype(jnp.float32) + jnp.log(z)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), -1)[..., 0]
+    return (logz - gold.astype(jnp.float32)).sum()
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, kv_block=1024,
+            ce_chunks: int = 0):
+    """Masked next-token cross-entropy (+ MoE aux).
+
+    ``ce_chunks > 0``: compute the LM head + CE per sequence chunk under
+    jax.checkpoint, so only (B, S/chunks, V) logits are ever live. The head
+    weights are re-read per chunk (cheap) in exchange for not keeping the
+    full logits tensor — the top HBM-traffic term of the train cells
+    (EXPERIMENTS.md §Perf).
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    n_tok = B * S
+
+    if ce_chunks and S % ce_chunks == 0:
+        x, aux = _forward_hidden(params, cfg, tokens,
+                                 frontend=batch.get("frontend"),
+                                 kv_block=kv_block)
+        Sc = S // ce_chunks
+        xs = jnp.moveaxis(x.reshape(B, ce_chunks, Sc, x.shape[-1]), 1, 0)
+        ls = jnp.moveaxis(labels.reshape(B, ce_chunks, Sc), 1, 0)
+
+        def chunk_ce(carry, inp):
+            xc, lc = inp
+            return carry + _ce_sum(params, cfg, xc, lc), None
+
+        chunk_ce = jax.checkpoint(chunk_ce, prevent_cse=False)
+        total, _ = jax.lax.scan(chunk_ce, jnp.zeros((), jnp.float32), (xs, ls))
+        return total / n_tok + 0.01 * aux
+
+    x, aux = _forward_hidden(params, cfg, tokens,
+                             frontend=batch.get("frontend"), kv_block=kv_block)
+    return _ce_sum(params, cfg, x, labels) / n_tok + 0.01 * aux
+
+
+# ======================================================================
+# KV / SSM caches
+# ======================================================================
+
+
+def _attn_cache_shapes(cfg: ArchConfig, batch: int, max_len: int):
+    Hk, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shapes = {
+        "k": ((batch, W, Hk, Dh), ("batch", "cache_seq", "kv_heads", None)),
+        "v": ((batch, W, Hk, Dh), ("batch", "cache_seq", "kv_heads", None)),
+        "idx": ((), ()),
+    }
+    if cfg.sliding_window:
+        shapes["slot_pos"] = ((W,), (None,))
+    return shapes
+
+
+def _ssm_cache_shapes(cfg: ArchConfig, batch: int):
+    di = cfg.d_inner_ssm
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = di + 2 * G * N
+    return {
+        "conv": ((batch, cfg.conv_kernel - 1, conv_ch), ("batch", None, "heads")),
+        "ssm": ((batch, cfg.ssm_heads, cfg.ssm_head_dim, N),
+                ("batch", "heads", None, "state")),
+    }
+
+
+def _layer_cache_shapes(cfg: ArchConfig, batch: int, max_len: int):
+    fam = cfg.family
+    out: Dict[str, Any] = {}
+    if fam == "ssm":
+        out["ssd"] = _ssm_cache_shapes(cfg, batch)
+    elif fam == "hybrid":
+        out["attn"] = _attn_cache_shapes(cfg, batch, max_len)
+        out["ssd"] = _ssm_cache_shapes(cfg, batch)
+    else:
+        out["attn"] = _attn_cache_shapes(cfg, batch, max_len)
+    return out
+
+
+def _cache_from_shapes(shapes, cfg: ArchConfig, stack_dims: Tuple[int, ...],
+                       make_leaf):
+    """shapes pytree of (shape, axes) -> pytree via make_leaf(shape, axes, name)."""
+
+    def rec(node, name):
+        if isinstance(node, tuple) and len(node) == 2 and isinstance(node[0], tuple):
+            shape, axes = node
+            if name in ("idx",):
+                return make_leaf(shape, axes, name, jnp.int32, stack=True)
+            if name in ("slot_pos",):
+                return make_leaf(shape, axes, name, jnp.int32, stack=True)
+            return make_leaf(shape, axes, name, jnp.dtype(cfg.compute_dtype), stack=True)
+        return {k: rec(v, k) for k, v in node.items()}
+
+    return rec(shapes, "")
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    shapes = _layer_cache_shapes(cfg, batch, max_len)
+    nl = cfg.num_layers
+
+    def make_leaf(shape, axes, name, dtype, stack: bool):
+        s = (nl,) + shape if stack else shape
+        if name == "slot_pos":
+            return jnp.full(s, -1, dtype)
+        return jnp.zeros(s, dtype)
+
+    cache = _cache_from_shapes(shapes, cfg, (nl,), make_leaf)
+    if cfg.family == "audio":
+        # cross K/V per decoder layer, filled at prefill
+        Hk, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        F = cfg.frontend_seq
+        cache["cross_k"] = jnp.zeros((nl, batch, F, Hk, Dh), jnp.dtype(cfg.compute_dtype))
+        cache["cross_v"] = jnp.zeros((nl, batch, F, Hk, Dh), jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "vlm":
+        cache["enc"] = jnp.zeros((batch, cfg.frontend_seq, cfg.d_model),
+                                 jnp.dtype(cfg.compute_dtype))
+    return cache
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int, mesh=None, rules=None):
+    shapes = _layer_cache_shapes(cfg, batch, max_len)
+    nl = cfg.num_layers
+
+    def make_leaf(shape, axes, name, dtype, stack: bool):
+        s = (nl,) + shape if stack else shape
+        ax = (("layers",) + tuple(axes)) if stack else tuple(axes)
+        sh = logical_sharding(ax, rules=rules, mesh=mesh, shape=s)
+        return jax.ShapeDtypeStruct(s, dtype, sharding=sh)
+
+    cache = _cache_from_shapes(shapes, cfg, (nl,), make_leaf)
+    if cfg.family == "audio":
+        Hk, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        F = cfg.frontend_seq
+        sh = logical_sharding(("layers", "batch", "frames", "kv_heads", None),
+                              rules=rules, mesh=mesh, shape=(nl, batch, F, Hk, Dh))
+        cdt = jnp.dtype(cfg.compute_dtype)
+        cache["cross_k"] = jax.ShapeDtypeStruct((nl, batch, F, Hk, Dh), cdt, sharding=sh)
+        cache["cross_v"] = jax.ShapeDtypeStruct((nl, batch, F, Hk, Dh), cdt, sharding=sh)
+    if cfg.family == "vlm":
+        cdt = jnp.dtype(cfg.compute_dtype)
+        shp = (batch, cfg.frontend_seq, cfg.d_model)
+        sh = logical_sharding(("batch", "frames", None), rules=rules, mesh=mesh,
+                              shape=shp)
+        cache["enc"] = jax.ShapeDtypeStruct(shp, cdt, sharding=sh)
+    return cache
+
+
+# ======================================================================
+# Prefill + decode
+# ======================================================================
+
+
+def prefill(params, cfg: ArchConfig, batch, max_len: Optional[int] = None,
+            *, kv_block=1024):
+    """Run the full prompt, return (last-token logits, filled cache).
+
+    For attention layers the cache is filled with the prefill K/V; for SSM
+    layers the final state is computed by re-running the mixer with
+    ``return_state=True``.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S + 1
+    fam = cfg.family
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    x = _embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(S)
+    cache = init_cache(cfg, B, max_len)
+
+    def fill_attn(c, k, v):
+        W = c["k"].shape[1]
+        if cfg.sliding_window and W < S:
+            # last W positions, ring-aligned so slot = pos % W
+            take = jax.lax.dynamic_slice_in_dim(k, S - W, W, axis=1)
+            vtake = jax.lax.dynamic_slice_in_dim(v, S - W, W, axis=1)
+            pos = jnp.arange(S - W, S)
+            slot = pos % W
+            ck = jnp.zeros_like(c["k"]).at[:, slot].set(take.astype(c["k"].dtype))
+            cv = jnp.zeros_like(c["v"]).at[:, slot].set(vtake.astype(c["v"].dtype))
+            sp = jnp.full((W,), -1, jnp.int32).at[slot].set(pos)
+            return {"k": ck, "v": cv, "slot_pos": sp, "idx": jnp.int32(S)}
+        ck = jnp.zeros_like(c["k"]).at[:, :S].set(k.astype(c["k"].dtype))
+        cv = jnp.zeros_like(c["v"]).at[:, :S].set(v.astype(c["v"].dtype))
+        out = {"k": ck, "v": cv, "idx": jnp.int32(S)}
+        if cfg.sliding_window:
+            out["slot_pos"] = jnp.full((c["k"].shape[1],), -1, jnp.int32).at[
+                jnp.arange(S)].set(jnp.arange(S))
+        return out
+
+    if fam == "audio":
+        enc = _encode_audio(params, cfg, batch["frontend"])
+        x = x + params["dec_pos"].astype(x.dtype)[None, :S]
+
+        def body(x, layer_p, layer_c):
+            h = L.norm(cfg, layer_p["norm1"], x)
+            a, (k, v) = L.self_attention(layer_p["attn"], cfg, h, positions,
+                                         rope=False, kv_block=kv_block)
+            x = x + a
+            h = L.norm(cfg, layer_p["norm_x"], x)
+            ek, ev = L.encode_kv(layer_p["xattn"], cfg, enc)
+            x = x + L.cross_attention(layer_p["xattn"], cfg, h, ek, ev)
+            x = x + L.mlp_block(layer_p["mlp"], cfg, L.norm(cfg, layer_p["norm2"], x))
+            new_c = dict(fill_attn(layer_c["attn"], k, v))
+            return x, {"attn": new_c, "ek": ek.astype(cdt), "ev": ev.astype(cdt)}
+
+        x, caches = _scan_prefill(params["blocks"], cfg, x, body, cache)
+        cache = {"attn": caches["attn"], "cross_k": caches["ek"], "cross_v": caches["ev"]}
+
+    elif fam == "vlm":
+        enc = batch["frontend"].astype(x.dtype) @ params["vision_proj"].astype(x.dtype)
+        g = cfg.cross_attn_every
+        ng = cfg.num_layers // g
+
+        def body(x, layer_p, layer_c):
+            h = L.norm(cfg, layer_p["norm1"], x)
+            a, (k, v) = L.self_attention(layer_p["attn"], cfg, h, positions,
+                                         kv_block=kv_block)
+            x = x + a
+            x = x + L.mlp_block(layer_p["mlp"], cfg, L.norm(cfg, layer_p["norm2"], x))
+            return x, {"attn": fill_attn(layer_c, k, v)}
+
+        # flatten (ng, g, ...) blocks to (L, ...) for the cache pass
+        flat_blocks = jax.tree.map(
+            lambda a: a.reshape((ng * g,) + a.shape[2:]), params["blocks"]
+        )
+        new_attn = []
+        xs = x
+        for gi in range(ng):
+            cross_p = jax.tree.map(lambda a: a[gi], params["cross_blocks"])
+            cross_p = L.cast_tree(cross_p, cdt)
+            xs = _cross_block(cross_p, cfg, xs, *L.encode_kv(cross_p["xattn"], cfg, enc))
+            for li in range(g):
+                lidx = gi * g + li
+                layer_p = L.cast_tree(jax.tree.map(lambda a: a[lidx], flat_blocks), cdt)
+                layer_c = jax.tree.map(lambda a: a[lidx], cache["attn"])
+                xs, out = body(xs, layer_p, layer_c)
+                new_attn.append(out["attn"])
+        x = xs
+        cache = {
+            "attn": jax.tree.map(lambda *a: jnp.stack(a), *new_attn),
+            "enc": enc.astype(cdt),
+        }
+
+    elif fam == "ssm":
+
+        def body(x, layer_p, layer_c):
+            h = L.norm(cfg, layer_p["norm"], x)
+            y, st = _ssd_block_with_state(layer_p["ssd"], cfg, h)
+            return x + y, {"ssd": st}
+
+        x, caches = _scan_prefill(params["blocks"], cfg, x, body, cache)
+        cache = caches
+
+    elif fam == "hybrid":
+
+        def body(x, layer_p, layer_c):
+            h = L.norm(cfg, layer_p["norm1"], x)
+            a, (k, v) = L.self_attention(layer_p["attn"], cfg, h, positions,
+                                         window=cfg.sliding_window, kv_block=kv_block)
+            s, st = _ssd_block_with_state(layer_p["ssd"], cfg, h)
+            mix = 0.5 * (L.norm(cfg, layer_p["attn_norm"], a)
+                         + L.norm(cfg, layer_p["ssd_norm"], s))
+            x = x + mix
+            x = x + L.mlp_block(layer_p["mlp"], cfg, L.norm(cfg, layer_p["norm2"], x))
+            return x, {"attn": fill_attn(layer_c["attn"], k, v), "ssd": st}
+
+        x, caches = _scan_prefill(params["blocks"], cfg, x, body, cache)
+        cache = caches
+
+    else:  # dense / moe
+
+        def body(x, layer_p, layer_c):
+            h = L.norm(cfg, layer_p["norm1"], x)
+            a, (k, v) = L.self_attention(layer_p["attn"], cfg, h, positions,
+                                         window=cfg.sliding_window, kv_block=kv_block)
+            x = x + a
+            h2 = L.norm(cfg, layer_p["norm2"], x)
+            if cfg.family == "moe":
+                y, _ = L.moe_block(layer_p["moe"], cfg, h2)
+            else:
+                y = L.mlp_block(layer_p["mlp"], cfg, h2)
+            return x + y, {"attn": fill_attn(layer_c["attn"], k, v)}
+
+        x, caches = _scan_prefill(params["blocks"], cfg, x, body, cache)
+        cache = caches
+
+    logits = _lm_head(params, cfg, x[:, -1:, :])
+    return logits[:, 0], cache
+
+
+def _ssd_block_with_state(p, cfg, h, chunk: int = 256):
+    """ssd_block variant that also returns the final SSM + conv state."""
+    B, S, d = h.shape
+    di = cfg.d_inner_ssm
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    dt_ = h.dtype
+    zxbcdt = h @ p["in_proj"].astype(dt_)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    conv_tail = xbc[:, -(cfg.conv_kernel - 1):, :]
+    xbc = jax.nn.silu(L._causal_conv(p["conv_w"].astype(dt_), p["conv_b"].astype(dt_), xbc))
+    xh, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xh.reshape(B, S, H, P)
+    y, state = L.ssd_mix(cfg, xh, dt, A,
+                         Bm.reshape(B, S, G, N), Cm.reshape(B, S, G, N),
+                         chunk=chunk, return_state=True)
+    y = y + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = L.rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return out, {"conv": conv_tail.astype(cdt), "ssm": state.astype(cdt)}
+
+
+def _scan_prefill(blocks, cfg: ArchConfig, x, body, cache):
+    """Scan the stack threading x; collects per-layer caches as scan outputs."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def scan_body(x, inp):
+        layer_p, layer_c = inp
+        layer_p = L.cast_tree(layer_p, cdt)
+        x, out = body(x, layer_p, layer_c)
+        return x, out
+
+    if cfg.remat:
+        scan_body = jax.checkpoint(scan_body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(scan_body, x, (blocks, cache))
+    else:
+        nl = jax.tree.leaves(blocks)[0].shape[0]
+        outs = []
+        for i in range(nl):
+            x, out = scan_body(x, jax.tree.map(lambda a: a[i], (blocks, cache)))
+            outs.append(out)
+        caches = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+    return x, caches
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens):
+    """One decode step. tokens: (B,) int32. Returns (logits (B, V), cache)."""
+    fam = cfg.family
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = _embed_tokens(params, cfg, tokens[:, None])
+
+    def attn_step(p, x, c):
+        if cfg.sliding_window:
+            return L.cached_swa_attention(p["attn"], cfg, x, c, cfg.sliding_window)
+        return L.cached_self_attention(p["attn"], cfg, x, c)
+
+    if fam == "audio":
+        idx0 = cache["attn"]["idx"]
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"].astype(cdt), idx0[0] if idx0.ndim else idx0, 1, 0
+        )[None]
+
+        def body(x, inp):
+            layer_p, c, ek, ev = inp
+            layer_p = L.cast_tree(layer_p, cdt)
+            h = L.norm(cfg, layer_p["norm1"], x)
+            # whisper decode: no rope; positions via learned dec_pos
+            q = jnp.einsum("bsd,dhk->bshk", h, layer_p["attn"]["wq"].astype(cdt))
+            if cfg.attn_bias:
+                q = q + layer_p["attn"]["bq"].astype(cdt)
+            idx = c["idx"]
+            k_new = jnp.einsum("bsd,dhk->bshk", h, layer_p["attn"]["wk"].astype(cdt))
+            v_new = jnp.einsum("bsd,dhk->bshk", h, layer_p["attn"]["wv"].astype(cdt))
+            if cfg.attn_bias:
+                k_new = k_new + layer_p["attn"]["bk"].astype(cdt)
+                v_new = v_new + layer_p["attn"]["bv"].astype(cdt)
+            ck = jax.lax.dynamic_update_slice_in_dim(c["k"], k_new.astype(c["k"].dtype), idx, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(c["v"], v_new.astype(c["v"].dtype), idx, 1)
+            o = L.decode_attention(q, ck, cv, idx + 1)
+            a = jnp.einsum("bshk,hkd->bsd", o, layer_p["attn"]["wo"].astype(cdt))
+            if cfg.attn_bias:
+                a = a + layer_p["attn"]["bo"].astype(cdt)
+            x = x + a
+            h = L.norm(cfg, layer_p["norm_x"], x)
+            x = x + L.cross_attention(layer_p["xattn"], cfg, h, ek, ev)
+            x = x + L.mlp_block(layer_p["mlp"], cfg, L.norm(cfg, layer_p["norm2"], x))
+            return x, {"k": ck, "v": cv, "idx": idx + 1}
+
+        def scan_body(x, inp):
+            layer_p, c, ek, ev = inp
+            return body(x, (layer_p, c, ek, ev))
+
+        if cfg.scan_layers:
+            x, new_attn = jax.lax.scan(
+                scan_body, x,
+                (params["blocks"], cache["attn"], cache["cross_k"], cache["cross_v"]),
+            )
+        else:
+            nl = jax.tree.leaves(params["blocks"])[0].shape[0]
+            outs = []
+            for i in range(nl):
+                x, o = scan_body(x, jax.tree.map(
+                    lambda a: a[i],
+                    (params["blocks"], cache["attn"], cache["cross_k"], cache["cross_v"])))
+                outs.append(o)
+            new_attn = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+        new_cache = {"attn": new_attn, "cross_k": cache["cross_k"],
+                     "cross_v": cache["cross_v"]}
+
+    elif fam == "vlm":
+        enc = cache["enc"]
+        g = cfg.cross_attn_every
+        ng = cfg.num_layers // g
+        flat_p = params["blocks"]
+        new_attn = []
+        for gi in range(ng):
+            cross_p = L.cast_tree(jax.tree.map(lambda a: a[gi], params["cross_blocks"]), cdt)
+            x = _cross_block(cross_p, cfg, x, *L.encode_kv(cross_p["xattn"], cfg, enc))
+            for li in range(g):
+                lidx = gi * g + li
+                layer_p = L.cast_tree(
+                    jax.tree.map(lambda a: a[gi][li], params["blocks"]), cdt)
+                c = jax.tree.map(lambda a: a[lidx], cache["attn"])
+                h = L.norm(cfg, layer_p["norm1"], x)
+                a, c = attn_step(layer_p, h, c)
+                x = x + a
+                x = x + L.mlp_block(layer_p["mlp"], cfg, L.norm(cfg, layer_p["norm2"], x))
+                new_attn.append(c)
+        new_cache = {"attn": jax.tree.map(lambda *a: jnp.stack(a), *new_attn),
+                     "enc": enc}
+
+    else:
+
+        def body(x, inp):
+            layer_p, c = inp
+            layer_p = L.cast_tree(layer_p, cdt)
+            out_c = {}
+            if fam == "ssm":
+                h = L.norm(cfg, layer_p["norm"], x)
+                y, st = L.ssd_decode(layer_p["ssd"], cfg, h, c["ssd"])
+                x = x + y
+                out_c["ssd"] = st
+                return x, out_c
+            h = L.norm(cfg, layer_p["norm1"], x)
+            if fam == "hybrid":
+                a, ac = attn_step(layer_p, h, c["attn"])
+                s, st = L.ssd_decode(layer_p["ssd"], cfg, h, c["ssd"])
+                mix = 0.5 * (L.norm(cfg, layer_p["attn_norm"], a)
+                             + L.norm(cfg, layer_p["ssd_norm"], s))
+                x = x + mix
+                out_c = {"attn": ac, "ssd": st}
+            else:
+                a, ac = attn_step(layer_p, h, c["attn"])
+                x = x + a
+                out_c["attn"] = ac
+            h2 = L.norm(cfg, layer_p["norm2"], x)
+            if fam == "moe":
+                y, _ = L.moe_block(layer_p["moe"], cfg, h2)
+            else:
+                y = L.mlp_block(layer_p["mlp"], cfg, h2)
+            return x + y, out_c
+
+        if cfg.scan_layers:
+            x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        else:
+            nl = jax.tree.leaves(params["blocks"])[0].shape[0]
+            outs = []
+            for i in range(nl):
+                x, o = body(x, jax.tree.map(lambda a: a[i], (params["blocks"], cache)))
+                outs.append(o)
+            new_cache = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+
+    logits = _lm_head(params, cfg, x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,75 @@
+"""Parameter specs: single source of truth for shapes, logical sharding
+axes, and initialization of every LM parameter.
+
+A model module builds a pytree of ``Spec``; from it we derive
+  * ``materialize``  — real initialized params (smoke tests / real training)
+  * ``abstract``     — ShapeDtypeStruct pytree with NamedShardings (dry-run:
+                       compile without allocating),
+  * ``tree_shardings`` — in_shardings pytree for jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import Rules, logical_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | fan_in
+    scale: float = 0.02
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} length mismatch")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def materialize(specs, key, dtype=jnp.float32):
+    """Initialize real parameters from a spec pytree."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(spec: Spec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        if spec.init == "fan_in":
+            fan = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            return jax.random.normal(k, spec.shape, dtype) / np.sqrt(fan)
+        return jax.random.normal(k, spec.shape, dtype) * spec.scale
+
+    return treedef.unflatten([one(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract(specs, mesh=None, rules: Optional[Rules] = None, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree with shardings — no device allocation."""
+
+    def one(spec: Spec):
+        sh = logical_sharding(spec.axes, rules=rules, mesh=mesh, shape=spec.shape)
+        return jax.ShapeDtypeStruct(spec.shape, dtype, sharding=sh)
+
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def tree_shardings(specs, mesh=None, rules: Optional[Rules] = None):
+    def one(spec: Spec):
+        return logical_sharding(spec.axes, rules=rules, mesh=mesh, shape=spec.shape)
+
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def n_params(specs) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=_is_spec))

@@ -1,0 +1,23 @@
+from repro.models.tg import (
+    common,
+    dygformer,
+    edgebank,
+    graphmixer,
+    persistent,
+    snapshot,
+    tgat,
+    tgn,
+    tpnet,
+)
+
+__all__ = [
+    "common",
+    "dygformer",
+    "edgebank",
+    "graphmixer",
+    "persistent",
+    "snapshot",
+    "tgat",
+    "tgn",
+    "tpnet",
+]

@@ -1,0 +1,81 @@
+"""Shared pieces for the TG model zoo: link decoders, seed bookkeeping.
+
+Batch tensor convention (from the recency/uniform neighbor hooks), with B =
+padded batch size and Nn = negatives per positive:
+
+  seed_nodes : (S,) = [src (B) | dst (B) | neg (B*Nn)]
+  nbr_*      : (S, K) neighbor blocks aligned with seed_nodes
+  batch_mask : (B,) valid-event mask
+
+Models embed all S seeds and ``split_seeds`` recovers (h_src, h_dst, h_neg).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import dense, dense_init
+from repro.nn.mlp import mlp, mlp_init
+
+
+def split_seeds(h, batch_size: int):
+    """h: (S, d) -> (h_src (B,d), h_dst (B,d), h_neg (B,Nn,d) or None)."""
+    B = batch_size
+    h_src, h_dst = h[:B], h[B : 2 * B]
+    rest = h[2 * B :]
+    if rest.shape[0] == 0:
+        return h_src, h_dst, None
+    nn_ = rest.shape[0] // B
+    return h_src, h_dst, rest.reshape(B, nn_, -1)
+
+
+def link_decoder_init(key, d_model: int, hidden: int = 0):
+    hidden = hidden or d_model
+    return {"mlp": mlp_init(key, [2 * d_model, hidden, 1])}
+
+
+def link_decoder(params, h_u, h_v):
+    """Pairwise link logit. Broadcasts h_u against extra leading dims of h_v."""
+    if h_v.ndim == h_u.ndim + 1:
+        h_u = jnp.broadcast_to(h_u[:, None, :], h_v.shape)
+    x = jnp.concatenate([h_u, h_v], axis=-1)
+    return mlp(params["mlp"], x)[..., 0]
+
+
+def link_logits(params, h, batch_size: int):
+    """Standard positive/negative logits from stacked seed embeddings."""
+    h_src, h_dst, h_neg = split_seeds(h, batch_size)
+    pos = link_decoder(params, h_src, h_dst)  # (B,)
+    neg = None if h_neg is None else link_decoder(params, h_src, h_neg)  # (B, Nn)
+    return pos, neg
+
+
+def bce_link_loss(pos_logits, neg_logits, batch_mask):
+    """Masked binary cross-entropy over positives + negatives."""
+    m = batch_mask.astype(jnp.float32)
+    pos_ls = jax.nn.log_sigmoid(pos_logits)
+    loss = -(pos_ls * m).sum()
+    denom = m.sum()
+    if neg_logits is not None:
+        neg_ls = jax.nn.log_sigmoid(-neg_logits)
+        loss = loss - (neg_ls * m[:, None]).sum()
+        denom = denom + (m[:, None] * jnp.ones_like(neg_logits)).sum()
+    return loss / jnp.maximum(denom, 1.0)
+
+
+def node_feature_init(key, num_nodes: int, d_static: int, d_model: int):
+    """Learnable node embedding + optional static-feature projection."""
+    ke, kp = jax.random.split(key)
+    p = {"emb": jax.random.normal(ke, (num_nodes, d_model)) * 0.02}
+    if d_static:
+        p["static_proj"] = dense_init(kp, d_static, d_model)
+    return p
+
+
+def node_features(params, ids, static_feats=None):
+    safe = jnp.maximum(ids, 0)
+    h = params["emb"][safe]
+    if static_feats is not None and "static_proj" in params:
+        h = h + dense(params["static_proj"], static_feats[safe])
+    return jnp.where((ids >= 0)[..., None], h, 0.0)

@@ -1,0 +1,161 @@
+"""DyGFormer (Yu et al., 2023): transformer over first-hop interaction
+sequences with neighbor co-occurrence encoding.
+
+For a candidate pair (u, v): take each endpoint's K most recent neighbors
+(as ordered sequences), encode per-position features
+[node emb || edge feat || time enc || co-occurrence emb], patch, and run a
+transformer over the concatenated (2 * K / patch) token sequence; mean-pool
+per side for (h_u, h_v).
+
+The co-occurrence encoder counts, for every position in u's sequence, how
+often that neighbor appears in u's and in v's sequences (and vice versa) —
+computed batched with equality matrices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.tg.common import link_decoder_init, node_feature_init, node_features
+from repro.nn.attention import mha, mha_init
+from repro.nn.linear import dense, dense_init
+from repro.nn.mlp import mlp, mlp_init
+from repro.nn.norm import layer_norm, layer_norm_init
+from repro.nn.time_encode import time_encode, time_encode_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DyGFormerConfig:
+    num_nodes: int
+    d_edge: int = 0
+    d_static: int = 0
+    d_model: int = 172
+    d_time: int = 100
+    d_cooc: int = 50
+    num_heads: int = 2
+    num_layers: int = 2
+    k: int = 32
+    patch_size: int = 1
+
+
+def init(key, cfg: DyGFormerConfig):
+    keys = jax.random.split(key, 6 + 4 * cfg.num_layers)
+    d_feat = cfg.d_model + cfg.d_edge + cfg.d_time + cfg.d_cooc
+    d_tok = d_feat * cfg.patch_size
+    params = {
+        "nodes": node_feature_init(keys[0], cfg.num_nodes, cfg.d_static, cfg.d_model),
+        "time": time_encode_init(keys[1], cfg.d_time),
+        "cooc": mlp_init(keys[2], [2, cfg.d_cooc, cfg.d_cooc]),
+        "patch_proj": dense_init(keys[3], d_tok, cfg.d_model),
+        "out_ln": layer_norm_init(cfg.d_model),
+        "decoder": link_decoder_init(keys[4], cfg.d_model),
+    }
+    for l in range(cfg.num_layers):
+        params[f"ln1_{l}"] = layer_norm_init(cfg.d_model)
+        params[f"attn_{l}"] = mha_init(keys[5 + 4 * l], cfg.d_model, cfg.d_model,
+                                       cfg.d_model, cfg.num_heads)
+        params[f"ln2_{l}"] = layer_norm_init(cfg.d_model)
+        params[f"mlp_{l}"] = mlp_init(keys[6 + 4 * l],
+                                      [cfg.d_model, 4 * cfg.d_model, cfg.d_model])
+    return params
+
+
+def _cooc_counts(a_ids, b_ids, a_mask, b_mask):
+    """For each position in a: (count in a, count in b). Shapes (P, K)."""
+    eq_aa = (a_ids[:, :, None] == a_ids[:, None, :]) & a_mask[:, None, :]
+    eq_ab = (a_ids[:, :, None] == b_ids[:, None, :]) & b_mask[:, None, :]
+    ca = eq_aa.sum(-1).astype(jnp.float32) * a_mask
+    cb = eq_ab.sum(-1).astype(jnp.float32) * a_mask
+    return jnp.stack([ca, cb], -1)  # (P, K, 2)
+
+
+def _side_features(params, cfg, ids, times, feats, mask, t_ref, cooc):
+    h = node_features(params["nodes"], ids)  # (P, K, d_model)
+    dt = (t_ref[:, None] - times).astype(jnp.float32)
+    enc = time_encode(params["time"], dt)
+    cooc_emb = mlp(params["cooc"], cooc, act=jax.nn.relu)
+    parts = [h, enc, cooc_emb]
+    if cfg.d_edge:
+        parts.insert(1, feats)
+    x = jnp.concatenate(parts, -1) * mask[..., None]
+    # Patching: fold patch_size consecutive positions into one token.
+    P, K, D = x.shape
+    ps = cfg.patch_size
+    x = x.reshape(P, K // ps, ps * D)
+    return dense(params["patch_proj"], x)  # (P, K/ps, d_model)
+
+
+def embed_pairs(params, cfg: DyGFormerConfig, u, v):
+    """u, v: dicts with ids/times/feats/mask (P, K) + t_ref (P,).
+
+    Returns (h_u, h_v): (P, d_model) each.
+    """
+    cu = _cooc_counts(u["ids"], v["ids"], u["mask"], v["mask"])
+    cv = _cooc_counts(v["ids"], u["ids"], v["mask"], u["mask"])
+    xu = _side_features(params, cfg, u["ids"], u["times"], u.get("feats"),
+                        u["mask"], u["t_ref"], cu)
+    xv = _side_features(params, cfg, v["ids"], v["times"], v.get("feats"),
+                        v["mask"], v["t_ref"], cv)
+    x = jnp.concatenate([xu, xv], 1)  # (P, 2K/ps, d)
+
+    ps = cfg.patch_size
+    tok_mask = jnp.concatenate(
+        [u["mask"].reshape(x.shape[0], -1, ps).any(-1),
+         v["mask"].reshape(x.shape[0], -1, ps).any(-1)], 1)
+    attn_mask = tok_mask[:, None, :] & tok_mask[:, :, None]
+
+    for l in range(cfg.num_layers):
+        h = layer_norm(params[f"ln1_{l}"], x)
+        x = x + mha(params[f"attn_{l}"], h, h, attn_mask, num_heads=cfg.num_heads)
+        h = layer_norm(params[f"ln2_{l}"], x)
+        x = x + mlp(params[f"mlp_{l}"], h, act=jax.nn.gelu)
+    x = layer_norm(params["out_ln"], x)
+
+    half = x.shape[1] // 2
+    mu = tok_mask[:, :half, None].astype(x.dtype)
+    mv = tok_mask[:, half:, None].astype(x.dtype)
+    h_u = (x[:, :half] * mu).sum(1) / jnp.maximum(mu.sum(1), 1.0)
+    h_v = (x[:, half:] * mv).sum(1) / jnp.maximum(mv.sum(1), 1.0)
+    return h_u, h_v
+
+
+def _gather_side(batch, sel, cfg):
+    side = {
+        "ids": batch["nbr_ids"][sel],
+        "times": batch["nbr_times"][sel],
+        "mask": batch["nbr_mask"][sel],
+        "t_ref": batch["seed_times"][sel],
+    }
+    if cfg.d_edge and "nbr_feats" in batch:
+        side["feats"] = batch["nbr_feats"][sel]
+    return side
+
+
+def link_scores(params, cfg: DyGFormerConfig, batch, batch_size: int):
+    """Pos logits (B,) and neg logits (B, Nn) with pair-dependent encoding."""
+    from repro.models.tg.common import link_decoder
+
+    B = batch_size
+    S = batch["seed_nodes"].shape[0]
+    n_neg = (S - 2 * B) // B
+
+    idx_src = jnp.arange(B)
+    idx_dst = jnp.arange(B, 2 * B)
+    u = _gather_side(batch, idx_src, cfg)
+    v = _gather_side(batch, idx_dst, cfg)
+    h_u, h_v = embed_pairs(params, cfg, u, v)
+    pos = link_decoder(params["decoder"], h_u, h_v)
+
+    neg = None
+    if n_neg > 0:
+        idx_neg = jnp.arange(2 * B, S)  # (B*Nn,) grouped by negative-column
+        # seed layout: neg.reshape(-1) of (B, Nn) -> index (i*Nn + j)? The
+        # hook flattens row-major: batch i, negative j at 2B + i*Nn + j.
+        u_rep = {k: (jnp.repeat(val, n_neg, axis=0)) for k, val in u.items()}
+        w = _gather_side(batch, idx_neg, cfg)
+        h_ur, h_w = embed_pairs(params, cfg, u_rep, w)
+        neg = link_decoder(params["decoder"], h_ur, h_w).reshape(B, n_neg)
+    return pos, neg

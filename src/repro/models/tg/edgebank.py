@@ -1,0 +1,50 @@
+"""EdgeBank (Poursafaei et al., 2022): non-parametric link-memory baseline.
+
+Unlimited-memory mode: predict 1.0 for any (src, dst) pair observed before
+the query time, else 0.0. Implemented with a hashed numpy set for O(1)
+batch-vectorized membership tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class EdgeBank:
+    def __init__(self, num_nodes: int, window: int | None = None):
+        """``window``: time-window mode (only edges within the trailing
+        window count); ``None`` = unlimited memory (paper default)."""
+        self.num_nodes = int(num_nodes)
+        self.window = window
+        self.reset_state()
+
+    def reset_state(self) -> None:
+        self._seen: dict[int, int] = {}  # key -> last time seen
+
+    def _key(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+        return src.astype(np.int64) * self.num_nodes + dst.astype(np.int64)
+
+    def update(self, src: np.ndarray, dst: np.ndarray, t: np.ndarray) -> None:
+        for k, tt in zip(self._key(src, dst).tolist(), t.tolist()):
+            self._seen[k] = tt
+        # undirected symmetrization (the standard protocol)
+        for k, tt in zip(self._key(dst, src).tolist(), t.tolist()):
+            self._seen[k] = tt
+
+    def predict(self, src: np.ndarray, dst: np.ndarray, t: np.ndarray) -> np.ndarray:
+        keys = self._key(src, dst)
+        out = np.zeros(len(keys), dtype=np.float32)
+        for i, (k, tt) in enumerate(zip(keys.tolist(), t.tolist())):
+            last = self._seen.get(k)
+            if last is None:
+                continue
+            if self.window is None or tt - last <= self.window:
+                out[i] = 1.0
+        return out
+
+    def predict_many(self, src: np.ndarray, dst_many: np.ndarray, t: np.ndarray) -> np.ndarray:
+        """One-vs-many scoring: dst_many (B, M) -> (B, M)."""
+        B, M = dst_many.shape
+        flat_src = np.repeat(src, M)
+        flat_t = np.repeat(t, M)
+        return self.predict(flat_src, dst_many.reshape(-1), flat_t).reshape(B, M)

@@ -1,0 +1,88 @@
+"""GraphMixer (Cong et al. / Sarıgün 2023): MLP-Mixer over recent neighbors.
+
+Per seed node: tokens are the K most recent interactions, each encoded as
+[edge features || *fixed* (non-learnable) time encoding of dt]. Mixer layers
+alternate token mixing (across the K axis) and channel mixing. The pooled
+token plus a node encoder (mean of 1-hop features) feeds the link decoder.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.tg.common import link_decoder_init, link_logits, node_feature_init, node_features
+from repro.nn.linear import dense, dense_init
+from repro.nn.mlp import mlp, mlp_init
+from repro.nn.norm import layer_norm, layer_norm_init
+from repro.nn.time_encode import time_encode, time_encode_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphMixerConfig:
+    num_nodes: int
+    d_edge: int = 0
+    d_static: int = 0
+    d_model: int = 128
+    d_time: int = 100
+    num_layers: int = 2
+    k: int = 20
+    token_expansion: float = 0.5
+    channel_expansion: float = 4.0
+
+
+def init(key, cfg: GraphMixerConfig):
+    keys = jax.random.split(key, 4 + 4 * cfg.num_layers)
+    d_tok = cfg.d_model
+    params = {
+        "nodes": node_feature_init(keys[0], cfg.num_nodes, cfg.d_static, cfg.d_model),
+        "time": time_encode_init(keys[1], cfg.d_time, learnable=False),
+        "tok_proj": dense_init(keys[2], cfg.d_edge + cfg.d_time, d_tok),
+        "decoder": link_decoder_init(keys[3], cfg.d_model),
+    }
+    dt_hidden = max(4, int(cfg.k * cfg.token_expansion))
+    dc_hidden = int(d_tok * cfg.channel_expansion)
+    for l in range(cfg.num_layers):
+        params[f"ln_tok_{l}"] = layer_norm_init(d_tok)
+        params[f"mix_tok_{l}"] = mlp_init(keys[4 + 4 * l], [cfg.k, dt_hidden, cfg.k])
+        params[f"ln_ch_{l}"] = layer_norm_init(d_tok)
+        params[f"mix_ch_{l}"] = mlp_init(keys[5 + 4 * l], [d_tok, dc_hidden, d_tok])
+    return params
+
+
+def embed(params, cfg: GraphMixerConfig, batch, static_feats=None):
+    seeds, seed_t = batch["seed_nodes"], batch["seed_times"]
+    nbr_ids, nbr_t, nbr_mask = batch["nbr_ids"], batch["nbr_times"], batch["nbr_mask"]
+
+    dt = (seed_t[:, None] - nbr_t).astype(jnp.float32)
+    enc = time_encode(params["time"], dt)  # (S, K, d_time)
+    if cfg.d_edge and "nbr_feats" in batch:
+        tok_in = jnp.concatenate([batch["nbr_feats"], enc], -1)
+    else:
+        tok_in = enc
+    tok = dense(params["tok_proj"], tok_in)  # (S, K, d)
+    tok = tok * nbr_mask[..., None]
+
+    for l in range(cfg.num_layers):
+        t_ln = layer_norm(params[f"ln_tok_{l}"], tok)
+        mixed = mlp(params[f"mix_tok_{l}"], jnp.swapaxes(t_ln, -1, -2),
+                    act=jax.nn.gelu)
+        tok = tok + jnp.swapaxes(mixed, -1, -2)
+        c_ln = layer_norm(params[f"ln_ch_{l}"], tok)
+        tok = tok + mlp(params[f"mix_ch_{l}"], c_ln, act=jax.nn.gelu)
+
+    denom = jnp.maximum(nbr_mask.sum(-1, keepdims=True), 1.0)
+    pooled = (tok * nbr_mask[..., None]).sum(-2) / denom  # (S, d)
+
+    # Node encoder: own features + mean of neighbor features.
+    h_self = node_features(params["nodes"], seeds, static_feats)
+    h_nbrs = node_features(params["nodes"], nbr_ids, static_feats)
+    h_nbrs = (h_nbrs * nbr_mask[..., None]).sum(-2) / denom
+    return pooled + h_self + h_nbrs
+
+
+def link_scores(params, cfg: GraphMixerConfig, batch, batch_size: int, static_feats=None):
+    h = embed(params, cfg, batch, static_feats)
+    return link_logits(params["decoder"], h, batch_size)

@@ -1,0 +1,139 @@
+"""Snapshot (DTDG) models: GCN, GCLSTM, T-GCN.
+
+All operate on discretized snapshots produced by iterate-by-time loading
+(paper Def. 3.4): a padded COO edge list per snapshot + a learned node
+embedding table. Each model maps a snapshot (and its recurrent state, if
+any) to per-node embeddings Z in R^{N x d}; link prediction on snapshot
+t+1 is decoded from Z computed on snapshots <= t.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.tg.common import link_decoder_init
+from repro.nn.graph_conv import gcn, gcn_init, gcn_layer, gcn_layer_init
+from repro.nn.linear import dense, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotConfig:
+    num_nodes: int
+    d_node: int = 256
+    d_embed: int = 128
+    num_layers: int = 2
+
+
+# ----------------------------------------------------------------------
+# GCN: snapshot-independent encoder
+# ----------------------------------------------------------------------
+def gcn_model_init(key, cfg: SnapshotConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dims = [cfg.d_node] + [cfg.d_embed] * cfg.num_layers
+    return {
+        "emb": jax.random.normal(k1, (cfg.num_nodes, cfg.d_node)) * 0.02,
+        "gcn": gcn_init(k2, dims),
+        "decoder": link_decoder_init(k3, cfg.d_embed),
+    }
+
+
+def gcn_model_apply(params, cfg: SnapshotConfig, src, dst, edge_mask):
+    return gcn(params["gcn"], params["emb"], src, dst, edge_mask, cfg.num_nodes)
+
+
+# ----------------------------------------------------------------------
+# GCLSTM (Chen et al., 2018): LSTM whose hidden transforms are GCNs
+# ----------------------------------------------------------------------
+def gclstm_init(key, cfg: SnapshotConfig):
+    keys = jax.random.split(key, 11)
+    d_in, d_h = cfg.d_node, cfg.d_embed
+    p = {
+        "emb": jax.random.normal(keys[0], (cfg.num_nodes, d_in)) * 0.02,
+        "decoder": link_decoder_init(keys[1], d_h),
+    }
+    for i, g in enumerate(("i", "f", "o", "g")):
+        p[f"w{g}"] = dense_init(keys[2 + 2 * i], d_in, d_h)
+        p[f"u{g}"] = gcn_layer_init(keys[3 + 2 * i], d_h, d_h)
+    p["out"] = dense_init(keys[10], d_h, d_h)
+    return p
+
+
+def gclstm_state(cfg: SnapshotConfig):
+    z = jnp.zeros((cfg.num_nodes, cfg.d_embed))
+    return (z, z)
+
+
+def gclstm_apply(params, cfg: SnapshotConfig, src, dst, edge_mask, state):
+    h, c = state
+    x = params["emb"]
+    n = cfg.num_nodes
+
+    def gate(g, act):
+        return act(
+            dense(params[f"w{g}"], x)
+            + gcn_layer(params[f"u{g}"], h, src, dst, edge_mask, n)
+        )
+
+    i = gate("i", jax.nn.sigmoid)
+    f = gate("f", jax.nn.sigmoid)
+    o = gate("o", jax.nn.sigmoid)
+    g = gate("g", jnp.tanh)
+    c = f * c + i * g
+    h = o * jnp.tanh(c)
+    z = dense(params["out"], h)
+    return z, (h, c)
+
+
+# ----------------------------------------------------------------------
+# T-GCN (Zhao et al., 2019): GRU whose transforms are GCNs over [X || h]
+# ----------------------------------------------------------------------
+def tgcn_init(key, cfg: SnapshotConfig):
+    keys = jax.random.split(key, 5)
+    d_in, d_h = cfg.d_node, cfg.d_embed
+    return {
+        "emb": jax.random.normal(keys[0], (cfg.num_nodes, d_in)) * 0.02,
+        "gu": gcn_layer_init(keys[1], d_in + d_h, d_h),
+        "gr": gcn_layer_init(keys[2], d_in + d_h, d_h),
+        "gc": gcn_layer_init(keys[3], d_in + d_h, d_h),
+        "decoder": link_decoder_init(keys[4], d_h),
+    }
+
+
+def tgcn_state(cfg: SnapshotConfig):
+    return jnp.zeros((cfg.num_nodes, cfg.d_embed))
+
+
+def tgcn_apply(params, cfg: SnapshotConfig, src, dst, edge_mask, h):
+    x = params["emb"]
+    n = cfg.num_nodes
+    xh = jnp.concatenate([x, h], -1)
+    u = jax.nn.sigmoid(gcn_layer(params["gu"], xh, src, dst, edge_mask, n))
+    r = jax.nn.sigmoid(gcn_layer(params["gr"], xh, src, dst, edge_mask, n))
+    xrh = jnp.concatenate([x, r * h], -1)
+    c = jnp.tanh(gcn_layer(params["gc"], xrh, src, dst, edge_mask, n))
+    h_new = u * h + (1.0 - u) * c
+    return h_new, h_new
+
+
+# ----------------------------------------------------------------------
+# Shared snapshot padding helper
+# ----------------------------------------------------------------------
+def pad_snapshot(src, dst, capacity: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pad a host snapshot edge list to ``capacity`` with a validity mask."""
+    import numpy as np
+
+    n = len(src)
+    if n > capacity:  # sample down, deterministic
+        sel = np.linspace(0, n - 1, capacity).astype(np.int64)
+        src, dst, n = src[sel], dst[sel], capacity
+    mask = np.zeros(capacity, dtype=bool)
+    mask[:n] = True
+    out_src = np.zeros(capacity, dtype=np.int32)
+    out_dst = np.zeros(capacity, dtype=np.int32)
+    out_src[:n] = src
+    out_dst[:n] = dst
+    return out_src, out_dst, mask

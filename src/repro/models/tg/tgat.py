@@ -1,0 +1,98 @@
+"""TGAT (da Xu et al., 2020): temporal graph attention.
+
+Each layer computes a seed embedding by attending over the seed's temporal
+neighborhood; keys/values are [neighbor embedding || edge features ||
+Bochner time encoding of (t_seed - t_nbr)]. Two layers consume the 2-hop
+block produced by the recency/uniform neighbor hook.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.tg.common import link_decoder_init, link_logits, node_feature_init, node_features
+from repro.nn.attention import mha_init, seed_neighbor_attention
+from repro.nn.mlp import mlp, mlp_init
+from repro.nn.time_encode import time_encode, time_encode_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TGATConfig:
+    num_nodes: int
+    d_edge: int = 0
+    d_static: int = 0
+    d_model: int = 100
+    d_time: int = 100
+    num_heads: int = 2
+    num_layers: int = 2  # 1 or 2
+    k: int = 20
+
+
+def init(key, cfg: TGATConfig):
+    keys = jax.random.split(key, 4 + cfg.num_layers * 2)
+    d_kv = cfg.d_model + cfg.d_edge + cfg.d_time
+    params = {
+        "nodes": node_feature_init(keys[0], cfg.num_nodes, cfg.d_static, cfg.d_model),
+        "time": time_encode_init(keys[1], cfg.d_time),
+        "decoder": link_decoder_init(keys[2], cfg.d_model),
+    }
+    for l in range(cfg.num_layers):
+        params[f"attn_{l}"] = mha_init(
+            keys[3 + 2 * l], cfg.d_model + cfg.d_time, d_kv, cfg.d_model, cfg.num_heads
+        )
+        params[f"merge_{l}"] = mlp_init(
+            keys[4 + 2 * l], [cfg.d_model + cfg.d_model, cfg.d_model, cfg.d_model]
+        )
+    return params
+
+
+def _layer(params, l, cfg, h_seed, seed_t, h_nbr, nbr_t, nbr_feats, nbr_mask):
+    """One TGAT layer. h_seed: (S,d); h_nbr: (S,K,d); returns (S,d)."""
+    dt_seed = time_encode(params["time"], jnp.zeros_like(seed_t, jnp.float32))
+    q = jnp.concatenate([h_seed, dt_seed], axis=-1)
+    dt = (seed_t[:, None] - nbr_t).astype(jnp.float32)
+    enc = time_encode(params["time"], dt)
+    kv = [h_nbr, enc] if nbr_feats is None else [h_nbr, nbr_feats, enc]
+    kv = jnp.concatenate(kv, axis=-1)
+    att = seed_neighbor_attention(params[f"attn_{l}"], q, kv, nbr_mask,
+                                  num_heads=cfg.num_heads)
+    return mlp(params[f"merge_{l}"], jnp.concatenate([att, h_seed], axis=-1))
+
+
+def embed(params, cfg: TGATConfig, batch, static_feats=None):
+    """Embed all S seeds. Uses hop-2 tensors when cfg.num_layers == 2."""
+    seeds, seed_t = batch["seed_nodes"], batch["seed_times"]
+    nbr_ids, nbr_t = batch["nbr_ids"], batch["nbr_times"]
+    nbr_mask = batch["nbr_mask"]
+    nbr_feats = batch.get("nbr_feats") if cfg.d_edge else None
+
+    h_seed0 = node_features(params["nodes"], seeds, static_feats)
+    h_nbr0 = node_features(params["nodes"], nbr_ids, static_feats)
+
+    if cfg.num_layers == 1:
+        return _layer(params, 0, cfg, h_seed0, seed_t, h_nbr0, nbr_t, nbr_feats, nbr_mask)
+
+    # Layer 0 embeds the hop-1 frontier using hop-2 neighborhoods.
+    S, K = nbr_ids.shape
+    f_nodes = nbr_ids.reshape(-1)
+    f_t = nbr_t.reshape(-1)
+    h_f0 = node_features(params["nodes"], f_nodes, static_feats)
+    h_f_nbr0 = node_features(params["nodes"], batch["nbr2_ids"], static_feats)
+    f_feats = batch.get("nbr2_feats") if cfg.d_edge else None
+    h_f1 = _layer(
+        params, 0, cfg, h_f0, f_t, h_f_nbr0, batch["nbr2_times"], f_feats,
+        batch["nbr2_mask"],
+    )
+    # Seeds at layer 0 too (their own hop-1 block).
+    h_seed1 = _layer(params, 0, cfg, h_seed0, seed_t, h_nbr0, nbr_t, nbr_feats, nbr_mask)
+    # Layer 1: seeds attend over layer-0 embeddings of their hop-1 frontier.
+    h_nbr1 = h_f1.reshape(S, K, -1)
+    return _layer(params, 1, cfg, h_seed1, seed_t, h_nbr1, nbr_t, nbr_feats, nbr_mask)
+
+
+def link_scores(params, cfg: TGATConfig, batch, batch_size: int, static_feats=None):
+    h = embed(params, cfg, batch, static_feats)
+    return link_logits(params["decoder"], h, batch_size)

@@ -1,0 +1,129 @@
+"""TGN (Rossi et al., 2020): memory-based temporal graph network.
+
+Functional formulation: the evolving per-node memory is explicit state
+``{"memory": (N, dm), "last_update": (N,)}`` threaded through training —
+this makes whole-epoch jit/scan possible and, in the distributed trainer,
+turns DistTGL-style memory synchronization into an explicit ``psum``.
+
+Per batch (predict-then-update):
+  1. embed seeds with temporal attention over neighbors, node features =
+     memory (+ learned embedding),
+  2. score links,
+  3. build messages [mem_src || mem_dst || phi(dt) || edge_feat] for both
+     endpoints, keep each node's *last* message, GRU-update the memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.tg.common import link_decoder_init, link_logits, node_feature_init, node_features
+from repro.nn.attention import mha_init, seed_neighbor_attention
+from repro.nn.mlp import mlp, mlp_init
+from repro.nn.recurrent import gru, gru_init
+from repro.nn.time_encode import time_encode, time_encode_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TGNConfig:
+    num_nodes: int
+    d_edge: int = 0
+    d_static: int = 0
+    d_model: int = 100
+    d_time: int = 100
+    d_memory: int = 100
+    num_heads: int = 2
+    k: int = 10
+
+
+def init(key, cfg: TGNConfig):
+    keys = jax.random.split(key, 6)
+    d_msg = 2 * cfg.d_memory + cfg.d_time + cfg.d_edge
+    d_kv = cfg.d_memory + cfg.d_model + cfg.d_edge + cfg.d_time
+    return {
+        "nodes": node_feature_init(keys[0], cfg.num_nodes, cfg.d_static, cfg.d_model),
+        "time": time_encode_init(keys[1], cfg.d_time),
+        "attn": mha_init(keys[2], cfg.d_memory + cfg.d_model + cfg.d_time, d_kv,
+                         cfg.d_model, cfg.num_heads),
+        "merge": mlp_init(keys[3], [cfg.d_model + cfg.d_memory + cfg.d_model,
+                                    cfg.d_model, cfg.d_model]),
+        "gru": gru_init(keys[4], d_msg, cfg.d_memory),
+        "decoder": link_decoder_init(keys[5], cfg.d_model),
+    }
+
+
+def init_state(cfg: TGNConfig):
+    return {
+        "memory": jnp.zeros((cfg.num_nodes, cfg.d_memory)),
+        "last_update": jnp.zeros((cfg.num_nodes,), jnp.int32),
+    }
+
+
+def embed(params, cfg: TGNConfig, state, batch, static_feats=None):
+    seeds, seed_t = batch["seed_nodes"], batch["seed_times"]
+    nbr_ids, nbr_t, nbr_mask = batch["nbr_ids"], batch["nbr_times"], batch["nbr_mask"]
+
+    mem = state["memory"]
+    h_seed = node_features(params["nodes"], seeds, static_feats)
+    m_seed = mem[jnp.maximum(seeds, 0)]
+    h_nbr = node_features(params["nodes"], nbr_ids, static_feats)
+    m_nbr = jnp.where((nbr_ids >= 0)[..., None], mem[jnp.maximum(nbr_ids, 0)], 0.0)
+
+    q = jnp.concatenate(
+        [m_seed, h_seed,
+         time_encode(params["time"], jnp.zeros_like(seed_t, jnp.float32))], -1)
+    dt = (seed_t[:, None] - nbr_t).astype(jnp.float32)
+    kv = [m_nbr, h_nbr, time_encode(params["time"], dt)]
+    if cfg.d_edge and "nbr_feats" in batch:
+        kv.insert(2, batch["nbr_feats"])
+    kv = jnp.concatenate(kv, -1)
+    att = seed_neighbor_attention(params["attn"], q, kv, nbr_mask,
+                                  num_heads=cfg.num_heads)
+    return mlp(params["merge"], jnp.concatenate([att, m_seed, h_seed], -1))
+
+
+def update_memory(params, cfg: TGNConfig, state, batch):
+    """GRU memory update with last-message-per-node aggregation."""
+    src, dst, t = batch["src"], batch["dst"], batch["time"]
+    mask = batch.get("batch_mask")
+    if mask is None:
+        mask = jnp.ones_like(src, dtype=bool)
+    edge_feats = batch.get("edge_feats")
+    B = src.shape[0]
+    mem, last = state["memory"], state["last_update"]
+
+    nodes = jnp.concatenate([src, dst])  # (2B,)
+    other = jnp.concatenate([dst, src])
+    tt = jnp.concatenate([t, t])
+    mm = jnp.concatenate([mask, mask])
+    dt = (tt - last[nodes]).astype(jnp.float32)
+    parts = [mem[nodes], mem[other], time_encode(params["time"], dt)]
+    if cfg.d_edge:
+        ef = (jnp.zeros((B, cfg.d_edge)) if edge_feats is None else edge_feats)
+        parts.append(jnp.concatenate([ef, ef], 0))
+    msgs = jnp.concatenate(parts, -1)  # (2B, d_msg)
+
+    # Last message per node: segment_max over event index (later wins).
+    idx = jnp.arange(2 * B)
+    idx = jnp.where(mm, idx, -1)
+    seg_last = jax.ops.segment_max(idx, nodes, cfg.num_nodes)  # (N,)
+    touched = seg_last >= 0
+    pick = jnp.maximum(seg_last, 0)
+
+    msg_per_node = msgs[pick]  # (N, d_msg)
+    new_mem_all = gru(params["gru"], msg_per_node, mem)
+    new_mem = jnp.where(touched[:, None], new_mem_all, mem)
+    new_last = jnp.where(touched, tt[pick].astype(last.dtype), last)
+    return {"memory": new_mem, "last_update": new_last}
+
+
+def link_scores(params, cfg: TGNConfig, state, batch, batch_size: int,
+                static_feats=None):
+    """Returns ((pos, neg), new_state)."""
+    h = embed(params, cfg, state, batch, static_feats)
+    logits = link_logits(params["decoder"], h, batch_size)
+    new_state = update_memory(params, cfg, state, batch)
+    return logits, new_state

@@ -1,0 +1,12 @@
+from repro.nn import attention, graph_conv, init, linear, mlp, norm, recurrent, time_encode
+
+__all__ = [
+    "attention",
+    "graph_conv",
+    "init",
+    "linear",
+    "mlp",
+    "norm",
+    "recurrent",
+    "time_encode",
+]

@@ -1,0 +1,67 @@
+"""Multi-head attention primitives for the TG model zoo.
+
+The LM stack has its own GQA attention in ``models/lm``; this module covers
+the smaller, mask-heavy attention patterns of temporal graph models:
+seed-to-neighborhood cross attention (TGAT/TGN) and full self-attention over
+short patch sequences (DyGFormer).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import dense, dense_init
+
+NEG_INF = -1e9
+
+
+def mha_init(key, d_q: int, d_kv: int, d_model: int, num_heads: int, dtype=jnp.float32):
+    if d_model % num_heads:
+        raise ValueError(f"d_model {d_model} not divisible by heads {num_heads}")
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": dense_init(kq, d_q, d_model, dtype=dtype),
+        "k": dense_init(kk, d_kv, d_model, dtype=dtype),
+        "v": dense_init(kv, d_kv, d_model, dtype=dtype),
+        "o": dense_init(ko, d_model, d_model, dtype=dtype),
+    }
+
+
+def _split_heads(x, h):
+    *lead, d = x.shape
+    return x.reshape(*lead, h, d // h)
+
+
+def mha(params, q_in, kv_in, mask=None, num_heads: int = 2):
+    """q_in: (..., Lq, Dq); kv_in: (..., Lk, Dkv); mask: (..., Lq, Lk) bool.
+
+    Returns (..., Lq, d_model).
+    """
+    h = num_heads
+    q = _split_heads(dense(params["q"], q_in), h)  # (..., Lq, H, dh)
+    k = _split_heads(dense(params["k"], kv_in), h)
+    v = _split_heads(dense(params["v"], kv_in), h)
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    logits = jnp.einsum("...qhd,...khd->...hqk", q, k) * scale
+    if mask is not None:
+        logits = jnp.where(mask[..., None, :, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    if mask is not None:
+        # Rows with no valid key: zero output instead of uniform garbage.
+        any_valid = mask[..., None, :, :].any(-1, keepdims=True)
+        w = jnp.where(any_valid, w, 0.0)
+    out = jnp.einsum("...hqk,...khd->...qhd", w, v)
+    *lead, Lq, H, dh = out.shape
+    return dense(params["o"], out.reshape(*lead, Lq, H * dh))
+
+
+def seed_neighbor_attention(params, seed_feat, nbr_feat, nbr_mask, num_heads: int = 2):
+    """TGAT-style: one query (the seed) attends over its K neighbors.
+
+    seed_feat: (S, Dq); nbr_feat: (S, K, Dkv); nbr_mask: (S, K) bool.
+    Returns (S, d_model).
+    """
+    out = mha(params, seed_feat[:, None, :], nbr_feat, nbr_mask[:, None, :],
+              num_heads=num_heads)
+    return out[:, 0, :]

@@ -1,0 +1,30 @@
+"""Parameter initializers (pure functions of a PRNG key)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def glorot(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[-2], shape[-1]
+    scale = np.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def lecun(key, shape, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) > 1 else shape[-1]
+    return jax.random.normal(key, shape, dtype) * np.sqrt(1.0 / fan_in)
+
+
+def normal(key, shape, stddev=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * stddev
+
+
+def zeros(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)

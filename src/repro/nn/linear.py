@@ -1,0 +1,31 @@
+"""Dense layers as (init, apply) function pairs over param dicts."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import glorot, zeros
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = True, dtype=jnp.float32):
+    kw, kb = jax.random.split(key)
+    p = {"w": glorot(kw, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = zeros(kb, (d_out,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def embedding_init(key, num: int, dim: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (num, dim), dtype) * 0.02}
+
+
+def embedding(params, ids):
+    return params["table"][ids]

@@ -1,0 +1,28 @@
+"""MLP blocks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import dense, dense_init
+
+
+def mlp_init(key, dims, bias: bool = True, dtype=jnp.float32):
+    """dims = [d_in, h1, ..., d_out]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"layer_{i}": dense_init(keys[i], dims[i], dims[i + 1], bias, dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp(params, x, act=jax.nn.relu, final_act=None):
+    n = len(params)
+    for i in range(n):
+        x = dense(params[f"layer_{i}"], x)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x

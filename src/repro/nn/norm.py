@@ -1,0 +1,28 @@
+"""Normalization layers."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def layer_norm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layer_norm(params, x, eps: float = 1e-5):
+    mean = x.mean(-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(-1, keepdims=True)
+    y = (x - mean) * jnp.reciprocal(jnp.sqrt(var + eps))
+    return y * params["scale"] + params["bias"]
+
+
+def rms_norm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rms_norm(params, x, eps: float = 1e-6):
+    # Compute the statistic in f32 for bf16 activations.
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jnp.reciprocal(jnp.sqrt(ms + eps))
+    return (y * params["scale"]).astype(x.dtype)

@@ -1,0 +1,48 @@
+"""Recurrent cells (GRU for TGN memory / T-GCN; LSTM for GCLSTM)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import dense, dense_init
+
+
+def gru_init(key, d_in: int, d_hidden: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": dense_init(ks[0], d_in, d_hidden, dtype=dtype),
+        "uz": dense_init(ks[1], d_hidden, d_hidden, bias=False, dtype=dtype),
+        "wr": dense_init(ks[2], d_in, d_hidden, dtype=dtype),
+        "ur": dense_init(ks[3], d_hidden, d_hidden, bias=False, dtype=dtype),
+        "wh": dense_init(ks[4], d_in, d_hidden, dtype=dtype),
+        "uh": dense_init(ks[5], d_hidden, d_hidden, bias=False, dtype=dtype),
+    }
+
+
+def gru(params, x, h):
+    z = jax.nn.sigmoid(dense(params["wz"], x) + dense(params["uz"], h))
+    r = jax.nn.sigmoid(dense(params["wr"], x) + dense(params["ur"], h))
+    hh = jnp.tanh(dense(params["wh"], x) + dense(params["uh"], r * h))
+    return (1.0 - z) * h + z * hh
+
+
+def lstm_init(key, d_in: int, d_hidden: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    names = ["wi", "ui", "wf", "uf", "wo", "uo", "wg", "ug"]
+    p = {}
+    for i, n in enumerate(names):
+        d = d_in if n.startswith("w") else d_hidden
+        p[n] = dense_init(ks[i], d, d_hidden, bias=n.startswith("w"), dtype=dtype)
+    return p
+
+
+def lstm(params, x, state):
+    h, c = state
+    i = jax.nn.sigmoid(dense(params["wi"], x) + dense(params["ui"], h))
+    f = jax.nn.sigmoid(dense(params["wf"], x) + dense(params["uf"], h))
+    o = jax.nn.sigmoid(dense(params["wo"], x) + dense(params["uo"], h))
+    g = jnp.tanh(dense(params["wg"], x) + dense(params["ug"], h))
+    c = f * c + i * g
+    h = o * jnp.tanh(c)
+    return h, (h, c)

@@ -1,0 +1,28 @@
+"""Bochner/Time2Vec time encoding (TGAT, TGN, DyGFormer all share this).
+
+``phi(t) = cos(t * w + b)`` with learnable (or fixed log-spaced) frequencies.
+The fixed variant follows GraphMixer: w_i = 1 / alpha^(i/beta) held constant.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_encode_init(key, dim: int, learnable: bool = True, dtype=jnp.float32):
+    if learnable:
+        kw, kb = jax.random.split(key)
+        w = jax.random.normal(kw, (dim,), dtype) * 0.1
+        b = jax.random.normal(kb, (dim,), dtype) * 0.1
+    else:
+        w = jnp.asarray(1.0 / np.power(10.0, np.arange(dim) * 4.0 / dim), dtype)
+        b = jnp.zeros((dim,), dtype)
+    return {"w": w, "b": b}
+
+
+def time_encode(params, dt):
+    """dt: (...,) -> (..., dim). Accepts integer or float timestamps."""
+    dt = jnp.asarray(dt, jnp.float32)
+    return jnp.cos(dt[..., None] * params["w"] + params["b"])

@@ -1,0 +1,13 @@
+from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig
+from repro.optim.schedule import warmup_cosine, constant
+from repro.optim.clip import clip_by_global_norm, global_norm
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "warmup_cosine",
+    "constant",
+    "clip_by_global_norm",
+    "global_norm",
+]

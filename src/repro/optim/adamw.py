@@ -1,0 +1,71 @@
+"""AdamW in pure JAX (pytree-structured, shardable).
+
+The optimizer state mirrors the parameter pytree, so GSPMD shards moments
+exactly like parameters (ZeRO-style when params are FSDP-sharded). Moments
+are stored in f32 even for bf16 params (mixed-precision master statistics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+def adamw_init(params):
+    def zeros_f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "mu": jax.tree.map(zeros_f32, params),
+        "nu": jax.tree.map(zeros_f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    params,
+    grads,
+    state,
+    cfg: AdamWConfig,
+    lr_scale=1.0,
+) -> Tuple[Any, Any]:
+    """Returns (new_params, new_state). ``lr_scale`` multiplies cfg.lr (use a
+    schedule value)."""
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1.0 - b1) * g32
+        nu = b2 * nu + (1.0 - b2) * (g32 * g32)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}

@@ -1,0 +1,18 @@
+"""Learning-rate schedules (return multiplicative scales for AdamWConfig.lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(step):
+    return jnp.ones_like(jnp.asarray(step, jnp.float32))
+
+
+def warmup_cosine(step, warmup_steps: int, total_steps: int, min_scale: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = s / jnp.maximum(warmup_steps, 1)
+    frac = (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = min_scale + (1.0 - min_scale) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(s < warmup_steps, warm, cos)

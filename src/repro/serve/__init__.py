@@ -1,0 +1,3 @@
+from repro.serve.decode import make_prefill_step, make_decode_step, generate
+
+__all__ = ["make_prefill_step", "make_decode_step", "generate"]

@@ -1,0 +1,52 @@
+"""Serving steps: prefill + single-token decode (greedy/sampled), plus a
+small batched generation driver for the examples.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import model as M
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: Optional[int] = None,
+                      kv_block: int = 1024):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch, max_len=max_len, kv_block=kv_block)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def serve_step(params, cache, tokens):
+        """tokens: (B,) int32 — the most recent token per sequence."""
+        return M.decode_step(params, cfg, cache, tokens)
+
+    return serve_step
+
+
+def generate(params, cfg: ArchConfig, batch, num_tokens: int,
+             temperature: float = 0.0, seed: int = 0, kv_block: int = 256):
+    """Greedy/temperature generation for examples + tests."""
+    B = batch["tokens"].shape[0]
+    S = batch["tokens"].shape[1]
+    prefill = jax.jit(make_prefill_step(cfg, max_len=S + num_tokens + 1,
+                                        kv_block=kv_block))
+    step = jax.jit(make_decode_step(cfg))
+    logits, cache = prefill(params, batch)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    tok = None
+    for i in range(num_tokens):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / temperature).astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+        logits, cache = step(params, cache, tok)
+    return jnp.stack(out, axis=1)  # (B, num_tokens)

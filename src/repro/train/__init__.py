@@ -1,0 +1,10 @@
+from repro.train.metrics import auc, mrr, ndcg_at_k
+from repro.train.tg_trainer import LinkPredictionTrainer, SnapshotLinkTrainer
+
+__all__ = [
+    "auc",
+    "mrr",
+    "ndcg_at_k",
+    "LinkPredictionTrainer",
+    "SnapshotLinkTrainer",
+]

@@ -1,0 +1,61 @@
+"""Evaluation metrics: MRR (one-vs-many), AUC, NDCG@k."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mrr(pos_scores, neg_scores, mask=None):
+    """Mean reciprocal rank of each positive against its negatives.
+
+    pos_scores: (B,); neg_scores: (B, M); mask: (B,) valid rows.
+    Optimistic-tie handling follows TGB: rank = 1 + #(neg > pos) +
+    0.5 * #(neg == pos).
+    """
+    pos = jnp.asarray(pos_scores)
+    neg = jnp.asarray(neg_scores)
+    greater = (neg > pos[:, None]).sum(-1)
+    ties = (neg == pos[:, None]).sum(-1)
+    rank = 1.0 + greater + 0.5 * ties
+    rr = 1.0 / rank
+    if mask is None:
+        return float(rr.mean())
+    m = jnp.asarray(mask, jnp.float32)
+    return float((rr * m).sum() / jnp.maximum(m.sum(), 1.0))
+
+
+def auc(scores, labels) -> float:
+    """Area under the ROC curve (rank statistic, ties handled)."""
+    s = np.asarray(scores, dtype=np.float64)
+    y = np.asarray(labels, dtype=np.int64)
+    n_pos, n_neg = int(y.sum()), int((1 - y).sum())
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    order = np.argsort(s, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(s) + 1)
+    # midrank correction for ties
+    uniq, inv, cnt = np.unique(s, return_inverse=True, return_counts=True)
+    cum = np.cumsum(cnt)
+    mid = cum - (cnt - 1) / 2.0
+    ranks = mid[inv]
+    r_pos = ranks[y == 1].sum()
+    return float((r_pos - n_pos * (n_pos + 1) / 2.0) / (n_pos * n_neg))
+
+
+def ndcg_at_k(pred, target, k: int = 10) -> float:
+    """NDCG@k averaged over rows. pred/target: (B, M) relevance scores."""
+    pred = np.asarray(pred, dtype=np.float64)
+    target = np.asarray(target, dtype=np.float64)
+    B, M = pred.shape
+    k = min(k, M)
+    top = np.argsort(-pred, axis=1)[:, :k]
+    ideal = -np.sort(-target, axis=1)[:, :k]
+    discounts = 1.0 / np.log2(np.arange(2, k + 2))
+    dcg = (np.take_along_axis(target, top, axis=1) * discounts).sum(1)
+    idcg = (ideal * discounts).sum(1)
+    ok = idcg > 0
+    out = np.zeros(B)
+    out[ok] = dcg[ok] / idcg[ok]
+    return float(out.mean())

@@ -1,0 +1,373 @@
+"""Training/evaluation drivers for the TG model zoo.
+
+``LinkPredictionTrainer`` — CTDG models (TGAT, TGN, GraphMixer, DyGFormer,
+TPNet) over event-iterated batches with the TGB link recipe (random train
+negatives, one-vs-many eval negatives, recency neighbors, padding, device
+transfer).
+
+``SnapshotLinkTrainer`` — DTDG models (GCN, GCLSTM, TGCN) over
+time-iterated snapshots: embeddings from snapshots <= t predict the edges of
+snapshot t+1.
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DGData,
+    DGraph,
+    DGDataLoader,
+    RECIPE_TGB_LINK,
+    RecipeRegistry,
+    TimeDelta,
+    TRAIN_KEY,
+    EVAL_KEY,
+)
+from repro.models.tg import dygformer, graphmixer, snapshot, tgat, tgn, tpnet
+from repro.models.tg.common import bce_link_loss, link_decoder, link_logits
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.train.metrics import mrr
+
+_STATELESS = {"tgat", "graphmixer", "dygformer"}
+_STATEFUL = {"tgn", "tpnet"}
+
+
+class LinkPredictionTrainer:
+    def __init__(
+        self,
+        model_name: str,
+        data: DGData,
+        batch_size: int = 200,
+        k: int = 20,
+        lr: float = 1e-4,
+        eval_negatives: int = 20,
+        seed: int = 0,
+        model_kwargs: Optional[Dict[str, Any]] = None,
+    ):
+        if model_name not in _STATELESS | _STATEFUL:
+            raise ValueError(f"unknown CTDG model {model_name!r}")
+        self.model_name = model_name
+        self.data = data
+        self.batch_size = batch_size
+        self.train_data, self.val_data, self.test_data = data.split()
+        kwargs = dict(model_kwargs or {})
+
+        d_edge = data.edge_feat_dim
+        n = data.num_nodes
+        key = jax.random.PRNGKey(seed)
+
+        num_hops = 1
+        if model_name == "tgat":
+            self.cfg = tgat.TGATConfig(num_nodes=n, d_edge=d_edge, k=k, **kwargs)
+            num_hops = min(2, self.cfg.num_layers)
+            self.params = tgat.init(key, self.cfg)
+            self._scores = partial(tgat.link_scores, cfg=self.cfg)
+        elif model_name == "graphmixer":
+            self.cfg = graphmixer.GraphMixerConfig(num_nodes=n, d_edge=d_edge, k=k, **kwargs)
+            self.params = graphmixer.init(key, self.cfg)
+            self._scores = partial(graphmixer.link_scores, cfg=self.cfg)
+        elif model_name == "dygformer":
+            self.cfg = dygformer.DyGFormerConfig(num_nodes=n, d_edge=d_edge, k=k, **kwargs)
+            self.params = dygformer.init(key, self.cfg)
+            self._scores = partial(dygformer.link_scores, cfg=self.cfg)
+        elif model_name == "tgn":
+            self.cfg = tgn.TGNConfig(num_nodes=n, d_edge=d_edge, k=k, **kwargs)
+            self.params = tgn.init(key, self.cfg)
+            self.model_state = tgn.init_state(self.cfg)
+        elif model_name == "tpnet":
+            self.cfg = tpnet.TPNetConfig(num_nodes=n, **kwargs)
+            self.params = tpnet.init(key, self.cfg)
+            self.model_state = tpnet.init_state(self.params, self.cfg)
+
+        needs_nbrs = model_name != "tpnet"
+        self.manager = RecipeRegistry.build(
+            RECIPE_TGB_LINK,
+            num_nodes=n,
+            k=self.cfg.k if needs_nbrs else 1,
+            num_hops=num_hops,
+            batch_size=batch_size,
+            eval_negatives=eval_negatives,
+            edge_feats=self.train_data.edge_feats if d_edge else None,
+            edge_feat_dim=d_edge,
+            seed=seed,
+        )
+
+        self.opt_cfg = AdamWConfig(lr=lr)
+        self.opt_state = adamw_init(self.params)
+        self._build_steps()
+
+    # ------------------------------------------------------------------
+    def _build_steps(self):
+        name, B = self.model_name, self.batch_size
+
+        if name in _STATELESS:
+
+            def loss_fn(params, batch):
+                pos, neg = self._scores(params, batch=batch, batch_size=B)
+                return bce_link_loss(pos, neg, batch["batch_mask"])
+
+            @jax.jit
+            def train_step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+                params, opt_state = adamw_update(params, grads, opt_state, self.opt_cfg)
+                return params, opt_state, loss
+
+            @jax.jit
+            def eval_step(params, batch):
+                return self._scores(params, batch=batch, batch_size=B)
+
+            self._train_step, self._eval_step = train_step, eval_step
+
+        elif name == "tgn":
+            cfg = self.cfg
+
+            def loss_fn(params, state, batch):
+                (pos, neg), new_state = tgn.link_scores(params, cfg, state, batch, B)
+                return bce_link_loss(pos, neg, batch["batch_mask"]), new_state
+
+            @jax.jit
+            def train_step(params, opt_state, state, batch):
+                (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, state, batch
+                )
+                params, opt_state = adamw_update(params, grads, opt_state, self.opt_cfg)
+                return params, opt_state, new_state, loss
+
+            @jax.jit
+            def eval_step(params, state, batch):
+                return tgn.link_scores(params, cfg, state, batch, B)
+
+            self._train_step, self._eval_step = train_step, eval_step
+
+        elif name == "tpnet":
+            cfg = self.cfg
+
+            def loss_fn(params, state, batch):
+                (pos, neg), new_state = tpnet.link_scores(params, cfg, state, batch, B)
+                return bce_link_loss(pos, neg, batch["batch_mask"]), new_state
+
+            @jax.jit
+            def train_step(params, opt_state, state, batch):
+                (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, state, batch
+                )
+                params, opt_state = adamw_update(params, grads, opt_state, self.opt_cfg)
+                return params, opt_state, new_state, loss
+
+            @jax.jit
+            def eval_step(params, state, batch):
+                return tpnet.link_scores(params, cfg, state, batch, B)
+
+            self._train_step, self._eval_step = train_step, eval_step
+
+    # ------------------------------------------------------------------
+    def _loader(self, data: DGData) -> DGDataLoader:
+        return DGDataLoader(DGraph(data), self.manager, batch_size=self.batch_size)
+
+    def _batch_tensors(self, batch) -> Dict[str, Any]:
+        return {k: batch[k] for k in batch.keys()}
+
+    def reset_epoch_state(self):
+        self.manager.reset_state()
+        if self.model_name == "tgn":
+            self.model_state = tgn.init_state(self.cfg)
+        elif self.model_name == "tpnet":
+            self.model_state = tpnet.init_state(self.params, self.cfg)
+
+    def train_epoch(self) -> Tuple[float, float]:
+        """One epoch over the train split. Returns (mean loss, seconds)."""
+        self.reset_epoch_state()
+        t0 = time.perf_counter()
+        losses = []
+        with self.manager.activate(TRAIN_KEY):
+            for batch in self._loader(self.train_data):
+                bt = self._batch_tensors(batch)
+                if self.model_name in _STATELESS:
+                    self.params, self.opt_state, loss = self._train_step(
+                        self.params, self.opt_state, bt
+                    )
+                else:
+                    self.params, self.opt_state, self.model_state, loss = self._train_step(
+                        self.params, self.opt_state, self.model_state, bt
+                    )
+                losses.append(loss)
+        losses = [float(l) for l in losses]
+        return float(np.mean(losses)), time.perf_counter() - t0
+
+    def evaluate(self, split: str = "val") -> Tuple[float, float]:
+        """One-vs-many MRR on val/test (warm state from train[, val])."""
+        self.reset_epoch_state()
+        # Warm the samplers/state through earlier splits without predicting.
+        with self.manager.activate(TRAIN_KEY):
+            warm = [self.train_data] + ([self.val_data] if split == "test" else [])
+            for d in warm:
+                for batch in self._loader(d):
+                    bt = self._batch_tensors(batch)
+                    if self.model_name in _STATEFUL:
+                        _, self.model_state = self._eval_step(
+                            self.params, self.model_state, bt
+                        )
+        data = self.val_data if split == "val" else self.test_data
+        t0 = time.perf_counter()
+        rrs, masks = [], []
+        with self.manager.activate(EVAL_KEY):
+            for batch in self._loader(data):
+                bt = self._batch_tensors(batch)
+                if self.model_name in _STATELESS:
+                    pos, neg = self._eval_step(self.params, bt)
+                else:
+                    (pos, neg), self.model_state = self._eval_step(
+                        self.params, self.model_state, bt
+                    )
+                rrs.append(mrr(pos, neg, bt["batch_mask"]) * float(bt["batch_mask"].sum()))
+                masks.append(float(bt["batch_mask"].sum()))
+        return float(np.sum(rrs) / max(np.sum(masks), 1.0)), time.perf_counter() - t0
+
+
+class SnapshotLinkTrainer:
+    """DTDG link prediction: process snapshot t, predict snapshot t+1."""
+
+    def __init__(
+        self,
+        model_name: str,
+        data: DGData,
+        snapshot_unit: TimeDelta | str = "h",
+        d_embed: int = 128,
+        lr: float = 1e-3,
+        num_negatives: int = 1,
+        eval_negatives: int = 20,
+        edge_capacity: Optional[int] = None,
+        seed: int = 0,
+    ):
+        if model_name not in ("gcn", "gclstm", "tgcn"):
+            raise ValueError(f"unknown DTDG model {model_name!r}")
+        self.model_name = model_name
+        self.data = data
+        self.unit = TimeDelta.coerce(snapshot_unit)
+        self.num_negatives = num_negatives
+        self.eval_negatives = eval_negatives
+        self._rng = np.random.default_rng(seed)
+        self._seed = seed
+
+        self.cfg = snapshot.SnapshotConfig(num_nodes=data.num_nodes, d_embed=d_embed)
+        key = jax.random.PRNGKey(seed)
+        if model_name == "gcn":
+            self.params = snapshot.gcn_model_init(key, self.cfg)
+        elif model_name == "gclstm":
+            self.params = snapshot.gclstm_init(key, self.cfg)
+        else:
+            self.params = snapshot.tgcn_init(key, self.cfg)
+
+        # Snapshot capacity: max discretized snapshot size (power-of-2 pad).
+        disc = data.discretize(self.unit, reduce="count")
+        self.disc = disc
+        loader = DGDataLoader(DGraph(disc), None, batch_size=None, batch_unit=self.unit)
+        sizes = [b.num_events for b in loader]
+        cap = edge_capacity or int(2 ** np.ceil(np.log2(max(max(sizes), 1))))
+        self.capacity = cap
+        self.opt_cfg = AdamWConfig(lr=lr)
+        self.opt_state = adamw_init(self.params)
+        self._build_steps()
+
+    def _init_state(self):
+        if self.model_name == "gcn":
+            return ()
+        if self.model_name == "gclstm":
+            return snapshot.gclstm_state(self.cfg)
+        return snapshot.tgcn_state(self.cfg)
+
+    def _apply(self, params, src, dst, mask, state):
+        if self.model_name == "gcn":
+            z = snapshot.gcn_model_apply(params, self.cfg, src, dst, mask)
+            return z, state
+        if self.model_name == "gclstm":
+            return snapshot.gclstm_apply(params, self.cfg, src, dst, mask, state)
+        return snapshot.tgcn_apply(params, self.cfg, src, dst, mask, state)
+
+    def _build_steps(self):
+        apply = self._apply
+
+        def loss_fn(params, state, cur, nxt):
+            z, new_state = apply(params, cur["src"], cur["dst"], cur["mask"], state)
+            h_src, h_dst = z[nxt["src"]], z[nxt["dst"]]
+            pos = link_decoder(params["decoder"], h_src, h_dst)
+            h_neg = z[nxt["neg"]]
+            neg = link_decoder(params["decoder"], h_src, h_neg)
+            return bce_link_loss(pos, neg, nxt["mask"]), new_state
+
+        @jax.jit
+        def train_step(params, opt_state, state, cur, nxt):
+            (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, state, cur, nxt
+            )
+            params, opt_state = adamw_update(params, grads, opt_state, self.opt_cfg)
+            return params, opt_state, new_state, loss
+
+        @jax.jit
+        def eval_step(params, state, cur, nxt):
+            z, new_state = apply(params, cur["src"], cur["dst"], cur["mask"], state)
+            h_src, h_dst = z[nxt["src"]], z[nxt["dst"]]
+            pos = link_decoder(params["decoder"], h_src, h_dst)
+            neg = link_decoder(params["decoder"], h_src, z[nxt["neg"]])
+            return pos, neg, new_state
+
+        self._train_step, self._eval_step = train_step, eval_step
+
+    # ------------------------------------------------------------------
+    def _snapshots(self):
+        loader = DGDataLoader(
+            DGraph(self.disc), None, batch_size=None,
+            batch_unit=self.unit, emit_empty=True,
+        )
+        for b in loader:
+            src, dst, mask = snapshot.pad_snapshot(b["src"], b["dst"], self.capacity)
+            yield {
+                "src": jnp.asarray(src), "dst": jnp.asarray(dst),
+                "mask": jnp.asarray(mask),
+            }
+
+    def _with_negatives(self, snap, m: int):
+        neg = self._rng.integers(0, self.cfg.num_nodes, size=(self.capacity, m))
+        return {**snap, "neg": jnp.asarray(neg, jnp.int32)}
+
+    def run_epoch(self, train_frac: float = 0.7, train: bool = True) -> Tuple[float, float]:
+        """Returns (mean metric, seconds). metric = loss if train else MRR."""
+        self._rng = np.random.default_rng(self._seed)
+        snaps = list(self._snapshots())
+        n_train = max(1, int(len(snaps) * train_frac))
+        state = self._init_state()
+        t0 = time.perf_counter()
+        out, weights = [], []
+        for i in range(len(snaps) - 1):
+            cur = snaps[i]
+            is_train = i + 1 < n_train
+            if train and is_train:
+                nxt = self._with_negatives(snaps[i + 1], self.num_negatives)
+                self.params, self.opt_state, state, loss = self._train_step(
+                    self.params, self.opt_state, state, cur, nxt
+                )
+                out.append(float(loss))
+                weights.append(1.0)
+            elif not train and not is_train:
+                nxt = self._with_negatives(snaps[i + 1], self.eval_negatives)
+                pos, neg, state = self._eval_step(self.params, state, cur, nxt)
+                w = float(np.asarray(nxt["mask"]).sum())
+                out.append(mrr(pos, neg, nxt["mask"]) * w)
+                weights.append(w)
+            else:
+                # advance recurrent state through non-scored snapshots
+                _, state = self._advance(state, cur)
+        t1 = time.perf_counter()
+        denom = max(sum(weights), 1.0)
+        return float(np.sum(out) / denom if not train else np.mean(out)), t1 - t0
+
+    def _advance(self, state, cur):
+        z, state = self._apply(self.params, cur["src"], cur["dst"], cur["mask"], state)
+        return z, state

@@ -1,0 +1,3 @@
+from repro.utils.prof import Profiler, profile_section
+
+__all__ = ["Profiler", "profile_section"]

@@ -1,0 +1,71 @@
+"""Performance monitoring utilities (paper §4: "Performance monitoring
+utilities ... help identify bottlenecks"; Table 11 runtime breakdown).
+
+``Profiler`` accumulates wall time per named section across a run and
+prints a Table-11-style percentage breakdown. Sections nest (dotted
+paths); JAX async dispatch is handled by blocking on section exit when
+``block=True``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from collections import defaultdict
+from typing import Dict, Iterator, Optional
+
+
+class Profiler:
+    def __init__(self, block: bool = False):
+        self.times: Dict[str, float] = defaultdict(float)
+        self.counts: Dict[str, int] = defaultdict(int)
+        self._stack: list = []
+        self._block = block
+
+    @contextlib.contextmanager
+    def __call__(self, name: str) -> Iterator[None]:
+        path = ".".join([*(s for s, _ in self._stack), name])
+        t0 = time.perf_counter()
+        self._stack.append((name, t0))
+        try:
+            yield
+        finally:
+            if self._block:
+                import jax
+
+                jax.effects_barrier()
+            dt = time.perf_counter() - t0
+            self._stack.pop()
+            self.times[path] += dt
+            self.counts[path] += 1
+
+    def total(self) -> float:
+        return sum(v for k, v in self.times.items() if "." not in k)
+
+    def report(self, min_pct: float = 0.5) -> str:
+        total = max(self.total(), 1e-12)
+        lines = [f"{'section':<40s}{'calls':>8s}{'seconds':>10s}{'%':>7s}"]
+        for path in sorted(self.times, key=lambda p: (p.count("."), -self.times[p])):
+            pct = 100.0 * self.times[path] / total
+            if pct < min_pct:
+                continue
+            depth = path.count(".")
+            name = "  " * depth + path.split(".")[-1]
+            lines.append(
+                f"{name:<40s}{self.counts[path]:>8d}"
+                f"{self.times[path]:>10.3f}{pct:>6.1f}%"
+            )
+        return "\n".join(lines)
+
+    def reset(self) -> None:
+        self.times.clear()
+        self.counts.clear()
+
+
+@contextlib.contextmanager
+def profile_section(profiler: Optional[Profiler], name: str):
+    if profiler is None:
+        yield
+    else:
+        with profiler(name):
+            yield

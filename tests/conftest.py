@@ -1,0 +1,19 @@
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def tiny_graph():
+    from repro.data import generate
+
+    return generate("tiny")
+
+
+@pytest.fixture(scope="session")
+def small_stream(tiny_graph):
+    """First ~600 events of the tiny graph (keeps model tests fast)."""
+    return tiny_graph.slice_events(0, 600)

@@ -1,0 +1,62 @@
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import checkpoint as ckpt
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32),
+                   "b": jnp.asarray(rng.standard_normal(4), jnp.bfloat16)},
+        "opt": {"step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 3, tree, extra_meta={"loss": 1.5})
+    restored, step, extra = ckpt.restore(str(tmp_path), target=tree)
+    assert step == 3 and extra["loss"] == 1.5
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert np.asarray(restored["opt"]["step"]) == 7
+
+
+def test_latest_and_retention(tmp_path):
+    tree = _tree()
+    for s in range(6):
+        ckpt.save(str(tmp_path), s, tree, keep=3)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    assert sorted(ckpt.all_steps(str(tmp_path))) == [3, 4, 5]
+
+
+def test_atomic_publish_no_tmp_left(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    assert not [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path))
+
+
+def test_async_checkpointer(tmp_path):
+    w = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = _tree()
+    for s in range(4):
+        w.save(s, tree, extra_meta={"s": s})
+    w.close()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    restored, step, extra = ckpt.restore(str(tmp_path), target=tree)
+    assert extra["s"] == 3
+
+
+def test_dtype_preserved(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 0, tree)
+    restored, _, _ = ckpt.restore(str(tmp_path), target=tree)
+    assert restored["params"]["b"].dtype == np.dtype(jnp.bfloat16)

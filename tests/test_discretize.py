@@ -1,0 +1,105 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DGData, TimeDelta, discretize, discretize_jax, discretize_naive
+
+REDUCTIONS = ["first", "last", "sum", "mean", "max", "count"]
+
+
+def _mk(n, n_nodes, t_hi, seed=0, feat_dim=3):
+    rng = np.random.default_rng(seed)
+    return DGData.from_arrays(
+        rng.integers(0, n_nodes, n),
+        rng.integers(0, n_nodes, n),
+        rng.integers(0, t_hi, n),
+        edge_feats=rng.standard_normal((n, feat_dim)).astype(np.float32),
+        granularity="s",
+    )
+
+
+def _key_set(d):
+    return set(zip(d.edge_t.tolist(), d.src.tolist(), d.dst.tolist()))
+
+
+def _aligned(a, b):
+    oa = np.lexsort((a.dst, a.src, a.edge_t))
+    ob = np.lexsort((b.dst, b.src, b.edge_t))
+    return a.edge_feats[oa], b.edge_feats[ob]
+
+
+@pytest.mark.parametrize("reduce", REDUCTIONS)
+def test_vectorized_matches_naive(reduce):
+    d = _mk(500, 15, 10_000)
+    a = discretize(d, TimeDelta("h"), reduce=reduce)
+    b = discretize_naive(d, TimeDelta("h"), reduce=reduce)
+    assert _key_set(a) == _key_set(b)
+    fa, fb = _aligned(a, b)
+    np.testing.assert_allclose(fa, fb, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("reduce", ["first", "sum", "count"])
+def test_jax_backend_matches_naive(reduce):
+    d = _mk(300, 10, 5000)
+    a = discretize_jax(d, TimeDelta("h"), reduce=reduce)
+    b = discretize_naive(d, TimeDelta("h"), reduce=reduce)
+    assert _key_set(a) == _key_set(b)
+    fa, fb = _aligned(a, b)
+    np.testing.assert_allclose(fa, fb, rtol=1e-4, atol=1e-4)
+
+
+def test_coarser_granularity_fewer_events():
+    d = _mk(2000, 10, 100_000)
+    hourly = discretize(d, TimeDelta("h"))
+    daily = discretize(d, TimeDelta("d"))
+    assert daily.num_edge_events <= hourly.num_edge_events <= d.num_edge_events
+    assert daily.granularity == TimeDelta("d")
+
+
+def test_timestamps_are_coarse_ticks():
+    d = _mk(200, 8, 7200)
+    h = discretize(d, TimeDelta("h"))
+    assert h.edge_t.max() <= 2  # 7200s -> at most 3 hourly buckets
+
+
+def test_count_appends_multiplicity():
+    d = _mk(400, 5, 1000, feat_dim=2)
+    c = discretize(d, TimeDelta("h"), reduce="count")
+    assert c.edge_feat_dim == 3  # 2 features + count
+    assert c.edge_feats[:, -1].sum() == d.num_edge_events
+
+
+def test_event_ordered_rejected():
+    d = DGData.from_arrays([0], [1], [0], granularity=TimeDelta.event())
+    with pytest.raises(TypeError):
+        discretize(d, TimeDelta("h"))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 120),
+    n_nodes=st.integers(1, 12),
+    t_hi=st.integers(1, 20_000),
+    seed=st.integers(0, 10_000),
+    reduce=st.sampled_from(REDUCTIONS),
+)
+def test_property_vectorized_equals_naive(n, n_nodes, t_hi, seed, reduce):
+    """System invariant: psi_r vectorized == dict-based oracle, any input."""
+    d = _mk(n, n_nodes, t_hi, seed=seed)
+    a = discretize(d, TimeDelta("m"), reduce=reduce)
+    b = discretize_naive(d, TimeDelta("m"), reduce=reduce)
+    assert _key_set(a) == _key_set(b)
+    fa, fb = _aligned(a, b)
+    np.testing.assert_allclose(fa, fb, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_idempotent_at_same_granularity(seed):
+    """Discretizing twice at the same granularity is idempotent."""
+    d = _mk(150, 8, 5000, seed=seed)
+    once = discretize(d, TimeDelta("h"), reduce="sum")
+    twice = discretize(once, TimeDelta("h"), reduce="sum")
+    assert _key_set(once) == _key_set(twice)
+    fa, fb = _aligned(once, twice)
+    np.testing.assert_allclose(fa, fb, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,44 @@
+import pytest
+
+from repro.core import EventOrderedError, TimeDelta
+
+
+def test_ordering():
+    assert TimeDelta("s") <= TimeDelta("h")
+    assert TimeDelta("h") <= TimeDelta("d")
+    assert TimeDelta("d") <= TimeDelta("w")
+    assert not (TimeDelta("d") <= TimeDelta("h"))
+    assert TimeDelta("s", 30) <= TimeDelta("m")
+    assert TimeDelta("h") <= TimeDelta("h")
+
+
+def test_ticks_per():
+    assert TimeDelta("h").ticks_per(TimeDelta("s")) == 3600
+    assert TimeDelta("d").ticks_per(TimeDelta("h")) == 24
+    assert TimeDelta("m", 5).ticks_per(TimeDelta("s")) == 300
+    with pytest.raises(ValueError):
+        TimeDelta("s", 7).ticks_per(TimeDelta("s", 2))
+
+
+def test_event_ordered_excluded_from_time_ops():
+    ev = TimeDelta.event()
+    assert ev.is_event_ordered
+    with pytest.raises(EventOrderedError):
+        _ = ev.seconds
+    with pytest.raises(EventOrderedError):
+        ev.is_coarser_or_equal(TimeDelta("s"))
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        TimeDelta("fortnight")
+    with pytest.raises(ValueError):
+        TimeDelta("s", 0)
+    with pytest.raises(ValueError):
+        TimeDelta("r", 2)
+
+
+def test_coerce():
+    assert TimeDelta.coerce("h") == TimeDelta("h")
+    td = TimeDelta("m", 5)
+    assert TimeDelta.coerce(td) is td

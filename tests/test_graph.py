@@ -1,0 +1,82 @@
+import numpy as np
+import pytest
+
+from repro.core import DGData, DGraph, TimeDelta
+
+
+def _mk(n=100, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 20, n)
+    dst = rng.integers(0, 20, n)
+    t = rng.integers(0, 1000, n)
+    feats = rng.standard_normal((n, 4)).astype(np.float32)
+    return DGData.from_arrays(src, dst, t, edge_feats=feats, granularity="s")
+
+
+def test_time_sorted_storage():
+    d = _mk()
+    assert (np.diff(d.edge_t) >= 0).all()
+    assert d.num_edge_events == 100
+    assert d.edge_feat_dim == 4
+
+
+def test_stable_sort_preserves_feature_alignment():
+    src = [1, 2, 3]
+    dst = [4, 5, 6]
+    t = [30, 10, 20]
+    feats = np.asarray([[30.0], [10.0], [20.0]], np.float32)
+    d = DGData.from_arrays(src, dst, t, edge_feats=feats)
+    np.testing.assert_array_equal(d.edge_t.astype(np.float32), d.edge_feats[:, 0])
+
+
+def test_edge_range_binary_search():
+    d = _mk()
+    lo, hi = d.edge_range(100, 500)
+    assert (d.edge_t[lo:hi] >= 100).all()
+    assert (d.edge_t[lo:hi] < 500).all()
+    if lo > 0:
+        assert d.edge_t[lo - 1] < 100
+    if hi < d.num_edge_events:
+        assert d.edge_t[hi] >= 500
+
+
+def test_split_chronological():
+    d = _mk(1000)
+    tr, va, te = d.split(0.15, 0.15)
+    assert tr.num_edge_events + va.num_edge_events + te.num_edge_events == 1000
+    if va.num_edge_events and tr.num_edge_events:
+        assert tr.edge_t[-1] <= va.edge_t[0]
+    if te.num_edge_events and va.num_edge_events:
+        assert va.edge_t[-1] <= te.edge_t[0]
+
+
+def test_view_is_o1_and_immutable():
+    d = _mk()
+    g = DGraph(d)
+    sub = g.slice_time(100, 500)
+    assert sub.data is d  # no copy
+    lo, hi = d.edge_range(100, 500)
+    assert sub.num_edge_events == hi - lo
+
+
+def test_view_granularity_must_be_coarser():
+    d = _mk()
+    DGraph(d, granularity="h")  # ok: coarser
+    with pytest.raises(ValueError):
+        DGraph(d, granularity=TimeDelta("ms"))
+
+
+def test_materialize_window():
+    d = _mk()
+    g = DGraph(d, t_lo=0, t_hi=500)
+    out = g.materialize()
+    assert (out["time"] < 500).all()
+    assert out["src"].shape == out["dst"].shape == out["time"].shape
+
+
+def test_csv_adapter(tmp_path):
+    p = tmp_path / "edges.csv"
+    p.write_text("src,dst,t\n1,2,10\n3,4,5\n")
+    d = DGData.from_csv(str(p))
+    assert d.num_edge_events == 2
+    assert d.edge_t[0] == 5  # sorted

@@ -1,0 +1,74 @@
+import numpy as np
+
+from repro.launch import hlo_analysis as H
+
+
+SAMPLE = """
+  %all-gather = f32[512,1024]{0,1} all-gather(%copy), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={1}
+  %x = bf16[16,128]{1,0} add(%a, %b)
+  %all-reduce.1 = bf16[32,256]{1,0} all-reduce(%dot), channel_id=2, replica_groups=[4,2]<=[2,4]T(1,0)
+  %rs = f32[8,8]{1,0} reduce-scatter(%big), channel_id=3, replica_groups={{0,1,2,3}}
+  %cp = bf16[4,4]{1,0} collective-permute(%y), channel_id=4
+"""
+
+
+def test_parse_collective_kinds_and_sizes():
+    stats = H.parse_collectives(SAMPLE, bf16_model=False)
+    assert stats.count == 4
+    assert stats.op_bytes["all-gather"] == 512 * 1024 * 4
+    assert stats.op_bytes["all-reduce"] == 32 * 256 * 2
+    assert stats.op_bytes["reduce-scatter"] == 64 * 4
+    assert stats.op_bytes["collective-permute"] == 16 * 2
+
+
+def test_group_size_formats():
+    assert H._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert H._group_size("replica_groups=[4,2]<=[2,4]T(1,0)") == 2
+    assert H._group_size("no groups here") == 1
+
+
+def test_bf16_correction_halves_large_f32():
+    raw = H.parse_collectives(SAMPLE, bf16_model=False)
+    corr = H.parse_collectives(SAMPLE, bf16_model=True)
+    # the big f32 all-gather gets halved; small/bf16 ops unchanged
+    assert corr.op_bytes["all-gather"] == raw.op_bytes["all-gather"] // 2
+    assert corr.op_bytes["all-reduce"] == raw.op_bytes["all-reduce"]
+    assert corr.wire_bytes < raw.wire_bytes == corr.wire_bytes_raw
+
+
+def test_roofline_terms_and_dominance():
+    coll = H.CollectiveStats({"all-reduce": 10}, 10, int(50e9), 1)
+    r = H.Roofline(
+        flops_per_device=197e12,  # exactly 1s of compute
+        bytes_per_device=819e9,  # 0.5s corrected memory
+        collective=coll,  # 1s of wire
+        num_devices=4,
+    )
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 0.5) < 1e-9
+    assert abs(r.collective_s - 1.0) < 1e-9
+    assert r.dominant in ("compute", "collective")
+    assert r.step_time_s == 1.0
+    assert r.flops_global == 197e12 * 4
+
+
+def test_extrapolate_depth():
+    c1 = H.CollectiveStats({"all-reduce": 100}, 100, 1000, 2, 2000)
+    c2 = H.CollectiveStats({"all-reduce": 160}, 160, 1600, 3, 3200)
+    r1 = H.Roofline(10.0, 100.0, c1, 4)
+    r2 = H.Roofline(16.0, 160.0, c2, 4)
+    out = H.extrapolate(r1, r2, n_units=10)
+    assert out.flops_per_device == 10.0 + 9 * 6.0
+    assert out.bytes_per_device == 100.0 + 9 * 60.0
+    assert out.collective.wire_bytes == 1000 + 9 * 600
+    assert out.collective.wire_bytes_raw == 2000 + 9 * 1200
+
+
+def test_model_flops():
+    from repro.configs import SHAPES, get_arch
+
+    cfg = get_arch("yi-9b")
+    mf = H.model_flops(cfg, SHAPES["train_4k"])
+    assert abs(mf - 6 * cfg.param_count() * 256 * 4096) / mf < 1e-9
+    dec = H.model_flops(cfg, SHAPES["decode_32k"])
+    assert dec == 2 * cfg.active_param_count() * 128

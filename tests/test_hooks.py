@@ -1,0 +1,109 @@
+import numpy as np
+import pytest
+
+from repro.core import (
+    Batch,
+    Hook,
+    HookManager,
+    LambdaHook,
+    RecipeError,
+    RecipeRegistry,
+    resolve_order,
+    RECIPE_TGB_LINK,
+    RECIPE_ANALYTICS_DOS,
+)
+from repro.core.tg_hooks import DOSEstimateHook, NegativeEdgeHook, PadBatchHook
+
+
+def _hook(name, requires, produces):
+    def fn(b):
+        for p in produces:
+            b[p] = np.zeros(1)
+        return b
+
+    return LambdaHook(fn, requires, produces, name)
+
+
+def test_topological_order_respects_contracts():
+    a = _hook("a", {"src"}, {"x"})
+    b = _hook("b", {"x"}, {"y"})
+    c = _hook("c", {"y", "x"}, {"z"})
+    order = resolve_order([c, b, a])
+    assert [h.name for h in order] == ["a", "b", "c"]
+
+
+def test_registration_order_breaks_ties():
+    a = _hook("a", {"src"}, {"x"})
+    b = _hook("b", {"src"}, {"y"})
+    order = resolve_order([a, b])
+    assert [h.name for h in order] == ["a", "b"]
+
+
+def test_unsatisfied_requirement_fails_fast():
+    with pytest.raises(RecipeError, match="requires"):
+        resolve_order([_hook("a", {"nonexistent"}, {"x"})])
+
+
+def test_cycle_detection():
+    a = _hook("a", {"y"}, {"x"})
+    b = _hook("b", {"x"}, {"y"})
+    with pytest.raises(RecipeError, match="cycle"):
+        resolve_order([a, b])
+
+
+def test_hook_must_produce_declared_attrs():
+    bad = LambdaHook(lambda b: b, {"src"}, {"never_produced"}, "bad")
+    m = HookManager()
+    m.register(bad)
+    batch = Batch({"src": np.zeros(3), "dst": np.zeros(3), "time": np.zeros(3)})
+    with pytest.raises(RecipeError, match="did not produce"):
+        m.execute(batch)
+
+
+def test_keyed_activation_groups():
+    m = HookManager()
+    m.register(_hook("shared", {"src"}, {"s"}))
+    m.register(_hook("train_only", {"src"}, {"t"}), key="train")
+    batch = Batch({"src": np.zeros(2), "dst": np.zeros(2), "time": np.zeros(2)})
+    with m.activate("train"):
+        out = m.execute(Batch(batch.as_dict()))
+        assert "t" in out and "s" in out
+    with m.activate("eval"):
+        out = m.execute(Batch(batch.as_dict()))
+        assert "t" not in out and "s" in out
+
+
+def test_reset_state_resets_all_groups():
+    m = HookManager()
+    h = NegativeEdgeHook(10, strategy="historical")
+    m.register(h, key="train")
+    h._sampler._hist.add((1, 2))
+    m.reset_state()
+    assert not h._sampler._hist
+
+
+def test_recipe_registry():
+    assert RECIPE_TGB_LINK in RecipeRegistry.available()
+    m = RecipeRegistry.build(RECIPE_TGB_LINK, num_nodes=10, k=2, batch_size=8)
+    assert m.hooks("train")
+    with pytest.raises(KeyError):
+        RecipeRegistry.build("nope")
+
+
+def test_pad_hook_fixed_shapes():
+    h = PadBatchHook(16)
+    b = Batch({"src": np.arange(5), "dst": np.arange(5), "time": np.arange(5)})
+    out = h(b)
+    assert out["src"].shape == (16,)
+    assert out["batch_mask"].sum() == 5
+
+
+def test_dos_hook_moments():
+    h = DOSEstimateHook(num_nodes=50, num_moments=6)
+    rng = np.random.default_rng(0)
+    b = Batch({"src": rng.integers(0, 50, 100), "dst": rng.integers(0, 50, 100),
+               "time": np.arange(100)})
+    out = h(b)
+    assert out["dos"].shape == (6,)
+    # moment 0 of the Chebyshev expansion is ~1 (normalized trace)
+    assert abs(out["dos"][0] - 1.0) < 0.2

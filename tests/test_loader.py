@@ -1,0 +1,100 @@
+import numpy as np
+import pytest
+
+from repro.core import (
+    DGData,
+    DGraph,
+    DGDataLoader,
+    RecipeRegistry,
+    TimeDelta,
+    RECIPE_TGB_LINK,
+    TRAIN_KEY,
+    EVAL_KEY,
+)
+
+
+def _graph(n=300, t_hi=7200):
+    rng = np.random.default_rng(0)
+    return DGData.from_arrays(
+        rng.integers(0, 30, n), rng.integers(0, 30, n),
+        np.sort(rng.integers(0, t_hi, n)), granularity="s",
+    )
+
+
+def test_iterate_by_events():
+    g = DGraph(_graph(250))
+    loader = DGDataLoader(g, None, batch_size=64)
+    sizes = [b.num_events for b in loader]
+    assert sizes[:-1] == [64] * (len(sizes) - 1)
+    assert sum(sizes) == 250
+    assert len(loader) == len(sizes)
+
+
+def test_iterate_by_events_drop_last():
+    g = DGraph(_graph(250))
+    loader = DGDataLoader(g, None, batch_size=64, drop_last=True)
+    assert all(b.num_events == 64 for b in loader)
+
+
+def test_iterate_by_time_windows():
+    g = DGraph(_graph(300, t_hi=7200))
+    loader = DGDataLoader(g, None, batch_size=None, batch_unit="h")
+    batches = list(loader)
+    assert len(batches) <= len(loader)
+    for b in batches:
+        lo, hi = b.meta["window"]
+        assert hi - lo <= 3600
+        assert (b["time"] >= lo).all() and (b["time"] < hi).all()
+    assert sum(b.num_events for b in batches) == 300
+
+
+def test_iterate_by_time_requires_real_granularity():
+    d = DGData.from_arrays([0], [1], [5], granularity=TimeDelta.event())
+    with pytest.raises(ValueError):
+        DGDataLoader(DGraph(d), None, batch_size=None, batch_unit="h")
+
+
+def test_batch_unit_must_be_coarser():
+    d = _graph()
+    with pytest.raises(ValueError):
+        DGDataLoader(DGraph(d), None, batch_size=None, batch_unit=TimeDelta("ms"))
+
+
+def test_exactly_one_iteration_mode():
+    g = DGraph(_graph())
+    with pytest.raises(ValueError):
+        DGDataLoader(g, None, batch_size=None, batch_unit=None)
+    with pytest.raises(ValueError):
+        DGDataLoader(g, None, batch_size=10, batch_unit="h")
+
+
+def test_full_recipe_pipeline_shapes():
+    data = _graph(200)
+    m = RecipeRegistry.build(RECIPE_TGB_LINK, num_nodes=30, k=4, batch_size=32,
+                             eval_negatives=7)
+    loader = DGDataLoader(DGraph(data), m, batch_size=32)
+    with m.activate(TRAIN_KEY):
+        for b in loader:
+            assert b["src"].shape == (32,)
+            assert b["neg"].shape == (32, 1)
+            assert b["nbr_ids"].shape == (32 * 3, 4)
+            assert b["batch_mask"].shape == (32,)
+    m.reset_state()
+    with m.activate(EVAL_KEY):
+        b = next(iter(loader))
+        assert b["neg"].shape == (32, 7)
+        assert b["nbr_ids"].shape == (32 * (2 + 7), 4)
+
+
+def test_eval_negatives_deterministic_per_epoch():
+    data = _graph(100)
+    m = RecipeRegistry.build(RECIPE_TGB_LINK, num_nodes=30, k=2, batch_size=32,
+                             eval_negatives=5)
+    loader = DGDataLoader(DGraph(data), m, batch_size=32)
+    with m.activate(EVAL_KEY):
+        first = [np.asarray(b["neg"]) for b in loader]
+    m.reset_state()
+    with m.activate(EVAL_KEY):
+        second = [np.asarray(b["neg"]) for b in loader]
+    for a, b in zip(first, second):
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,45 @@
+import numpy as np
+
+from repro.train import auc, mrr, ndcg_at_k
+
+
+def test_mrr_perfect():
+    pos = np.array([5.0, 5.0])
+    neg = np.zeros((2, 10))
+    assert mrr(pos, neg) == 1.0
+
+
+def test_mrr_worst():
+    pos = np.array([0.0])
+    neg = np.ones((1, 9))
+    assert abs(mrr(pos, neg) - 0.1) < 1e-6
+
+
+def test_mrr_ties_midrank():
+    pos = np.array([1.0])
+    neg = np.array([[1.0, 0.0]])  # one tie -> rank 1.5
+    assert abs(mrr(pos, neg) - 1 / 1.5) < 1e-6
+
+
+def test_mrr_mask():
+    pos = np.array([5.0, 0.0])
+    neg = np.stack([np.zeros(5), np.ones(5)])
+    assert mrr(pos, neg, mask=np.array([True, False])) == 1.0
+
+
+def test_auc():
+    assert auc([0.9, 0.8, 0.2, 0.1], [1, 1, 0, 0]) == 1.0
+    assert auc([0.1, 0.2, 0.8, 0.9], [1, 1, 0, 0]) == 0.0
+    assert abs(auc([0.5, 0.5, 0.5, 0.5], [1, 1, 0, 0]) - 0.5) < 1e-9
+
+
+def test_auc_degenerate():
+    assert auc([0.5, 0.2], [1, 1]) == 0.5
+
+
+def test_ndcg():
+    pred = np.array([[3.0, 2.0, 1.0]])
+    target = np.array([[3.0, 2.0, 1.0]])
+    assert abs(ndcg_at_k(pred, target, k=3) - 1.0) < 1e-9
+    worst = np.array([[1.0, 2.0, 3.0]])
+    assert ndcg_at_k(worst, target, k=3) < 1.0

@@ -1,0 +1,61 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    warmup_cosine,
+)
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(params, g, opt, cfg)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_moments_are_f32_for_bf16_params():
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    opt = adamw_init(params)
+    assert opt["mu"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    new_p, new_opt = adamw_update(params, g, opt, AdamWConfig(lr=0.1))
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert new_opt["nu"]["w"].dtype == jnp.float32
+
+
+def test_weight_decay_shrinks():
+    params = {"w": jnp.asarray([10.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.1)
+    g = {"w": jnp.asarray([0.0])}
+    p2, _ = adamw_update(params, g, opt, cfg)
+    assert float(p2["w"][0]) < 10.0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-6
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    same, _ = clip_by_global_norm(tree, 100.0)
+    np.testing.assert_allclose(same["a"], tree["a"])
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(0, 10, 100)) == 0.0
+    assert abs(float(warmup_cosine(10, 10, 100)) - 1.0) < 1e-6
+    assert float(warmup_cosine(100, 10, 100)) >= 0.1 - 1e-6
+    assert float(warmup_cosine(50, 10, 100)) < 1.0

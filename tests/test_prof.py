@@ -1,0 +1,18 @@
+import time
+
+from repro.utils import Profiler
+
+
+def test_profiler_accumulates_and_reports():
+    p = Profiler()
+    for _ in range(3):
+        with p("outer"):
+            with p("inner"):
+                time.sleep(0.002)
+    assert p.counts["outer"] == 3
+    assert p.counts["outer.inner"] == 3
+    assert p.times["outer"] >= p.times["outer.inner"] > 0
+    rep = p.report(min_pct=0.0)
+    assert "outer" in rep and "inner" in rep
+    p.reset()
+    assert p.total() == 0.0
