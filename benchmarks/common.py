@@ -1,10 +1,19 @@
 """Shared benchmark utilities. Every table benchmark prints CSV rows:
-``name,us_per_call,derived`` (derived = speedup / metric / note)."""
+``name,us_per_call,derived`` (derived = speedup / metric / note).
+
+Set ``BENCH_JSON=/path/to/bench.jsonl`` to additionally append one JSON
+object per ``emit`` call (name, us, derived, unix timestamp, git revision).
+Appending keeps a trajectory across runs, so regressions show up as a time
+series rather than a single stale number.
+"""
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 
 def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
@@ -20,5 +29,27 @@ def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
     return times[len(times) // 2]
 
 
+def _git_rev() -> Optional[str]:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except Exception:
+        return None
+
+
 def emit(name: str, seconds: float, derived: str = "") -> None:
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    path = os.environ.get("BENCH_JSON")
+    if path:
+        record = {
+            "name": name,
+            "us": round(seconds * 1e6, 1),
+            "derived": derived,
+            "ts": round(time.time(), 3),
+            "rev": _git_rev(),
+        }
+        with open(path, "a") as f:
+            f.write(json.dumps(record) + "\n")

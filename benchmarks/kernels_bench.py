@@ -1,13 +1,18 @@
 """Kernel microbenchmarks: jnp reference path wall-time on this host (the
 Pallas path needs a TPU; interpret mode is correctness-only) + oracle
-agreement spot checks."""
+agreement spot checks + the recency-sampler host-vs-device microbenchmark
+(the tentpole measurement for the device-resident sampling pipeline)."""
 
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.device_sampler import DeviceRecencySampler, _sample, _update
+from repro.core.sampler import RecencySampler
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.segment_reduce.ref import segment_sum_ref
 from repro.kernels.ssd_chunk.ref import ssd_ref
@@ -16,8 +21,81 @@ from repro.kernels.temporal_attention.ref import temporal_attention_ref
 from benchmarks.common import emit, timeit
 
 
+def bench_recency_sampler(B: int = 200, K: int = 20, N: int = 10_000,
+                          num_batches: int = 50) -> None:
+    """update+sample wall time per batch, host numpy vs device JAX.
+
+    Two seed-set shapes, both at B=200/K=20 (the TGB link recipe's default):
+      * train: S = 3B seeds (src + dst + 1 negative per event)
+      * eval:  S = 22B seeds (src + dst + 20 one-vs-many negatives)
+
+    The device path runs the whole batch stream inside one jitted
+    ``lax.scan`` — exactly how a device-resident pipeline amortizes dispatch.
+    Each iteration applies the *previous* batch's update before sampling the
+    current batch's seeds; that is the same predict-then-reveal order as the
+    per-batch loop (state seen by sample(i) = after batches 0..i-1), and the
+    write-before-read schedule lets XLA update the buffers in place instead
+    of copying them every step.
+    """
+    rng = np.random.default_rng(0)
+    shapes = {"train": 3 * B, "eval": 22 * B}
+    src = rng.integers(0, N, (num_batches, B))
+    dst = rng.integers(0, N, (num_batches, B))
+    t = np.sort(rng.integers(0, 100, (num_batches, B)), axis=1)
+    t += np.arange(num_batches)[:, None] * 100
+    eids = rng.integers(0, 10**6, (num_batches, B))
+    seeds = {k: rng.integers(0, N, (num_batches, s)) for k, s in shapes.items()}
+
+    # Shifted update stream: iteration i applies batch i-1 (first is a no-op).
+    zero = np.zeros((1, B), np.int64)
+    usrc = np.concatenate([zero, src[:-1]])
+    udst = np.concatenate([zero, dst[:-1]])
+    ut = np.concatenate([zero, t[:-1]])
+    ue = np.concatenate([zero, eids[:-1]])
+    uvalid = np.concatenate(
+        [np.zeros((1, B), bool), np.ones((num_batches - 1, B), bool)])
+
+    for shape_name, S in shapes.items():
+        se = seeds[shape_name]
+
+        def run_numpy():
+            s = RecencySampler(N, K)
+            for i in range(num_batches):
+                s.sample(se[i])
+                s.update(src[i], dst[i], t[i], eids[i])
+
+        t_np = timeit(run_numpy, repeats=7) / num_batches
+
+        dev = DeviceRecencySampler(N, K)
+        xs = tuple(jnp.asarray(a, jnp.int32)
+                   for a in (usrc, udst, ut, ue, se)) + (jnp.asarray(uvalid),)
+
+        @jax.jit
+        def run_stream(state, xs):
+            def step(state, x):
+                s_, d_, t_, e_, q_, v_ = x
+                state = _update(state, s_, d_, t_, e_, v_, k=K,
+                                directed=False)
+                ids, *_ = _sample(state, q_, k=K)
+                return state, ids
+            return jax.lax.scan(step, state, xs)
+
+        jax.block_until_ready(run_stream(dev.state, xs))  # compile
+        t_dev = timeit(
+            lambda: jax.block_until_ready(run_stream(dev.state, xs)),
+            repeats=7,
+        ) / num_batches
+
+        emit(f"sampler/recency_numpy_{shape_name}", t_np,
+             f"B{B} K{K} N{N} S{S}")
+        emit(f"sampler/recency_device_{shape_name}", t_dev,
+             f"B{B} K{K} N{N} S{S} speedup={t_np / t_dev:.2f}x")
+
+
 def run() -> None:
     rng = np.random.default_rng(0)
+
+    bench_recency_sampler()
 
     q = jnp.asarray(rng.standard_normal((2, 8, 256, 64)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((2, 2, 256, 64)), jnp.float32)

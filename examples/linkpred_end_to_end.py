@@ -20,6 +20,9 @@ def main():
     p.add_argument("--dataset", default="wikipedia")
     p.add_argument("--epochs", type=int, default=2)
     p.add_argument("--ckpt-dir", default="checkpoints/linkpred")
+    p.add_argument("--device-sampling", action="store_true",
+                   help="device-resident recency buffers + prefetching loader "
+                        "(bit-identical outputs to the host numpy sampler)")
     args = p.parse_args()
 
     data = generate(args.dataset, scale=args.scale)
@@ -30,7 +33,8 @@ def main():
     for model in ["tgat", "graphmixer", "tpnet", "tgn"]:
         kwargs = {"num_layers": 1} if model == "tgat" else None
         tr = LinkPredictionTrainer(model, data, batch_size=200, k=10,
-                                   eval_negatives=20, model_kwargs=kwargs)
+                                   eval_negatives=20, model_kwargs=kwargs,
+                                   device_sampling=args.device_sampling)
         for epoch in range(args.epochs):
             loss, secs = tr.train_epoch()
             print(f"[{model}] epoch {epoch}: loss={loss:.4f} ({secs:.1f}s)")

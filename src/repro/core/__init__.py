@@ -6,12 +6,13 @@ temporal neighbor sampling.
 """
 
 from repro.core.batch import Batch
+from repro.core.device_sampler import DeviceRecencySampler
 from repro.core.discretize import discretize, discretize_jax, discretize_naive
 from repro.core.events import EdgeEvent, NodeEvent
 from repro.core.granularity import EventOrderedError, TimeDelta
 from repro.core.graph import DGData, DGraph
 from repro.core.hooks import BASE_ATTRS, Hook, HookManager, LambdaHook, RecipeError, resolve_order
-from repro.core.loader import DGDataLoader
+from repro.core.loader import DGDataLoader, PrefetchLoader
 from repro.core.negatives import NegativeEdgeSampler
 from repro.core.recipes import (
     EVAL_KEY,
@@ -32,9 +33,11 @@ from repro.core.sampler import (
 __all__ = [
     "Batch",
     "BASE_ATTRS",
+    "DeviceRecencySampler",
     "DGData",
     "DGraph",
     "DGDataLoader",
+    "PrefetchLoader",
     "EdgeEvent",
     "EventOrderedError",
     "Hook",

@@ -153,6 +153,8 @@ def discretize_jax(data: DGData, new_gran: TimeDelta, reduce: str = "first") -> 
     n = max(int(data.num_nodes), 1)
     # Dense composite key; guard overflow by falling back to numpy on huge ids.
     tmax = int(ct.max()) + 1 if len(data.edge_t) else 1
+    if data.node_t is not None and len(data.node_t):
+        tmax = max(tmax, int(data.node_t.max()) // k + 1)
     if tmax * n * n >= 2**62:
         return discretize(data, new_gran, reduce=reduce, backend="numpy")
     key = (ct * n + src) * n + dst
@@ -191,12 +193,29 @@ def discretize_jax(data: DGData, new_gran: TimeDelta, reduce: str = "first") -> 
 
     node_kwargs = {}
     if data.node_ids is not None:
-        nd = discretize(
-            dataclasses.replace(data, src=data.src[:0], dst=data.dst[:0],
-                                edge_t=data.edge_t[:0], edge_feats=None),
-            new_gran, reduce="last", backend="numpy",
-        )
-        node_kwargs = dict(node_ids=nd.node_ids, node_t=nd.node_t, node_feats=nd.node_feats)
+        # Node events collapse through the same device segment ops as edges,
+        # keyed by (coarse tick, node) with reduction 'last' (most recent
+        # feature wins within a bucket; inputs are time-sorted so the max
+        # within-segment index is the latest event).
+        nids = jnp.asarray(data.node_ids)
+        nct = jnp.asarray(data.node_t) // k
+        if len(data.node_ids):
+            nkey = nct * n + nids
+            nukey, nseg = jnp.unique(nkey, return_inverse=True)
+            ng = len(nukey)
+            node_kwargs = dict(
+                node_ids=np.asarray(nukey % n),
+                node_t=np.asarray(nukey // n),
+            )
+            if data.node_feats is not None:
+                npick = jops.segment_max(jnp.arange(len(nseg)), nseg, ng)
+                node_kwargs["node_feats"] = np.asarray(
+                    jnp.asarray(data.node_feats)[npick]
+                )
+        else:
+            node_kwargs = dict(
+                node_ids=np.asarray(nids), node_t=np.asarray(nct)
+            )
 
     return DGData.from_arrays(
         np.asarray(usrc),

@@ -53,6 +53,17 @@ class Hook:
     def reset_state(self) -> None:
         pass
 
+    # Checkpointable hooks override these (return/accept a dict of numpy
+    # arrays; the default is stateless).
+    def state_dict(self) -> Dict:
+        return {}
+
+    def load_state_dict(self, state: Dict) -> None:
+        if state:
+            raise ValueError(
+                f"hook {self.name!r} is stateless but got state {sorted(state)}"
+            )
+
     def __call__(self, batch: Batch) -> Batch:  # pragma: no cover - abstract
         raise NotImplementedError
 
@@ -216,6 +227,31 @@ class HookManager:
         for group in self._groups.values():
             for hook in group:
                 hook.reset_state()
+
+    def state_dict(self) -> Dict[str, Dict]:
+        """Collect every stateful hook's state, keyed ``<group>/<idx>/<name>``
+        (registration position makes keys stable across rebuilds). Leaves are
+        numpy arrays, so the result drops straight into
+        ``distributed.checkpoint.save``."""
+        out: Dict[str, Dict] = {}
+        for key, group in self._groups.items():
+            for i, hook in enumerate(group):
+                state = hook.state_dict()
+                if state:
+                    out[f"{key}/{i}/{hook.name}"] = state
+        return out
+
+    def load_state_dict(self, state: Dict[str, Dict]) -> None:
+        seen = set()
+        for key, group in self._groups.items():
+            for i, hook in enumerate(group):
+                k = f"{key}/{i}/{hook.name}"
+                if k in state:
+                    hook.load_state_dict(state[k])
+                    seen.add(k)
+        missing = set(state) - seen
+        if missing:
+            raise KeyError(f"no registered hook matches state {sorted(missing)}")
 
 
 class _Activation:

@@ -10,10 +10,22 @@
 
 Each batch is materialized from storage, passed through the ``HookManager``
 pipeline, and returned as a ``Batch``.
+
+``PrefetchLoader`` overlaps batch preparation with device compute: a
+background thread runs the inner loader (materialization + the full hook
+pipeline) and stages each batch's arrays onto the device with
+``jax.device_put`` while the jitted train step consumes the previous batch.
+A bounded queue (default depth 2 = double buffering) provides back-pressure
+so at most ``prefetch`` prepared batches are in flight; hook state stays
+correct because the hook pipeline still executes strictly sequentially, just
+one batch ahead of the consumer. This is the loader half of the
+``device_sampling=True`` pipeline in ``train.tg_trainer``.
 """
 
 from __future__ import annotations
 
+import queue
+import threading
 from typing import Iterator, Optional
 
 import numpy as np
@@ -116,3 +128,73 @@ class DGDataLoader:
         if self.manager is None:
             return batch
         return self.manager.execute(batch)
+
+
+class PrefetchLoader:
+    """Double-buffered device-staging wrapper around any batch iterable.
+
+    While the consumer (the jitted train/eval step) is busy with batch ``i``,
+    a daemon thread prepares batch ``i+1``: it pulls from ``inner`` (which
+    runs the hook pipeline) and eagerly ships every numpy array to ``device``
+    via ``jax.device_put`` (int64 narrowed to int32, matching
+    ``DeviceTransferHook``). Arrays already on device pass through untouched,
+    so it composes with device-resident hooks.
+
+    Exceptions raised in the producer are re-raised in the consumer; the
+    producer thread exits promptly when the consumer stops iterating
+    (``close``) because the bounded queue blocks with a timeout and checks a
+    stop flag.
+    """
+
+    _END = object()
+
+    def __init__(self, inner, device=None, prefetch: int = 2):
+        if prefetch < 1:
+            raise ValueError("prefetch depth must be >= 1")
+        self.inner = inner
+        self._device = device
+        self.prefetch = prefetch
+
+    def __len__(self) -> int:
+        return len(self.inner)
+
+    def _stage(self, batch: Batch) -> Batch:
+        from repro.core.tg_hooks import stage_batch
+
+        return stage_batch(batch, self._device)
+
+    def __iter__(self) -> Iterator[Batch]:
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def put_or_stop(item) -> bool:
+            """Bounded put that aborts when the consumer has left."""
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def produce():
+            try:
+                for batch in self.inner:
+                    if not put_or_stop(self._stage(batch)):
+                        return
+                put_or_stop(self._END)
+            except BaseException as e:  # surfaced on the consumer side
+                put_or_stop(e)
+
+        thread = threading.Thread(target=produce, daemon=True)
+        thread.start()
+        try:
+            while True:
+                item = q.get()
+                if item is self._END:
+                    return
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            stop.set()

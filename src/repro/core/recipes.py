@@ -8,7 +8,10 @@ hooks under the right activation keys:
 
   RECIPE_TGB_LINK      : training negatives (random) + eval one-vs-many
                          negatives + recency neighbors (+dedup) + edge-feature
-                         lookup + pad + device transfer.
+                         lookup + pad + device transfer. Pass
+                         ``device_sampling=True`` to swap the host numpy
+                         recency buffers for the device-resident JAX sampler
+                         (same outputs; neighbor tensors born on device).
   RECIPE_TGB_NODE      : recency neighbors + pad + device transfer (labels
                          come from the dataset).
   RECIPE_DTDG_SNAPSHOT : snapshot pipeline (no sampling; models consume whole
@@ -24,6 +27,7 @@ import numpy as np
 
 from repro.core.hooks import HookManager
 from repro.core.tg_hooks import (
+    DeviceRecencyNeighborHook,
     DeviceTransferHook,
     DOSEstimateHook,
     EdgeFeatureLookupHook,
@@ -76,6 +80,7 @@ def _tgb_link(
     dst_pool: Optional[np.ndarray] = None,
     seed: int = 0,
     device=None,
+    device_sampling: bool = False,
 ) -> HookManager:
     m = HookManager()
     # Padding runs FIRST so negatives/neighbor tensors come out fixed-shape;
@@ -92,7 +97,13 @@ def _tgb_link(
     )
     # One shared recency sampler serves both train and eval keys (state is
     # shared; buffer updates exclude padding and happen once per batch).
-    m.register(RecencyNeighborHook(num_nodes, k, num_hops=num_hops, dedup=True))
+    # ``device_sampling`` swaps the host numpy circular buffers for the
+    # JAX device-resident sampler (same outputs, no host round-trip).
+    if device_sampling:
+        m.register(DeviceRecencyNeighborHook(num_nodes, k, num_hops=num_hops,
+                                             device=device))
+    else:
+        m.register(RecencyNeighborHook(num_nodes, k, num_hops=num_hops, dedup=True))
     m.register(EdgeFeatureLookupHook(edge_feats, edge_feat_dim))
     if num_hops == 2:
         m.register(EdgeFeatureLookupHook(edge_feats, edge_feat_dim, prefix="nbr2"))

@@ -17,6 +17,13 @@ The scatter trick for duplicate seeds inside one batch: positions are
 assigned per-node sequentially via a counting pass (np.add.at on a cursor
 array), so multiple same-node events in one batch land in distinct slots in
 chronological order — matching sequential insertion semantics exactly.
+
+This module is the *host* implementation. Its device twin,
+``repro.core.device_sampler.DeviceRecencySampler`` (selected by the
+``device_sampling=True`` trainer/recipe flag), keeps bit-identical buffers
+on the accelerator as a JAX pytree with jit-compiled update/sample; the two
+share the ``state_dict`` checkpoint contract and are interchangeable. The
+host version stays the parity oracle for tests and the CPU fallback.
 """
 
 from __future__ import annotations
@@ -215,6 +222,16 @@ class UniformSampler:
         self._adj_e = es[order]
         counts = np.bincount(nodes, minlength=self.num_nodes)
         self._indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        # Composite (node, time-rank) key, globally sorted because the
+        # adjacency is node-major with times ascending within each node.
+        # Ranking times through the unique-value table keeps the key range at
+        # num_nodes * (#distinct times + 1), immune to raw-timestamp overflow;
+        # one global searchsorted on this key replaces the per-seed binary
+        # search loop in ``sample``.
+        self._tvals = np.unique(self._adj_t)
+        self._key_base = len(self._tvals) + 1
+        tranks = np.searchsorted(self._tvals, self._adj_t)
+        self._adj_key = nodes[order] * self._key_base + tranks
         self._built = True
 
     def reset_state(self) -> None:
@@ -227,18 +244,17 @@ class UniformSampler:
         query_t = np.asarray(query_t, dtype=np.int64)
         B, K = len(seeds), self.k
         starts = self._indptr[seeds]
-        ends = self._indptr[seeds + 1]
-        # Per-seed count of neighbors strictly before query_t: binary search
-        # in each node's time-sorted slice, vectorized via global searchsorted
-        # on offsets (times within a node's slice are sorted).
-        valid_ends = np.empty(B, dtype=np.int64)
-        for i in range(B):  # B is small (batch); slices differ per node
-            valid_ends[i] = starts[i] + np.searchsorted(
-                self._adj_t[starts[i]:ends[i]], query_t[i], side="left"
-            )
+        # Per-seed count of neighbors strictly before query_t via one global
+        # searchsorted on the (node, time-rank) composite key: entries with
+        # key < seed * base + rank(query_t) are exactly "nodes before seed"
+        # plus "seed's neighbors with t < query_t" (rank() is monotone).
+        qranks = np.searchsorted(self._tvals, query_t, side="left")
+        valid_ends = np.searchsorted(
+            self._adj_key, seeds * self._key_base + qranks, side="left"
+        )
         n_valid = valid_ends - starts
         has = n_valid > 0
-        draw = self._rng.integers(0, np.maximum(n_valid, 1), size=(B, K))
+        draw = self._rng.integers(0, np.maximum(n_valid, 1)[:, None], size=(B, K))
         idx = np.minimum(starts[:, None] + draw, len(self._adj_nbr) - 1)
         ids = np.where(has[:, None], self._adj_nbr[idx], -1)
         times = np.where(has[:, None], self._adj_t[idx], 0)

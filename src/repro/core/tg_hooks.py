@@ -2,8 +2,18 @@
 construction, TGB-style evaluation negatives, device transfer, padding, and
 analytics (density-of-states estimation).
 
-All hooks produce fixed-shape numpy tensors (padded + masked) so the jitted
-model steps compile exactly once per shape.
+All hooks produce fixed-shape tensors (padded + masked) so the jitted model
+steps compile exactly once per shape. Sampling hooks come in two flavors:
+
+  * ``RecencyNeighborHook``       — host numpy circular buffers (the seed
+                                    implementation; parity oracle).
+  * ``DeviceRecencyNeighborHook`` — the ``device_sampling=True`` pipeline:
+                                    buffers live on the accelerator as a JAX
+                                    pytree (``DeviceRecencySampler``) and
+                                    both the batch insert and the K-recent
+                                    gather run jit-compiled on device, so
+                                    neighbor tensors are born device-resident
+                                    and never cross PCIe.
 """
 
 from __future__ import annotations
@@ -13,6 +23,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.batch import Batch
+from repro.core.device_sampler import DeviceRecencySampler
 from repro.core.hooks import Hook
 from repro.core.negatives import NegativeEdgeSampler
 from repro.core.sampler import RecencySampler, UniformSampler
@@ -113,6 +124,12 @@ class RecencyNeighborHook(Hook):
     def reset_state(self) -> None:
         self.sampler.reset_state()
 
+    def state_dict(self) -> dict:
+        return self.sampler.state_dict()
+
+    def load_state_dict(self, state: dict) -> None:
+        self.sampler.load_state_dict(state)
+
     def _seeds(self, batch: Batch):
         src, dst, t = batch["src"], batch["dst"], batch["time"]
         seeds = [src, dst]
@@ -172,6 +189,95 @@ class RecencyNeighborHook(Hook):
         return batch
 
 
+class DeviceRecencyNeighborHook(Hook):
+    """Device-resident temporal neighbor sampling (``device_sampling=True``).
+
+    Same contract as ``RecencyNeighborHook`` (hop-1/hop-2 neighborhoods,
+    predict-then-reveal buffer updates), but backed by
+    ``DeviceRecencySampler``: state stays on the accelerator and both
+    ``update`` and ``sample`` are jit-compiled. The produced neighbor tensors
+    are JAX device arrays — the downstream ``DeviceTransferHook`` passes them
+    through untouched.
+
+    Differences from the host hook, both deliberate:
+
+      * no batch-level de-duplication — on device the K-recent lookup is a
+        single gather, so sampling all ``(2 + num_negatives) * B`` seeds
+        directly is cheaper than a host ``np.unique`` round-trip and keeps
+        shapes fixed (one XLA compilation per activation key);
+      * buffer updates consume the full padded batch plus ``batch_mask`` as
+        a validity mask instead of slicing, again for fixed shapes.
+    """
+
+    def __init__(self, num_nodes: int, k: int, num_hops: int = 1,
+                 include_negatives: bool = True, update_buffer: bool = True,
+                 device=None):
+        if num_hops not in (1, 2):
+            raise ValueError("num_hops must be 1 or 2")
+        produces = {"seed_nodes", "seed_times", "nbr_ids", "nbr_times",
+                    "nbr_eids", "nbr_mask"}
+        if num_hops == 2:
+            produces |= {"nbr2_ids", "nbr2_times", "nbr2_eids", "nbr2_mask"}
+        requires = {"src", "dst", "time"} | ({"neg"} if include_negatives else set())
+        super().__init__(requires=requires, produces=produces)
+        self.sampler = DeviceRecencySampler(num_nodes, k, device=device)
+        self.k = k
+        self.num_hops = num_hops
+        self.include_negatives = include_negatives
+        self.update_buffer = update_buffer
+
+    def reset_state(self) -> None:
+        self.sampler.reset_state()
+
+    def state_dict(self) -> dict:
+        return self.sampler.state_dict()
+
+    def load_state_dict(self, state: dict) -> None:
+        self.sampler.load_state_dict(state)
+
+    def __call__(self, batch: Batch) -> Batch:
+        import jax.numpy as jnp
+
+        src, dst, t = batch["src"], batch["dst"], batch["time"]
+        seeds = [np.asarray(src), np.asarray(dst)]
+        times = [np.asarray(t), np.asarray(t)]
+        if self.include_negatives and "neg" in batch:
+            neg = np.asarray(batch["neg"])  # (B, Nneg)
+            seeds.append(neg.reshape(-1))
+            times.append(np.repeat(np.asarray(t), neg.shape[1]))
+        seed_nodes = np.concatenate(seeds).astype(np.int64)
+        seed_times = np.concatenate(times).astype(np.int64)
+
+        blk = self.sampler.sample(seed_nodes)
+        batch["seed_nodes"], batch["seed_times"] = seed_nodes, seed_times
+        batch["nbr_ids"], batch["nbr_times"] = blk.nbr_ids, blk.nbr_times
+        batch["nbr_eids"], batch["nbr_mask"] = blk.nbr_eids, blk.mask
+
+        if self.num_hops == 2:
+            flat = blk.nbr_ids.reshape(-1)
+            safe = jnp.where(flat >= 0, flat, 0)
+            blk2 = self.sampler.sample(safe)
+            pad = (flat < 0)[:, None]
+            batch["nbr2_ids"] = jnp.where(pad, -1, blk2.nbr_ids)
+            batch["nbr2_times"] = jnp.where(pad, 0, blk2.nbr_times)
+            batch["nbr2_eids"] = jnp.where(pad, -1, blk2.nbr_eids)
+            batch["nbr2_mask"] = jnp.where(pad, False, blk2.mask)
+
+        if self.update_buffer:
+            eids = batch.meta.get("eids")
+            n = len(np.asarray(src))
+            if eids is None:
+                eids_full = np.full(n, -1, dtype=np.int64)
+            else:
+                eids_full = np.full(n, -1, dtype=np.int64)
+                eids_full[: len(eids)] = eids
+            valid = np.asarray(batch["batch_mask"]) if "batch_mask" in batch \
+                else np.ones(n, bool)
+            self.sampler.update(np.asarray(src), np.asarray(dst),
+                                np.asarray(t), eids_full, valid=valid)
+        return batch
+
+
 class UniformNeighborHook(Hook):
     """Uniform temporal neighbor sampling (requires a pre-built adjacency)."""
 
@@ -224,10 +330,22 @@ class EdgeFeatureLookupHook(Hook):
 
     def __call__(self, batch: Batch) -> Batch:
         eids = batch[f"{self._prefix}_eids"]
-        out = np.zeros(eids.shape + (self._dim,), dtype=np.float32)
-        if self._feats is not None:
-            ok = eids >= 0
-            out[ok] = self._feats[eids[ok]]
+        if isinstance(eids, np.ndarray):
+            out = np.zeros(eids.shape + (self._dim,), dtype=np.float32)
+            if self._feats is not None:
+                ok = eids >= 0
+                out[ok] = self._feats[eids[ok]]
+        else:  # device-resident eids (device-sampling pipeline): jnp gather
+            import jax.numpy as jnp
+
+            if self._feats is None:
+                out = jnp.zeros(eids.shape + (self._dim,), jnp.float32)
+            else:
+                if not hasattr(self, "_feats_dev"):
+                    self._feats_dev = jnp.asarray(self._feats, jnp.float32)
+                safe = jnp.maximum(eids, 0)
+                out = jnp.where((eids >= 0)[..., None],
+                                self._feats_dev[safe], 0.0)
         batch[f"{self._prefix}_feats"] = out
         return batch
 
@@ -258,6 +376,24 @@ class PadBatchHook(Hook):
         return batch
 
 
+def stage_batch(batch: Batch, device=None) -> Batch:
+    """Ship every host numpy attribute of ``batch`` to ``device`` (int64
+    narrowed to int32 for the jitted models); arrays already on device pass
+    through. Shared by ``DeviceTransferHook`` and ``PrefetchLoader`` so the
+    transfer/narrowing policy lives in one place."""
+    import jax
+    import jax.numpy as jnp
+
+    dev = device or jax.devices()[0]
+    for key in list(batch.keys()):
+        v = batch[key]
+        if isinstance(v, np.ndarray):
+            if v.dtype == np.int64:
+                v = v.astype(np.int32)
+            batch[key] = jax.device_put(jnp.asarray(v), dev)
+    return batch
+
+
 class DeviceTransferHook(Hook):
     """Moves all array attributes to a JAX device (paper Table 2: R=∅, P=∅).
 
@@ -269,17 +405,7 @@ class DeviceTransferHook(Hook):
         self._device = device
 
     def __call__(self, batch: Batch) -> Batch:
-        import jax
-        import jax.numpy as jnp
-
-        dev = self._device or jax.devices()[0]
-        for key in list(batch.keys()):
-            v = batch[key]
-            if isinstance(v, np.ndarray):
-                if v.dtype == np.int64:
-                    v = v.astype(np.int32)
-                batch[key] = jax.device_put(jnp.asarray(v), dev)
-        return batch
+        return stage_batch(batch, self._device)
 
 
 class DOSEstimateHook(Hook):

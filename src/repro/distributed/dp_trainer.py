@@ -33,6 +33,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.distributed import compression as comp
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
+# shard_map moved to the jax namespace (and check_rep became check_vma)
+# across JAX releases; resolve whichever the installed version exposes.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:  # pragma: no cover - older JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_KW = {"check_rep": False}
+
 
 class DataParallelTrainer:
     """shard_map DP wrapper around a per-shard loss function.
@@ -116,12 +126,12 @@ class DataParallelTrainer:
         pspec = P()  # replicated params/opt/err/state
         bspec = jax.tree.map(lambda _: P(None, self.axis), {"x": 0})["x"]
 
-        smapped = jax.shard_map(
+        smapped = _shard_map(
             shard_step,
             mesh=self.mesh,
             in_specs=(pspec, pspec, pspec, pspec, P(None, self.axis)),
             out_specs=(pspec, pspec, pspec, pspec, P()),
-            check_vma=False,
+            **_SHARD_MAP_KW,
         )
         self._step = jax.jit(smapped)
         return self._step

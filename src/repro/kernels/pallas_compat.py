@@ -1,0 +1,16 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+The TPU compiler-params dataclass was renamed across JAX releases
+(``TPUCompilerParams`` -> ``CompilerParams``). Kernels import the symbol
+from here so they run against whichever name the installed JAX exposes.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+if CompilerParams is None:  # pragma: no cover - ancient JAX
+    raise ImportError("pallas TPU compiler params class not found")

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _segment_sum_kernel(seg_ref, data_ref, o_ref, *, num_segments: int,
                         block_e: int):
@@ -66,7 +68,7 @@ def segment_sum_kernel(data, seg_ids, num_segments: int, *,
         ],
         out_specs=pl.BlockSpec((num_segments, D), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((num_segments, D), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)
         ),
         interpret=interpret,

@@ -1,5 +1,21 @@
-from repro.kernels.temporal_attention.kernel import temporal_attention_kernel
-from repro.kernels.temporal_attention.ops import temporal_attention
-from repro.kernels.temporal_attention.ref import temporal_attention_ref
+from repro.kernels.temporal_attention.kernel import (
+    fused_recency_attention_kernel,
+    temporal_attention_kernel,
+)
+from repro.kernels.temporal_attention.ops import (
+    fused_recency_attention,
+    temporal_attention,
+)
+from repro.kernels.temporal_attention.ref import (
+    fused_recency_attention_ref,
+    temporal_attention_ref,
+)
 
-__all__ = ["temporal_attention", "temporal_attention_kernel", "temporal_attention_ref"]
+__all__ = [
+    "fused_recency_attention",
+    "fused_recency_attention_kernel",
+    "fused_recency_attention_ref",
+    "temporal_attention",
+    "temporal_attention_kernel",
+    "temporal_attention_ref",
+]

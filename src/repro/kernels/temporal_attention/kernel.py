@@ -16,6 +16,17 @@ Blocks (VMEM):
 
 With block_s=128, K=32, H=2, D=64 the working set is ~4.5 MiB f32 — well
 inside the 16 MiB VMEM budget, and head_dim 64/128 keeps MXU tiles aligned.
+
+``fused_recency_attention_kernel`` is the device-sampling variant: instead
+of consuming pre-gathered ``(S, K, H, D)`` k/v tensors, it takes the seed
+ids, the resident recency-buffer rows (``buf_ids`` from
+``DeviceRecencySampler``) and node-level k/v tables, and performs the
+neighbor gather *inside* the kernel — the buffer row and each neighbor's
+table row are DMA'd from HBM into VMEM scratch per seed, so the fat
+``(S, K, H, D)`` intermediates never exist in HBM. Seed ids arrive via
+scalar prefetch (``PrefetchScalarGridSpec``) so DMA source indices are known
+before the kernel body runs. The un-fused ``temporal_attention_kernel`` and
+the jnp oracle remain the correctness references.
 """
 
 from __future__ import annotations
@@ -27,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
 
 NEG_INF = -1e30
 
@@ -77,9 +90,122 @@ def temporal_attention_kernel(q, k, v, mask, *, block_s: int = 128,
         ],
         out_specs=pl.BlockSpec((block_s, H, D), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((S + pad, H, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)
         ),
         interpret=interpret,
     )(q, k, v, mask)
+    return out[:S]
+
+
+def _fused_recency_attention_kernel(
+    seeds_ref,  # scalar prefetch: (S_pad,) int32 seed node ids (SMEM)
+    q_ref,      # (block_s, H, D) VMEM
+    k_hbm,      # (N, H, D) ANY/HBM — node-level key table
+    v_hbm,      # (N, H, D) ANY/HBM — node-level value table
+    buf_hbm,    # (Nb, K) ANY/HBM — resident recency buffer (neighbor ids)
+    o_ref,      # (block_s, H, D) VMEM
+    ids_smem,   # (K,) int32 SMEM scratch — DMA'd buffer row (for indexing)
+    ids_vmem,   # (K,) int32 VMEM scratch — same row (for the vector mask)
+    k_scr,      # (K, H, D) VMEM scratch
+    v_scr,      # (K, H, D) VMEM scratch
+    sem_ids, sem_ids2, sem_k, sem_v,
+    *, scale: float, block_s: int, kbuf: int,
+):
+    pid = pl.program_id(0)
+
+    def per_seed(j, carry):
+        seed = seeds_ref[pid * block_s + j]
+        # Buffer row -> SMEM (scalar reads drive the gather DMAs below) and
+        # -> VMEM (vector mask for the softmax).
+        row = pltpu.make_async_copy(buf_hbm.at[seed], ids_smem, sem_ids)
+        row.start()
+        row_v = pltpu.make_async_copy(buf_hbm.at[seed], ids_vmem, sem_ids2)
+        row_v.start()
+        row.wait()
+
+        def gather(kk, c):
+            nid = jnp.maximum(ids_smem[kk], 0)  # clamp padding (-1) to row 0
+            ck = pltpu.make_async_copy(k_hbm.at[nid], k_scr.at[kk], sem_k)
+            cv = pltpu.make_async_copy(v_hbm.at[nid], v_scr.at[kk], sem_v)
+            ck.start()
+            cv.start()
+            ck.wait()
+            cv.wait()
+            return c
+
+        jax.lax.fori_loop(0, kbuf, gather, 0)
+        row_v.wait()
+
+        q = q_ref[j].astype(jnp.float32) * scale  # (H, D)
+        k = k_scr[...].astype(jnp.float32)  # (K, H, D)
+        v = v_scr[...].astype(jnp.float32)
+        mask = ids_vmem[...] >= 0  # (K,)
+
+        s = jnp.einsum("hd,khd->hk", q, k)  # (H, K)
+        s = jnp.where(mask[None, :], s, NEG_INF)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+        p = jnp.where(mask.any(), p, 0.0)
+        o_ref[j] = jnp.einsum("hk,khd->hd", p, v).astype(o_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(0, block_s, per_seed, 0)
+
+
+def fused_recency_attention_kernel(q, k_table, v_table, seeds, buf_ids, *,
+                                   block_s: int = 128,
+                                   scale: float | None = None,
+                                   interpret: bool = False):
+    """Fused neighbor-gather + attention over the resident recency buffer.
+
+    q: (S, H, D) seed queries; k_table, v_table: (N, H, D) node-level
+    projected keys/values (stay in HBM); seeds: (S,) int32 node ids;
+    buf_ids: (Nb, K) int32 circular-buffer neighbor ids (-1 = empty, rows
+    indexed by node id — ``DeviceRecencySampler.state['ids']``).
+    Returns (S, H, D). The (S, K, H, D) gathered k/v exist only as a
+    (K, H, D) VMEM scratch per seed, never in HBM.
+    """
+    S, H, D = q.shape
+    K = buf_ids.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+
+    seeds = seeds.astype(jnp.int32)
+    buf_ids = buf_ids.astype(jnp.int32)
+    block_s = min(block_s, S)
+    pad = (-S) % block_s
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        seeds = jnp.pad(seeds, (0, pad))
+    ns = (S + pad) // block_s
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(ns,),
+        in_specs=[
+            pl.BlockSpec((block_s, H, D), lambda i, *_: (i, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_s, H, D), lambda i, *_: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.SMEM((K,), jnp.int32),
+            pltpu.VMEM((K,), jnp.int32),
+            pltpu.VMEM((K, H, D), k_table.dtype),
+            pltpu.VMEM((K, H, D), v_table.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fused_recency_attention_kernel, scale=scale,
+                          block_s=block_s, kbuf=K),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S + pad, H, D), q.dtype),
+        interpret=interpret,
+    )(seeds, q, k_table, v_table, buf_ids)
     return out[:S]

@@ -1,4 +1,12 @@
-"""Public jit'd wrapper: Pallas kernel on TPU, jnp reference elsewhere."""
+"""Public jit'd wrappers: Pallas kernels on TPU, jnp references elsewhere.
+
+``temporal_attention``       — consumes pre-gathered (S, K, H, D) k/v.
+``fused_recency_attention``  — device-sampling path: consumes seed ids plus
+                               the resident recency buffer and node-level
+                               k/v tables; the gather happens inside the
+                               kernel (TPU) or via a take in the reference
+                               (other backends), never as a hook on the host.
+"""
 
 from __future__ import annotations
 
@@ -6,8 +14,14 @@ from functools import partial
 
 import jax
 
-from repro.kernels.temporal_attention.kernel import temporal_attention_kernel
-from repro.kernels.temporal_attention.ref import temporal_attention_ref
+from repro.kernels.temporal_attention.kernel import (
+    fused_recency_attention_kernel,
+    temporal_attention_kernel,
+)
+from repro.kernels.temporal_attention.ref import (
+    fused_recency_attention_ref,
+    temporal_attention_ref,
+)
 
 
 @partial(jax.jit, static_argnames=("block_s",))
@@ -16,3 +30,14 @@ def temporal_attention(q, k, v, mask, *, block_s: int = 128):
     if jax.default_backend() == "tpu":
         return temporal_attention_kernel(q, k, v, mask, block_s=block_s)
     return temporal_attention_ref(q, k, v, mask)
+
+
+@partial(jax.jit, static_argnames=("block_s",))
+def fused_recency_attention(q, k_table, v_table, seeds, buf_ids, *,
+                            block_s: int = 128):
+    """q: (S, H, D); k_table, v_table: (N, H, D); seeds: (S,);
+    buf_ids: (Nb, K) resident buffer rows -> (S, H, D)."""
+    if jax.default_backend() == "tpu":
+        return fused_recency_attention_kernel(
+            q, k_table, v_table, seeds, buf_ids, block_s=block_s)
+    return fused_recency_attention_ref(q, k_table, v_table, seeds, buf_ids)

@@ -24,3 +24,22 @@ def temporal_attention_ref(q, k, v, mask, *, scale: float | None = None):
     p = jnp.where(any_valid, p, 0.0)
     o = jnp.einsum("shk,skhd->shd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def fused_recency_attention_ref(q, k_table, v_table, seeds, buf_ids, *,
+                                scale: float | None = None):
+    """Oracle for the fused gather+attention kernel.
+
+    Materializes the per-seed neighbor k/v tensors explicitly (the HBM
+    round-trip the fused kernel avoids) and then runs the plain oracle.
+
+    q: (S, H, D) seed queries; k_table, v_table: (N, H, D) node-level
+    projected keys/values; seeds: (S,) node ids; buf_ids: (N, K) resident
+    recency buffer rows (-1 = empty slot). Returns (S, H, D).
+    """
+    nbr = buf_ids[seeds]  # (S, K)
+    mask = nbr >= 0
+    safe = jnp.maximum(nbr, 0)
+    k = k_table[safe]  # (S, K, H, D) — materialized here, not in the kernel
+    v = v_table[safe]
+    return temporal_attention_ref(q, k, v, mask, scale=scale)

@@ -235,6 +235,8 @@ def extrapolate(r1: "Roofline", r2: "Roofline", n_units: int) -> "Roofline":
 
 def analyze(compiled, num_devices: int, legit_f32_bytes: float = 0.0) -> Roofline:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older JAX: one dict per computation
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     coll = parse_collectives(compiled.as_text())

@@ -5,6 +5,15 @@ TPNet) over event-iterated batches with the TGB link recipe (random train
 negatives, one-vs-many eval negatives, recency neighbors, padding, device
 transfer).
 
+With ``device_sampling=True`` the trainer switches to the device-resident
+pipeline: the recency buffers live on the accelerator as a JAX pytree
+(``core.device_sampler.DeviceRecencySampler``, jit-compiled update/sample
+inside ``DeviceRecencyNeighborHook``) and the loader is wrapped in a
+``PrefetchLoader`` that stages the *next* batch's host arrays onto the
+device from a background thread while the current jitted step runs. The
+default (``device_sampling=False``) keeps the host-numpy sampler, which
+doubles as the parity oracle in tests.
+
 ``SnapshotLinkTrainer`` — DTDG models (GCN, GCLSTM, TGCN) over
 time-iterated snapshots: embeddings from snapshots <= t predict the edges of
 snapshot t+1.
@@ -24,12 +33,14 @@ from repro.core import (
     DGData,
     DGraph,
     DGDataLoader,
+    PrefetchLoader,
     RECIPE_TGB_LINK,
     RecipeRegistry,
     TimeDelta,
     TRAIN_KEY,
     EVAL_KEY,
 )
+from repro.distributed import checkpoint as ckpt
 from repro.models.tg import dygformer, graphmixer, snapshot, tgat, tgn, tpnet
 from repro.models.tg.common import bce_link_loss, link_decoder, link_logits
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -50,12 +61,16 @@ class LinkPredictionTrainer:
         eval_negatives: int = 20,
         seed: int = 0,
         model_kwargs: Optional[Dict[str, Any]] = None,
+        device_sampling: bool = False,
+        prefetch: int = 2,
     ):
         if model_name not in _STATELESS | _STATEFUL:
             raise ValueError(f"unknown CTDG model {model_name!r}")
         self.model_name = model_name
         self.data = data
         self.batch_size = batch_size
+        self.device_sampling = device_sampling
+        self.prefetch = prefetch
         self.train_data, self.val_data, self.test_data = data.split()
         kwargs = dict(model_kwargs or {})
 
@@ -97,6 +112,7 @@ class LinkPredictionTrainer:
             edge_feats=self.train_data.edge_feats if d_edge else None,
             edge_feat_dim=d_edge,
             seed=seed,
+            device_sampling=device_sampling,
         )
 
         self.opt_cfg = AdamWConfig(lr=lr)
@@ -168,8 +184,13 @@ class LinkPredictionTrainer:
             self._train_step, self._eval_step = train_step, eval_step
 
     # ------------------------------------------------------------------
-    def _loader(self, data: DGData) -> DGDataLoader:
-        return DGDataLoader(DGraph(data), self.manager, batch_size=self.batch_size)
+    def _loader(self, data: DGData):
+        loader = DGDataLoader(DGraph(data), self.manager, batch_size=self.batch_size)
+        if self.device_sampling:
+            # Overlap hook pipeline + host->device staging of batch i+1 with
+            # the jitted step on batch i (double-buffered by default).
+            return PrefetchLoader(loader, prefetch=self.prefetch)
+        return loader
 
     def _batch_tensors(self, batch) -> Dict[str, Any]:
         return {k: batch[k] for k in batch.keys()}
@@ -180,6 +201,42 @@ class LinkPredictionTrainer:
             self.model_state = tgn.init_state(self.cfg)
         elif self.model_name == "tpnet":
             self.model_state = tpnet.init_state(self.params, self.cfg)
+
+    # -- checkpointing ---------------------------------------------------
+    # The hook/sampler buffers (host numpy or device JAX pytree — both
+    # expose the same state_dict contract) ride along with params/optimizer
+    # state, so a restored run resumes mid-stream with warm neighbor state.
+    def save_checkpoint(self, ckpt_dir: str, step: int) -> str:
+        tree = {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "hooks": self.manager.state_dict(),
+        }
+        if self.model_name in _STATEFUL:
+            tree["model_state"] = self.model_state
+        return ckpt.save(ckpt_dir, step, tree,
+                         extra_meta={"model_name": self.model_name})
+
+    def restore_checkpoint(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        target = {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "hooks": self.manager.state_dict(),
+        }
+        if self.model_name in _STATEFUL:
+            target["model_state"] = self.model_state
+        tree, step, meta = ckpt.restore(ckpt_dir, step, target=target)
+        if meta.get("model_name") not in (None, self.model_name):
+            raise ValueError(
+                f"checkpoint is for model {meta['model_name']!r}, "
+                f"trainer is {self.model_name!r}"
+            )
+        self.params = tree["params"]
+        self.opt_state = tree["opt_state"]
+        self.manager.load_state_dict(tree["hooks"])
+        if self.model_name in _STATEFUL:
+            self.model_state = tree["model_state"]
+        return step
 
     def train_epoch(self) -> Tuple[float, float]:
         """One epoch over the train split. Returns (mean loss, seconds)."""

@@ -1,9 +1,18 @@
+import sys
+
 import numpy as np
 import pytest
 
 import jax
 
 jax.config.update("jax_platform_name", "cpu")
+
+try:  # property tests prefer real hypothesis when installed
+    import hypothesis  # noqa: F401
+except ImportError:  # fall back to the deterministic in-repo stub
+    from tests import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
 
 
 @pytest.fixture(scope="session")

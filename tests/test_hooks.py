@@ -107,3 +107,31 @@ def test_dos_hook_moments():
     assert out["dos"].shape == (6,)
     # moment 0 of the Chebyshev expansion is ~1 (normalized trace)
     assert abs(out["dos"][0] - 1.0) < 0.2
+
+
+def test_hook_manager_state_dict_roundtrip():
+    """Sampler buffers collected via HookManager.state_dict must restore
+    into a freshly built manager (the trainer checkpoint path)."""
+    from repro.core.tg_hooks import DeviceRecencyNeighborHook, RecencyNeighborHook
+
+    rng = np.random.default_rng(0)
+    for hook_cls in (RecencyNeighborHook, DeviceRecencyNeighborHook):
+        m = HookManager()
+        m.register(hook_cls(20, 3, include_negatives=False))
+        b = Batch({"src": rng.integers(0, 20, 30), "dst": rng.integers(0, 20, 30),
+                   "time": np.sort(rng.integers(0, 100, 30))})
+        with m.activate("train"):
+            m.execute(b)
+        state = m.state_dict()
+        assert len(state) == 1
+
+        m2 = HookManager()
+        m2.register(hook_cls(20, 3, include_negatives=False))
+        m2.load_state_dict(state)
+        h1 = m.hooks()[0].sampler
+        h2 = m2.hooks()[0].sampler
+        blk1, blk2 = h1.sample(np.arange(20)), h2.sample(np.arange(20))
+        np.testing.assert_array_equal(np.asarray(blk1.nbr_ids), np.asarray(blk2.nbr_ids))
+
+    with pytest.raises(KeyError):
+        m2.load_state_dict({"shared/9/Nope": {}})

@@ -2,7 +2,12 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import RecencySampler, SequentialRecencySampler, UniformSampler
+from repro.core import (
+    DeviceRecencySampler,
+    RecencySampler,
+    SequentialRecencySampler,
+    UniformSampler,
+)
 
 
 def _assert_same(a, b):
@@ -10,6 +15,14 @@ def _assert_same(a, b):
     np.testing.assert_array_equal(a.nbr_times, b.nbr_times)
     np.testing.assert_array_equal(a.nbr_eids, b.nbr_eids)
     np.testing.assert_array_equal(a.mask, b.mask)
+
+
+def _assert_same_np(a, b):
+    """Like _assert_same but coerces device arrays to host first."""
+    np.testing.assert_array_equal(np.asarray(a.nbr_ids), np.asarray(b.nbr_ids))
+    np.testing.assert_array_equal(np.asarray(a.nbr_times), np.asarray(b.nbr_times))
+    np.testing.assert_array_equal(np.asarray(a.nbr_eids), np.asarray(b.nbr_eids))
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
 
 
 def test_recency_most_recent_first():
@@ -70,6 +83,109 @@ def test_property_vectorized_equals_sequential(seed, k, n_nodes, n_batches):
         _assert_same(fast.sample(seeds), slow.sample(seeds))
 
 
+@pytest.mark.parametrize("cls", [RecencySampler, DeviceRecencySampler])
+def test_recency_wraparound_single_batch_overflow(cls):
+    """One batch carrying more than K events for a node must leave exactly
+    the last K visible, with the cursor advanced by the full multiplicity
+    (sequential semantics)."""
+    k = 3
+    fast, slow = cls(6, k), SequentialRecencySampler(6, k)
+    # node 0 gets 8 events in ONE update call (8 > 2*k)
+    src = np.zeros(8, dtype=np.int64)
+    dst = np.array([1, 2, 3, 4, 5, 1, 2, 3], dtype=np.int64)
+    t = np.arange(8, dtype=np.int64)
+    eids = np.arange(100, 108, dtype=np.int64)
+    fast.update(src, dst, t, eids)
+    slow.update(src, dst, t, eids)
+    a, b = fast.sample(np.arange(6)), slow.sample(np.arange(6))
+    _assert_same_np(a, b)
+    # subsequent inserts must continue from the advanced cursor
+    fast.update(np.array([0]), np.array([5]), np.array([9]))
+    slow.update(np.array([0]), np.array([5]), np.array([9]))
+    _assert_same_np(fast.sample(np.arange(6)), slow.sample(np.arange(6)))
+
+
+@pytest.mark.parametrize("cls", [RecencySampler, DeviceRecencySampler])
+def test_recency_duplicate_timestamps_batch_equivalence(cls):
+    """Equal timestamps within a batch must not reorder insertions: batch
+    updates are indistinguishable from sequential insertion."""
+    rng = np.random.default_rng(7)
+    k = 4
+    fast, slow = cls(10, k), SequentialRecencySampler(10, k)
+    for _ in range(6):
+        B = 15
+        src = rng.integers(0, 10, B)
+        dst = rng.integers(0, 10, B)
+        t = np.full(B, 42)  # all duplicates
+        eids = rng.integers(0, 1000, B)
+        fast.update(src, dst, t, eids)
+        slow.update(src, dst, t, eids)
+        _assert_same_np(fast.sample(np.arange(10)), slow.sample(np.arange(10)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    k=st.integers(1, 7),
+    n_nodes=st.integers(2, 30),
+    n_batches=st.integers(1, 6),
+)
+def test_property_device_equals_sequential(seed, k, n_nodes, n_batches):
+    """DeviceRecencySampler must be bit-identical to sequential insertion on
+    randomized event streams (wraparound + duplicate timestamps included)."""
+    rng = np.random.default_rng(seed)
+    fast = DeviceRecencySampler(n_nodes, k)
+    slow = SequentialRecencySampler(n_nodes, k)
+    t0 = 0
+    for _ in range(n_batches):
+        B = int(rng.integers(1, 20))
+        src = rng.integers(0, n_nodes, B)
+        dst = rng.integers(0, n_nodes, B)
+        t = np.sort(rng.integers(t0, t0 + 10, B))  # duplicates likely
+        t0 += 10
+        eids = rng.integers(0, 10_000, B)
+        fast.update(src, dst, t, eids)
+        slow.update(src, dst, t, eids)
+        seeds = rng.integers(0, n_nodes, 13)
+        _assert_same_np(fast.sample(seeds), slow.sample(seeds))
+
+
+def test_device_padded_update_matches_unpadded():
+    """Fixed-shape padded updates (valid mask) must equal exact-size ones."""
+    rng = np.random.default_rng(5)
+    a, b = DeviceRecencySampler(8, 3), DeviceRecencySampler(8, 3)
+    src = rng.integers(0, 8, 10)
+    dst = rng.integers(0, 8, 10)
+    t = np.sort(rng.integers(0, 50, 10))
+    a.update(src, dst, t)
+    pad = 6
+    b.update(np.concatenate([src, np.zeros(pad, np.int64)]),
+             np.concatenate([dst, np.zeros(pad, np.int64)]),
+             np.concatenate([t, np.zeros(pad, np.int64)]),
+             valid=np.concatenate([np.ones(10, bool), np.zeros(pad, bool)]))
+    _assert_same_np(a.sample(np.arange(8)), b.sample(np.arange(8)))
+
+
+def test_device_state_dict_interchangeable_with_host():
+    """Checkpoint contract: device state restores into the host sampler and
+    vice versa, preserving sample outputs exactly."""
+    rng = np.random.default_rng(11)
+    dev = DeviceRecencySampler(12, 4)
+    src = rng.integers(0, 12, 30)
+    dst = rng.integers(0, 12, 30)
+    t = np.sort(rng.integers(0, 90, 30))
+    dev.update(src, dst, t, rng.integers(0, 100, 30))
+    state = dev.state_dict()
+
+    host = RecencySampler(12, 4)
+    host.load_state_dict(state)
+    _assert_same_np(dev.sample(np.arange(12)), host.sample(np.arange(12)))
+
+    dev2 = DeviceRecencySampler(12, 4)
+    dev2.load_state_dict(host.state_dict())
+    _assert_same_np(dev.sample(np.arange(12)), dev2.sample(np.arange(12)))
+
+
 def test_uniform_sampler_temporal_constraint():
     s = UniformSampler(10, k=8, seed=0)
     src = np.array([0, 0, 0])
@@ -87,3 +203,33 @@ def test_uniform_sampler_no_history():
     s.build(np.array([0]), np.array([1]), np.array([100]))
     blk = s.sample(np.array([5]), np.array([50]))
     assert not blk.mask.any()
+
+
+def test_uniform_sampler_global_searchsorted_matches_per_seed_loop():
+    """The vectorized (node, time-rank) composite-key search must count
+    exactly the neighbors a per-seed binary search would."""
+    rng = np.random.default_rng(3)
+    N, E, B = 40, 500, 64
+    src = rng.integers(0, N, E)
+    dst = rng.integers(0, N, E)
+    t = np.sort(rng.integers(0, 100, E))  # duplicate timestamps guaranteed
+    s = UniformSampler(N, k=8, seed=1)
+    s.build(src, dst, t)
+    seeds = rng.integers(0, N, B)
+    query_t = rng.integers(0, 120, B)
+
+    starts, ends = s._indptr[seeds], s._indptr[seeds + 1]
+    want = np.array([
+        starts[i] + np.searchsorted(s._adj_t[starts[i]:ends[i]],
+                                    query_t[i], side="left")
+        for i in range(B)
+    ])
+    qranks = np.searchsorted(s._tvals, query_t, side="left")
+    got = np.searchsorted(s._adj_key, seeds * s._key_base + qranks,
+                          side="left")
+    np.testing.assert_array_equal(got, want)
+
+    blk = s.sample(seeds, query_t)
+    for i in range(B):
+        if blk.mask[i].any():
+            assert (blk.nbr_times[i][blk.mask[i]] < query_t[i]).all()
