@@ -92,10 +92,80 @@ def bench_recency_sampler(B: int = 200, K: int = 20, N: int = 10_000,
              f"B{B} K{K} N{N} S{S} speedup={t_np / t_dev:.2f}x")
 
 
+def bench_fused_vs_pregathered(B: int = 200, K: int = 20, N: int = 10_000,
+                               d_edge: int = 172) -> None:
+    """TGAT train-step wall time: pre-gathered neighbor tensors (the classic
+    hook path) vs the fused device-sampling layer, same model and batch.
+
+    Both steps are jitted end-to-end (loss + grads + AdamW update) over a
+    synthetic TGB-link train batch (S = 3B seeds). On TPU the fused column
+    runs the Pallas kernel; on CPU/GPU it runs the split-projection jnp
+    fallback, so the delta there reflects skipping the hook-side gather and
+    concat, not the in-kernel DMA pipeline.
+    """
+    from repro.core import RECIPE_TGB_LINK, RecipeRegistry, TRAIN_KEY
+    from repro.core.graph import DGData, DGraph
+    from repro.core.loader import DGDataLoader
+    from repro.core.tg_hooks import stage_batch
+    from repro.models.tg import tgat
+    from repro.models.tg.common import bce_link_loss
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    rng = np.random.default_rng(0)
+    E = 4 * B
+    feats = rng.standard_normal((E, d_edge)).astype(np.float32)
+    data = DGData.from_arrays(
+        rng.integers(0, N, E), rng.integers(0, N, E),
+        np.sort(rng.integers(0, 10_000, E)), edge_feats=feats,
+        granularity="s",
+    )
+    m = RecipeRegistry.build(
+        RECIPE_TGB_LINK, num_nodes=N, k=K, batch_size=B, eval_negatives=20,
+        edge_feats=feats, edge_feat_dim=d_edge, device_sampling=True, seed=0,
+    )
+    with m.activate(TRAIN_KEY):
+        *_, batch = iter(DGDataLoader(DGraph(data), m, batch_size=B))
+    batch = stage_batch(batch)
+    bt = {k2: batch[k2] for k2 in batch.keys()}
+
+    cfg = tgat.TGATConfig(num_nodes=N, d_edge=d_edge, k=K, num_layers=1)
+    params = tgat.init(jax.random.PRNGKey(0), cfg)
+    opt_cfg = AdamWConfig(lr=1e-4)
+    opt0 = adamw_init(params)
+    fused_mode = "auto" if jax.default_backend() == "tpu" else "ref"
+
+    def make_step(fused):
+        def loss_fn(params, batch):
+            pos, neg = tgat.link_scores(params, cfg, batch, B, fused=fused)
+            return bce_link_loss(pos, neg, batch["batch_mask"])
+
+        @jax.jit
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+            return params, opt_state, loss
+
+        return step
+
+    results = {}
+    for name, fused in (("pregathered", False), ("fused", fused_mode)):
+        step = make_step(fused)
+        jax.block_until_ready(step(params, opt0, bt))  # compile
+        results[name] = timeit(
+            lambda: jax.block_until_ready(step(params, opt0, bt)), repeats=7)
+        emit(f"kernels/tgat_train_step_{name}", results[name],
+             f"B{B} K{K} N{N} S{3 * B} d_edge{d_edge} fused={fused}")
+    delta = results["pregathered"] - results["fused"]
+    emit("kernels/tgat_train_step_fused_delta", delta,
+         f"speedup={results['pregathered'] / results['fused']:.2f}x "
+         f"backend={jax.default_backend()}")
+
+
 def run() -> None:
     rng = np.random.default_rng(0)
 
     bench_recency_sampler()
+    bench_fused_vs_pregathered()
 
     q = jnp.asarray(rng.standard_normal((2, 8, 256, 64)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((2, 2, 256, 64)), jnp.float32)

@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Docs link checker: every relative markdown link in README.md and docs/
+must resolve to a real file or directory, so the docs can't rot silently.
+
+Usage: python scripts/check_doc_links.py   (exits non-zero on broken links)
+
+Checks ``[text](target)`` markdown links, skipping absolute URLs
+(http/https/mailto) and pure in-page anchors; a ``path#anchor`` target is
+checked for the path part only. Shared with ``tests/test_docs.py`` so the
+same rule gates both CI step and tier-1.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(root: Path):
+    """README.md plus every markdown file under docs/."""
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("**/*.md"))
+    return [f for f in files if f.exists()]
+
+
+def broken_links(root: Path):
+    """Return [(file, target), ...] for every unresolvable relative link."""
+    bad = []
+    for f in doc_files(root):
+        for target in LINK_RE.findall(f.read_text()):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (f.parent / path).exists():
+                bad.append((str(f.relative_to(root)), target))
+    return bad
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    bad = broken_links(root)
+    for f, target in bad:
+        print(f"BROKEN LINK {f}: ({target})", file=sys.stderr)
+    files = doc_files(root)
+    print(f"checked {len(files)} markdown files, {len(bad)} broken links")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,6 +7,7 @@ temporal neighbor sampling.
 
 from repro.core.batch import Batch
 from repro.core.device_sampler import DeviceRecencySampler
+from repro.core.device_uniform import DeviceUniformSampler
 from repro.core.discretize import discretize, discretize_jax, discretize_naive
 from repro.core.events import EdgeEvent, NodeEvent
 from repro.core.granularity import EventOrderedError, TimeDelta
@@ -34,6 +35,7 @@ __all__ = [
     "Batch",
     "BASE_ATTRS",
     "DeviceRecencySampler",
+    "DeviceUniformSampler",
     "DGData",
     "DGraph",
     "DGDataLoader",

@@ -51,6 +51,23 @@ from repro.core.sampler import NeighborBlock
 _SCATTER_KW = dict(unique_indices=True, mode="promise_in_bounds")
 
 
+def as_int32(a, name: str):
+    """Narrow host arrays to int32, loudly rejecting values that would wrap
+    (device sampler state is int32; silent truncation would corrupt parity
+    with the int64 host samplers). Device arrays pass through untouched —
+    no synchronization on hot paths. Shared by both device samplers."""
+    if not isinstance(a, jax.Array):
+        a = np.asarray(a)
+        if a.dtype.itemsize > 4 and a.size and (
+                a.max() >= 2**31 or a.min() < -(2**31)):
+            raise ValueError(
+                f"{name} exceeds int32 range; rescale (e.g. coarser time "
+                f"granularity / epoch-relative timestamps) before "
+                f"device sampling"
+            )
+    return jnp.asarray(a, jnp.int32)
+
+
 def _update_impl(state, src, dst, t, eids, valid, *, k: int, directed: bool):
     """Insert a time-ordered batch into the circular buffers. Pure/jit."""
     sink = state["cc"].shape[0] - 1  # row N: write target for dropped events
@@ -130,11 +147,18 @@ def _update_copying(state, src, dst, t, eids, valid, *, k, directed):
     return _update_impl(state, src, dst, t, eids, valid, k=k, directed=directed)
 
 
-def _update(state, src, dst, t, eids, valid, *, k: int, directed: bool):
+def _update(state, src, dst, t, eids, valid, *, k: int, directed: bool,
+            retain: bool = False):
     """Jit'd buffer insert; donates the state on backends that support
     aliasing (donation is a no-op that warns on CPU). Resolved per call so
-    importing this module never initializes the JAX backend."""
-    fn = _update_copying if jax.default_backend() == "cpu" else _update_donated
+    importing this module never initializes the JAX backend.
+
+    ``retain=True`` forces the copying variant even off-CPU so references to
+    the *pre-update* buffer stay valid — required when the packed buffer is
+    exposed to the model step (the fused-attention path reads the state as
+    it was when the batch was sampled, predict-then-reveal)."""
+    fn = (_update_copying
+          if retain or jax.default_backend() == "cpu" else _update_donated)
     return fn(state, src, dst, t, eids, valid, k=k, directed=directed)
 
 
@@ -163,16 +187,20 @@ class DeviceRecencySampler:
     """
 
     def __init__(self, num_nodes: int, k: int, directed: bool = False,
-                 device=None):
+                 device=None, retain_state: bool = False):
         if k <= 0:
             raise ValueError("k must be positive")
         self.num_nodes = int(num_nodes)
         self.k = int(k)
         self.directed = directed
+        self.retain_state = retain_state
         self._device = device or jax.devices()[0]
         self.reset_state()
 
     def reset_state(self) -> None:
+        """Reallocate empty buffers on the target device: ids/eids -1,
+        times 0, cursor/count 0 (the packed ``(N+1, K, 3)`` + ``(N+1, 2)``
+        layout described in the module docstring)."""
         n, k = self.num_nodes, self.k
         empty = jnp.stack([
             jnp.full((n + 1, k), -1, jnp.int32),   # neighbor ids
@@ -189,25 +217,25 @@ class DeviceRecencySampler:
         """(N+1, K) neighbor-id rows — the fused attention kernel's input."""
         return self.state["buf"][..., 0]
 
+    @property
+    def packed_buffer(self):
+        """(N+1, K, 3) packed rows (id, time, edge id) — what
+        ``fused_temporal_layer`` consumes. Construct the sampler with
+        ``retain_state=True`` if you hold on to this across ``update`` calls
+        on a donating (non-CPU) backend."""
+        return self.state["buf"]
+
     # ------------------------------------------------------------------
-    @staticmethod
-    def _as_i32(a, name: str):
-        """Narrow host arrays to int32, loudly rejecting values that would
-        wrap (buffers are int32; silent truncation would corrupt parity
-        with the int64 host sampler). Device arrays pass through untouched
-        — no synchronization on the hot path."""
-        if not isinstance(a, jax.Array):
-            a = np.asarray(a)
-            if a.dtype.itemsize > 4 and a.size and (
-                    a.max() >= 2**31 or a.min() < -(2**31)):
-                raise ValueError(
-                    f"{name} exceeds int32 range; rescale (e.g. coarser time "
-                    f"granularity / epoch-relative timestamps) before "
-                    f"device sampling"
-                )
-        return jnp.asarray(a, jnp.int32)
+    _as_i32 = staticmethod(as_int32)
 
     def update(self, src, dst, t, eids=None, valid=None) -> None:
+        """Insert a time-ordered batch of edges into the circular buffers.
+
+        ``src``/``dst``/``t`` are (B,) host or device int arrays; ``eids``
+        defaults to -1 (no edge-feature association); ``valid`` is an
+        optional (B,) bool mask so fixed-shape padded batches compile once
+        (invalid rows are routed to the sink row N and never read).
+        """
         src = self._as_i32(src, "src")
         if src.shape[0] == 0:
             return
@@ -221,9 +249,18 @@ class DeviceRecencySampler:
             self.state, src, self._as_i32(dst, "dst"),
             self._as_i32(t, "t"), eids,
             jnp.asarray(valid, bool), k=self.k, directed=self.directed,
+            retain=self.retain_state,
         )
 
     def sample(self, seeds, query_t=None) -> NeighborBlock:
+        """Gather each seed's (up to) K most recent neighbors on device.
+
+        Returns a fixed-shape ``NeighborBlock`` of (B, K) device arrays,
+        most-recent-first, padded with -1 ids / 0 times where a seed has
+        fewer than K past neighbors. ``query_t`` (B,) optionally masks
+        neighbors newer than each seed's query time (defensive — recency
+        state only ever holds past events).
+        """
         seeds = jnp.asarray(seeds, jnp.int32)
         ids, times, eids, mask = _sample(self.state, seeds, k=self.k)
         if query_t is not None:
@@ -237,6 +274,8 @@ class DeviceRecencySampler:
 
     # -- checkpoint contract (shared with RecencySampler) ----------------
     def state_dict(self) -> dict:
+        """Canonical host-numpy state ``{ids, times, eids, cursor, count}``
+        (int64, sink row stripped) — loads into either recency sampler."""
         host = jax.device_get(self.state)
         buf, cc = host["buf"][:-1], host["cc"][:-1]
         return {
@@ -248,6 +287,8 @@ class DeviceRecencySampler:
         }
 
     def load_state_dict(self, state: dict) -> None:
+        """Restore buffers saved by either recency sampler (the sink row is
+        re-appended and the packed layout rebuilt on device)."""
         def _pad(a, fill):
             a = np.asarray(a)
             pad = np.full((1,) + a.shape[1:], fill, a.dtype)

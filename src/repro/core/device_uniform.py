@@ -1,0 +1,203 @@
+"""Device-resident uniform temporal neighbor sampling.
+
+``DeviceUniformSampler`` is the JAX twin of ``UniformSampler``: the
+CSR-by-time adjacency lives on the accelerator, built with JAX segment ops
+(one ``segment_sum`` for the per-node degree counts + a stable composite-key
+sort), and sampling is a single jitted global ``searchsorted`` over the
+fused ``(node, time-rank)`` key — the same vectorization trick the device
+recency sampler's update uses (see ``core/device_sampler.py``), ported to
+the static-adjacency case:
+
+  * ``rank(t)`` maps raw timestamps through the unique-time table, so the
+    composite key ``node * (num_times + 1) + rank(t)`` is immune to raw
+    timestamp magnitude and globally sorted (the adjacency is node-major
+    with times ascending within each node);
+  * per query, the count of neighbors strictly before ``query_t`` is
+    ``searchsorted(keys, seed * base + rank(query_t)) - indptr[seed]`` —
+    one vectorized search for the whole (B,) seed batch, no per-seed loop;
+  * K draws per seed are taken uniformly (with replacement) from that
+    prefix with a counter-derived ``jax.random`` key, so epochs are
+    reproducible and ``reset_state`` replays them.
+
+``state_dict``/``load_state_dict`` speak the same canonical host-numpy
+contract as the host sampler (``adj_nbr/adj_t/adj_e/indptr/counter``), so
+checkpoints are interchangeable between the two — mirroring the
+``RecencySampler``/``DeviceRecencySampler`` pairing, which makes the two
+sampler families drop-in swappable inside ``RECIPE_TGB_LINK``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_sampler import as_int32
+from repro.core.sampler import NeighborBlock, csr_from_state
+
+_I32_MAX = np.int32(2**31 - 1)
+
+
+@partial(jax.jit, static_argnames=("num_nodes",))
+def _build(nodes, nbrs, times, eids, *, num_nodes: int):
+    """Sort the doubled edge list into node-major/time-ascending CSR order
+    and compute per-node extents with segment ops. Pure/jit."""
+    m = nodes.shape[0]
+    # Unique-time table (padded to fixed size with int32 max so searchsorted
+    # stays correct for any in-range query).
+    tvals = jnp.unique(times, size=m, fill_value=_I32_MAX)
+    tranks = jnp.searchsorted(tvals, times).astype(jnp.int32)
+    num_t = jnp.searchsorted(tvals, _I32_MAX).astype(jnp.int32)
+    base = num_t + 1
+    # Stable sort on the (node, time-rank) composite key: groups by node,
+    # time-ascending within the node, original order on exact ties — the
+    # same layout numpy's lexsort((times, nodes)) produces on the host.
+    key = nodes * base + tranks
+    order = jnp.argsort(key, stable=True)
+    counts = jax.ops.segment_sum(jnp.ones(m, jnp.int32), nodes,
+                                 num_segments=num_nodes)
+    indptr = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(counts, dtype=jnp.int32)])
+    return {
+        "adj_nbr": nbrs[order],
+        "adj_t": times[order],
+        "adj_e": eids[order],
+        "adj_key": key[order],
+        "indptr": indptr,
+        "tvals": tvals,
+        "base": base,
+    }
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _sample(adj, seeds, query_t, rng_key, *, k: int):
+    """Uniform K-with-replacement draws from each seed's strict-past prefix.
+
+    One global ``searchsorted`` on the composite key yields every seed's
+    valid-prefix length at once; seeds with an empty prefix come back fully
+    masked.
+    """
+    qranks = jnp.searchsorted(adj["tvals"], query_t, side="left")
+    qranks = qranks.astype(jnp.int32)
+    starts = adj["indptr"][seeds]
+    ends = jnp.searchsorted(adj["adj_key"], seeds * adj["base"] + qranks,
+                            side="left").astype(jnp.int32)
+    n_valid = ends - starts
+    has = n_valid > 0
+    B = seeds.shape[0]
+    draw = jax.random.randint(rng_key, (B, k), 0,
+                              jnp.maximum(n_valid, 1)[:, None], jnp.int32)
+    idx = jnp.minimum(starts[:, None] + draw, adj["adj_nbr"].shape[0] - 1)
+    ids = jnp.where(has[:, None], adj["adj_nbr"][idx], -1)
+    times = jnp.where(has[:, None], adj["adj_t"][idx], 0)
+    eids = jnp.where(has[:, None], adj["adj_e"][idx], -1)
+    mask = jnp.broadcast_to(has[:, None], (B, k))
+    return ids, times, eids, mask
+
+
+class DeviceUniformSampler:
+    """JAX device-resident uniform temporal neighbor sampler.
+
+    Drop-in twin of ``UniformSampler``: ``build`` once per storage slice,
+    then ``sample(seeds, query_t)`` draws K past neighbors per seed
+    uniformly with replacement, entirely on ``device`` (default: first JAX
+    device). Sampling uses a counter-derived PRNG key per call, so runs are
+    reproducible and ``reset_state`` rewinds an epoch exactly.
+    """
+
+    def __init__(self, num_nodes: int, k: int, seed: int = 0, device=None):
+        if k <= 0:
+            raise ValueError("k must be positive")
+        self.num_nodes = int(num_nodes)
+        self.k = int(k)
+        self._seed = int(seed)
+        self._counter = 0
+        self._device = device or jax.devices()[0]
+        self._adj = None
+
+    # ------------------------------------------------------------------
+    _as_i32 = staticmethod(as_int32)
+
+    def build(self, src, dst, t, eids: Optional[np.ndarray] = None) -> None:
+        """Build the device CSR-by-time adjacency for an edge storage slice.
+
+        Each undirected event contributes both (src -> dst) and
+        (dst -> src) entries. ``eids`` defaults to the event index, matching
+        the ``EdgeFeatureLookupHook`` convention.
+        """
+        if eids is None:
+            eids = np.arange(len(np.asarray(src)), dtype=np.int64)
+        nodes = jnp.concatenate([self._as_i32(src, "src"),
+                                 self._as_i32(dst, "dst")])
+        nbrs = jnp.concatenate([self._as_i32(dst, "dst"),
+                                self._as_i32(src, "src")])
+        times = jnp.concatenate([self._as_i32(t, "t")] * 2)
+        es = jnp.concatenate([self._as_i32(eids, "eids")] * 2)
+        adj = _build(nodes, nbrs, times, eids=es, num_nodes=self.num_nodes)
+        # One host sync at build time (once per split) to verify the fused
+        # int32 key cannot have overflowed: num_nodes * base must fit.
+        base = int(adj["base"])
+        if self.num_nodes * base >= 2**31:
+            raise ValueError(
+                f"composite key range num_nodes*({base}) exceeds int32; use "
+                f"the host UniformSampler for this graph"
+            )
+        self._adj = jax.device_put(adj, self._device)
+
+    @property
+    def _built(self) -> bool:
+        return self._adj is not None
+
+    def reset_state(self) -> None:
+        """Rewind the draw counter (start of an epoch); keeps the built
+        adjacency — it is a pure function of the storage slice."""
+        self._counter = 0
+
+    def sample(self, seeds, query_t) -> NeighborBlock:
+        """Draw K uniform past neighbors per seed, strictly before
+        ``query_t``. Returns a fixed-shape device ``NeighborBlock``."""
+        if not self._built:
+            raise RuntimeError("DeviceUniformSampler.build() must be called first")
+        seeds = jnp.asarray(seeds, jnp.int32)
+        query_t = self._as_i32(query_t, "query_t")
+        rng_key = jax.random.fold_in(jax.random.PRNGKey(self._seed),
+                                     self._counter)
+        self._counter += 1
+        ids, times, eids, mask = _sample(self._adj, seeds, query_t, rng_key,
+                                         k=self.k)
+        return NeighborBlock(ids, times, eids, mask)
+
+    # -- checkpoint contract (shared with UniformSampler) ----------------
+    def state_dict(self) -> dict:
+        """Canonical host-numpy state: the CSR arrays plus the draw counter.
+        Loads into either uniform sampler (self-contained restore at an
+        O(E) checkpoint cost — see ``UniformSampler.state_dict``)."""
+        if not self._built:
+            return {"counter": np.int64(self._counter)}
+        host = jax.device_get(self._adj)
+        return {
+            "adj_nbr": host["adj_nbr"].astype(np.int64),
+            "adj_t": host["adj_t"].astype(np.int64),
+            "adj_e": host["adj_e"].astype(np.int64),
+            "indptr": host["indptr"].astype(np.int64),
+            "counter": np.int64(self._counter),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore from either sampler's ``state_dict``; the derived
+        composite-key/time-rank arrays are rebuilt on device."""
+        self._counter = int(state["counter"])
+        if "adj_nbr" not in state:
+            return
+        nodes, nbrs, times, eids = csr_from_state(state, self.num_nodes)
+        adj = _build(
+            self._as_i32(nodes, "nodes"),
+            self._as_i32(nbrs, "adj_nbr"),
+            self._as_i32(times, "adj_t"),
+            eids=self._as_i32(eids, "adj_e"),
+            num_nodes=self.num_nodes,
+        )
+        self._adj = jax.device_put(adj, self._device)

@@ -15,6 +15,9 @@ Three implementations:
 
 Reductions: first | last | sum | mean | max | count.
 ``count`` appends (or creates) a 1-dim feature holding the multiplicity.
+
+See ``docs/architecture.md`` (the CTDG/DTDG split) for where ``psi_r`` sits
+in the pipeline.
 """
 
 from __future__ import annotations

@@ -7,6 +7,9 @@ and is excluded from arithmetic time operations.
 
 Granularities are partially ordered: ``a <= b`` iff ``b`` is coarser, i.e.
 one tick of ``b`` spans an integral (>=1) number of ticks of ``a``.
+
+See ``docs/architecture.md`` for how granularity carries the CTDG/DTDG
+split through the loader and discretization.
 """
 
 from __future__ import annotations

@@ -48,6 +48,11 @@ class DGData:
     static_node_feats: Optional[np.ndarray] = None
     granularity: TimeDelta = dataclasses.field(default_factory=TimeDelta.event)
     num_nodes: int = 0
+    # Global index of this storage's first edge event in its root storage
+    # (0 for unsliced data; set by ``slice_events``). Lets loaders emit
+    # *global* event ids for sliced splits, so edge-feature lookups keyed by
+    # eid stay correct across train/val/test iteration.
+    eid_offset: int = 0
 
     # ------------------------------------------------------------------
     # Construction
@@ -205,6 +210,7 @@ class DGData:
             node_ids=None if self.node_ids is None else self.node_ids[nsel],
             node_t=None if self.node_t is None else self.node_t[nsel],
             node_feats=None if self.node_feats is None else self.node_feats[nsel],
+            eid_offset=self.eid_offset + lo,
         )
 
     # ------------------------------------------------------------------

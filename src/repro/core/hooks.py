@@ -10,7 +10,9 @@ topological order.
 The ``HookManager`` owns hook state, resolves the ordering once at build
 time (invalid recipes fail fast with a precise diagnostic), supports keyed
 activation groups (e.g. ``train`` vs ``eval`` hooks), and exposes a single
-``reset_state`` for all stateful hooks.
+``reset_state`` for all stateful hooks. The hook/recipe formalism and the
+``state_dict`` checkpoint contract are documented in
+``docs/architecture.md``.
 """
 
 from __future__ import annotations
@@ -27,6 +29,13 @@ BASE_ATTRS: FrozenSet[str] = frozenset({"src", "dst", "time"})
 class Hook:
     """Base hook. Subclass and implement ``__call__``; declare the contract
     via class attributes or constructor arguments.
+
+    ``name`` is the display identity (diagnostics, ``repr``);
+    ``state_key`` is the checkpoint identity used by
+    ``HookManager.state_dict`` and defaults to ``name``. Hooks whose state
+    is interchangeable with a twin implementation (e.g. host/device sampler
+    pairs) share a ``state_key`` so checkpoints restore across pipeline
+    flavors, without masquerading in error messages.
     """
 
     requires: FrozenSet[str] = frozenset()
@@ -38,6 +47,7 @@ class Hook:
         requires: Optional[Iterable[str]] = None,
         produces: Optional[Iterable[str]] = None,
         name: Optional[str] = None,
+        state_key: Optional[str] = None,
     ):
         if requires is not None:
             self.requires = frozenset(requires)
@@ -48,6 +58,7 @@ class Hook:
         else:
             self.produces = frozenset(type(self).produces)
         self.name = name or type(self).__name__
+        self.state_key = state_key or self.name
 
     # Stateful hooks override these.
     def reset_state(self) -> None:
@@ -229,26 +240,33 @@ class HookManager:
                 hook.reset_state()
 
     def state_dict(self) -> Dict[str, Dict]:
-        """Collect every stateful hook's state, keyed ``<group>/<idx>/<name>``
-        (registration position makes keys stable across rebuilds). Leaves are
-        numpy arrays, so the result drops straight into
-        ``distributed.checkpoint.save``."""
+        """Collect every stateful hook's state, keyed
+        ``<group>/<idx>/<state_key>`` (registration position makes keys
+        stable across rebuilds; ``state_key`` — not display ``name`` — so
+        host/device hook twins interchange). Leaves are numpy arrays, so the
+        result drops straight into ``distributed.checkpoint.save``."""
         out: Dict[str, Dict] = {}
         for key, group in self._groups.items():
             for i, hook in enumerate(group):
                 state = hook.state_dict()
                 if state:
-                    out[f"{key}/{i}/{hook.name}"] = state
+                    out[f"{key}/{i}/{hook.state_key}"] = state
         return out
 
     def load_state_dict(self, state: Dict[str, Dict]) -> None:
+        """Restore hook states collected by ``state_dict`` (matched by
+        ``<group>/<idx>/<state_key>``, falling back to the display name for
+        checkpoints written before ``state_key`` existed); unmatched
+        entries raise."""
         seen = set()
         for key, group in self._groups.items():
             for i, hook in enumerate(group):
-                k = f"{key}/{i}/{hook.name}"
-                if k in state:
-                    hook.load_state_dict(state[k])
-                    seen.add(k)
+                for k in (f"{key}/{i}/{hook.state_key}",
+                          f"{key}/{i}/{hook.name}"):
+                    if k in state and k not in seen:
+                        hook.load_state_dict(state[k])
+                        seen.add(k)
+                        break
         missing = set(state) - seen
         if missing:
             raise KeyError(f"no registered hook matches state {sorted(missing)}")

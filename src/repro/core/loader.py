@@ -19,7 +19,8 @@ A bounded queue (default depth 2 = double buffering) provides back-pressure
 so at most ``prefetch`` prepared batches are in flight; hook state stays
 correct because the hook pipeline still executes strictly sequentially, just
 one batch ahead of the consumer. This is the loader half of the
-``device_sampling=True`` pipeline in ``train.tg_trainer``.
+``device_sampling=True`` pipeline in ``train.tg_trainer``. The staging
+model is documented in ``docs/architecture.md``.
 """
 
 from __future__ import annotations
@@ -37,6 +38,15 @@ from repro.core.hooks import HookManager
 
 
 class DGDataLoader:
+    """Iterate a ``DGraph`` view as hook-processed ``Batch``es.
+
+    CTDG mode (``batch_size``): fixed event-count batches in stream order.
+    DTDG mode (``batch_unit``): fixed time windows (snapshots) of a real-
+    time granularity coarser-or-equal to the view's native unit. Each
+    materialized batch is passed through ``hook_manager`` (when given)
+    before being yielded. See ``docs/architecture.md``.
+    """
+
     def __init__(
         self,
         dg: DGraph,
@@ -79,6 +89,9 @@ class DGDataLoader:
 
     # ------------------------------------------------------------------
     def __len__(self) -> int:
+        """Number of batches (event batches or time windows) to be yielded;
+        for time iteration this is an upper bound when windows can be
+        empty and ``emit_empty=False``."""
         if self.batch_size is not None:
             n = self.dg.num_edge_events
             full, rem = divmod(n, self.batch_size)
@@ -118,7 +131,10 @@ class DGDataLoader:
     def _materialize(self, lo: int, hi: int, window=None) -> Batch:
         raw = self.dg.materialize(lo, hi)
         meta = {
-            "eids": np.arange(lo, hi, dtype=np.int64),
+            # Global event ids (sliced splits carry their root offset), so
+            # eid-keyed edge-feature lookups are correct on any split.
+            "eids": np.arange(lo, hi, dtype=np.int64)
+            + getattr(self.dg.data, "eid_offset", 0),
             "window": window,
             "granularity": self.batch_unit or self.dg.granularity,
         }

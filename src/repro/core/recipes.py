@@ -29,12 +29,14 @@ from repro.core.hooks import HookManager
 from repro.core.tg_hooks import (
     DeviceRecencyNeighborHook,
     DeviceTransferHook,
+    DeviceUniformNeighborHook,
     DOSEstimateHook,
     EdgeFeatureLookupHook,
     NegativeEdgeHook,
     PadBatchHook,
     RecencyNeighborHook,
     TGBEvalNegativesHook,
+    UniformNeighborHook,
 )
 
 RECIPE_TGB_LINK = "tgb_link"
@@ -47,10 +49,13 @@ EVAL_KEY = "eval"
 
 
 class RecipeRegistry:
+    """Name -> HookManager-factory registry for pre-defined recipes."""
+
     _builders: Dict[str, Callable[..., HookManager]] = {}
 
     @classmethod
     def register(cls, name: str):
+        """Decorator: register a recipe factory under ``name``."""
         def deco(fn):
             cls._builders[name] = fn
             return fn
@@ -59,12 +64,14 @@ class RecipeRegistry:
 
     @classmethod
     def build(cls, name: str, **kwargs) -> HookManager:
+        """Instantiate the recipe ``name`` with factory kwargs."""
         if name not in cls._builders:
             raise KeyError(f"unknown recipe {name!r}; have {sorted(cls._builders)}")
         return cls._builders[name](**kwargs)
 
     @classmethod
     def available(cls):
+        """Sorted names of all registered recipes."""
         return sorted(cls._builders)
 
 
@@ -81,7 +88,25 @@ def _tgb_link(
     seed: int = 0,
     device=None,
     device_sampling: bool = False,
+    sampler: str = "recency",
+    expose_buffer: Optional[bool] = None,
 ) -> HookManager:
+    """Build the TGB link-prediction hook pipeline.
+
+    ``sampler`` selects the temporal neighbor strategy: ``"recency"`` (K
+    most recent, circular buffers) or ``"uniform"`` (K uniform draws from
+    the strict past; hop-1 only, and the returned hook's ``build(...)`` must
+    be called with the edge storage before iterating).
+    ``device_sampling=True`` swaps in the device-resident twin of either
+    sampler (same outputs / checkpoint contract; tensors born on device).
+    ``expose_buffer`` forwards to ``DeviceRecencyNeighborHook`` (None =
+    backend auto; pass False for models without a fused attention path so
+    buffer updates can donate in place).
+    """
+    if sampler not in ("recency", "uniform"):
+        raise ValueError(f"unknown sampler {sampler!r}; use 'recency' or 'uniform'")
+    if sampler == "uniform" and num_hops != 1:
+        raise ValueError("sampler='uniform' supports num_hops=1 only")
     m = HookManager()
     # Padding runs FIRST so negatives/neighbor tensors come out fixed-shape;
     # stateful hooks exclude padded events via batch_mask.
@@ -95,13 +120,22 @@ def _tgb_link(
                              dst_pool=dst_pool),
         key=EVAL_KEY,
     )
-    # One shared recency sampler serves both train and eval keys (state is
-    # shared; buffer updates exclude padding and happen once per batch).
-    # ``device_sampling`` swaps the host numpy circular buffers for the
-    # JAX device-resident sampler (same outputs, no host round-trip).
-    if device_sampling:
+    # One shared neighbor sampler serves both train and eval keys (state is
+    # shared; recency buffer updates exclude padding and happen once per
+    # batch). ``device_sampling`` swaps the host numpy implementation for
+    # the JAX device-resident twin (same outputs, no host round-trip).
+    if sampler == "uniform":
+        if device_sampling:
+            m.register(DeviceUniformNeighborHook(
+                num_nodes, k, include_negatives=True, seed=seed, device=device))
+        else:
+            m.register(UniformNeighborHook(
+                num_nodes, k, include_negatives=True, seed=seed))
+    elif device_sampling:
         m.register(DeviceRecencyNeighborHook(num_nodes, k, num_hops=num_hops,
-                                             device=device))
+                                             device=device,
+                                             expose_buffer=expose_buffer,
+                                             edge_feats=edge_feats))
     else:
         m.register(RecencyNeighborHook(num_nodes, k, num_hops=num_hops, dedup=True))
     m.register(EdgeFeatureLookupHook(edge_feats, edge_feat_dim))

@@ -67,6 +67,7 @@ class RecencySampler:
         self.reset_state()
 
     def reset_state(self) -> None:
+        """Clear buffers: ids/eids -1, times 0, cursor/count 0."""
         n, k = self.num_nodes, self.k
         self._ids = np.full((n, k), -1, dtype=np.int64)
         self._times = np.zeros((n, k), dtype=np.int64)
@@ -158,12 +159,15 @@ class RecencySampler:
 
     # State as a pytree-compatible dict (checkpointable).
     def state_dict(self) -> dict:
+        """Canonical ``{ids, times, eids, cursor, count}`` numpy state —
+        loads into either recency sampler (host or device)."""
         return {
             "ids": self._ids, "times": self._times, "eids": self._eids,
             "cursor": self._cursor, "count": self._count,
         }
 
     def load_state_dict(self, state: dict) -> None:
+        """Restore buffers saved by either recency sampler."""
         self._ids = np.array(state["ids"], dtype=np.int64)
         self._times = np.array(state["times"], dtype=np.int64)
         self._eids = np.array(state["eids"], dtype=np.int64)
@@ -193,23 +197,47 @@ class SequentialRecencySampler(RecencySampler):
                 _insert(int(dst[i]), int(src[i]), int(t[i]), int(eids[i]))
 
 
+def csr_from_state(state: dict, num_nodes: int):
+    """Rebuild ``(nodes, nbrs, times, eids)`` int64 arrays from the shared
+    uniform-sampler checkpoint contract (``adj_nbr/adj_t/adj_e/indptr``).
+    The node column is implicit in ``indptr`` (node-major layout). Used by
+    both ``UniformSampler`` and ``DeviceUniformSampler`` so the contract
+    cannot silently diverge between the twins."""
+    indptr = np.asarray(state["indptr"], dtype=np.int64)
+    nodes = np.repeat(np.arange(num_nodes, dtype=np.int64), np.diff(indptr))
+    return (nodes,
+            np.asarray(state["adj_nbr"], dtype=np.int64),
+            np.asarray(state["adj_t"], dtype=np.int64),
+            np.asarray(state["adj_e"], dtype=np.int64))
+
+
 class UniformSampler:
     """Uniform temporal neighbor sampling over *all* past neighbors.
 
-    Built over a static CSR-by-time adjacency of a (training) storage slice;
-    per query, finds the per-node prefix of neighbors with t < query_t by
-    binary search and samples K uniformly (with replacement when fewer).
+    Built over a static CSR-by-time adjacency of an edge storage slice
+    (strict ``t < query_t`` filtering at sample time keeps it leak-free even
+    when built over the full stream); per query, finds the per-node prefix
+    of neighbors with t < query_t by one global composite-key binary search
+    and samples K uniformly (with replacement when fewer).
+
+    Draws use a per-call counter-derived RNG (``default_rng((seed, n))``),
+    so epochs replay exactly after ``reset_state``. This module is the
+    *host* implementation; its device twin
+    ``repro.core.device_uniform.DeviceUniformSampler`` shares the
+    ``state_dict`` checkpoint contract (``adj_nbr/adj_t/adj_e/indptr/
+    counter``), making the two interchangeable inside ``RECIPE_TGB_LINK``.
     """
 
     def __init__(self, num_nodes: int, k: int, seed: int = 0):
         self.num_nodes = int(num_nodes)
         self.k = int(k)
-        self._rng = np.random.default_rng(seed)
         self._seed = seed
+        self._counter = 0
         self._built = False
 
     def build(self, src: np.ndarray, dst: np.ndarray, t: np.ndarray,
               eids: Optional[np.ndarray] = None) -> None:
+        """Build the CSR-by-time adjacency (both directions per event)."""
         if eids is None:
             eids = np.arange(len(src), dtype=np.int64)
         nodes = np.concatenate([src, dst]).astype(np.int64)
@@ -217,9 +245,14 @@ class UniformSampler:
         times = np.concatenate([t, t]).astype(np.int64)
         es = np.concatenate([eids, eids]).astype(np.int64)
         order = np.lexsort((times, nodes))  # by node, then time
-        self._adj_nbr = nbrs[order]
-        self._adj_t = times[order]
-        self._adj_e = es[order]
+        self._set_adjacency(nodes[order], nbrs[order], times[order], es[order])
+
+    def _set_adjacency(self, nodes, nbrs, times, es) -> None:
+        """Install a node-major/time-ascending adjacency and derive the
+        search structures (unique-time table + fused key)."""
+        self._adj_nbr = nbrs
+        self._adj_t = times
+        self._adj_e = es
         counts = np.bincount(nodes, minlength=self.num_nodes)
         self._indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
         # Composite (node, time-rank) key, globally sorted because the
@@ -231,13 +264,20 @@ class UniformSampler:
         self._tvals = np.unique(self._adj_t)
         self._key_base = len(self._tvals) + 1
         tranks = np.searchsorted(self._tvals, self._adj_t)
-        self._adj_key = nodes[order] * self._key_base + tranks
+        self._adj_key = nodes * self._key_base + tranks
         self._built = True
 
     def reset_state(self) -> None:
-        self._rng = np.random.default_rng(self._seed)
+        """Rewind the draw counter (start of an epoch); the adjacency is a
+        pure function of the storage slice and is kept."""
+        self._counter = 0
 
     def sample(self, seeds: np.ndarray, query_t: np.ndarray) -> NeighborBlock:
+        """Draw K uniform neighbors per seed, strictly before ``query_t``.
+
+        Returns a fixed-shape ``NeighborBlock``; seeds with no past
+        neighbors come back fully masked.
+        """
         if not self._built:
             raise RuntimeError("UniformSampler.build() must be called first")
         seeds = np.asarray(seeds, dtype=np.int64)
@@ -254,10 +294,35 @@ class UniformSampler:
         )
         n_valid = valid_ends - starts
         has = n_valid > 0
-        draw = self._rng.integers(0, np.maximum(n_valid, 1)[:, None], size=(B, K))
+        rng = np.random.default_rng((self._seed, self._counter))
+        self._counter += 1
+        draw = rng.integers(0, np.maximum(n_valid, 1)[:, None], size=(B, K))
         idx = np.minimum(starts[:, None] + draw, len(self._adj_nbr) - 1)
         ids = np.where(has[:, None], self._adj_nbr[idx], -1)
         times = np.where(has[:, None], self._adj_t[idx], 0)
         eids = np.where(has[:, None], self._adj_e[idx], -1)
         mask = np.broadcast_to(has[:, None], (B, K)).copy()
         return NeighborBlock(ids, times, eids, mask)
+
+    # -- checkpoint contract (shared with DeviceUniformSampler) ----------
+    def state_dict(self) -> dict:
+        """CSR arrays + draw counter; loads into either uniform sampler.
+
+        Including the adjacency makes restore self-contained (no rebuild
+        required) at an O(E) checkpoint cost; for very large streams a
+        counter-only checkpoint with rebuild-on-load is a ROADMAP item.
+        """
+        if not self._built:
+            return {"counter": np.int64(self._counter)}
+        return {
+            "adj_nbr": self._adj_nbr, "adj_t": self._adj_t,
+            "adj_e": self._adj_e, "indptr": self._indptr,
+            "counter": np.int64(self._counter),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore from either uniform sampler's ``state_dict``."""
+        self._counter = int(state["counter"])
+        if "adj_nbr" not in state:
+            return
+        self._set_adjacency(*csr_from_state(state, self.num_nodes))

@@ -14,6 +14,11 @@ steps compile exactly once per shape. Sampling hooks come in two flavors:
                                     gather run jit-compiled on device, so
                                     neighbor tensors are born device-resident
                                     and never cross PCIe.
+
+The uniform samplers pair the same way: ``UniformNeighborHook`` (host CSR)
+and ``DeviceUniformNeighborHook`` (device CSR + jitted composite-key
+searchsorted). Hook ordering/contracts and the checkpoint story live in
+``docs/architecture.md``.
 """
 
 from __future__ import annotations
@@ -42,6 +47,7 @@ class NegativeEdgeHook(Hook):
         )
 
     def reset_state(self) -> None:
+        """Reset the negative sampler's RNG and observed-destination pool."""
         self._sampler.reset_state()
 
     def __call__(self, batch: Batch) -> Batch:
@@ -74,6 +80,7 @@ class TGBEvalNegativesHook(Hook):
         )
 
     def reset_state(self) -> None:
+        """Rewind the per-batch counter so eval negatives replay exactly."""
         self._counter = 0
 
     def __call__(self, batch: Batch) -> Batch:
@@ -122,12 +129,15 @@ class RecencyNeighborHook(Hook):
         self.update_buffer = update_buffer
 
     def reset_state(self) -> None:
+        """Clear the host circular buffers (start of an epoch)."""
         self.sampler.reset_state()
 
     def state_dict(self) -> dict:
+        """Checkpoint the sampler buffers (shared host/device contract)."""
         return self.sampler.state_dict()
 
     def load_state_dict(self, state: dict) -> None:
+        """Restore sampler buffers saved by either recency sampler."""
         self.sampler.load_state_dict(state)
 
     def _seeds(self, batch: Batch):
@@ -194,10 +204,23 @@ class DeviceRecencyNeighborHook(Hook):
 
     Same contract as ``RecencyNeighborHook`` (hop-1/hop-2 neighborhoods,
     predict-then-reveal buffer updates), but backed by
-    ``DeviceRecencySampler``: state stays on the accelerator and both
-    ``update`` and ``sample`` are jit-compiled. The produced neighbor tensors
-    are JAX device arrays — the downstream ``DeviceTransferHook`` passes them
-    through untouched.
+    ``DeviceRecencySampler``: state stays on the accelerator as a packed
+    ``(N+1, K, 3)`` buffer (channels = neighbor id / time / edge id, row N
+    the write sink) and both ``update`` and ``sample`` are jit-compiled. The
+    produced neighbor tensors are JAX device arrays — the downstream
+    ``DeviceTransferHook`` passes them through untouched.
+
+    With ``expose_buffer=True`` (the default) each batch also carries:
+
+      * ``nbr_buf``         — the packed buffer *as sampled*, i.e. the
+        pre-update snapshot (JAX arrays are immutable, so stashing the
+        reference before the update is a zero-copy snapshot; the sampler is
+        built with ``retain_state=True`` so donation never invalidates it).
+        This is what the fused TGAT/TGN attention reads so the per-seed
+        neighbor gather can happen inside the kernel.
+      * ``edge_feat_table`` — the raw (E, d_edge) edge-feature storage (only
+        when ``edge_feats`` is given), indexed in-kernel by the buffer's
+        edge-id channel.
 
     Differences from the host hook, both deliberate:
 
@@ -211,34 +234,73 @@ class DeviceRecencyNeighborHook(Hook):
 
     def __init__(self, num_nodes: int, k: int, num_hops: int = 1,
                  include_negatives: bool = True, update_buffer: bool = True,
-                 device=None):
+                 device=None, expose_buffer: Optional[bool] = None,
+                 edge_feats=None):
         if num_hops not in (1, 2):
             raise ValueError("num_hops must be 1 or 2")
+        if expose_buffer is None:
+            # Auto: expose wherever a consumer can exist. The fused model
+            # path engages on TPU (and in CPU parity tests, where the
+            # update already copies); on GPU nothing reads ``nbr_buf`` and
+            # exposing it would force retain_state copies instead of the
+            # donated in-place buffer update — skip it there. The recipe/
+            # trainer can pass an explicit value (e.g. False for models
+            # without a fused path).
+            import jax
+
+            expose_buffer = jax.default_backend() != "gpu"
         produces = {"seed_nodes", "seed_times", "nbr_ids", "nbr_times",
                     "nbr_eids", "nbr_mask"}
         if num_hops == 2:
             produces |= {"nbr2_ids", "nbr2_times", "nbr2_eids", "nbr2_mask"}
+        if expose_buffer:
+            produces |= {"nbr_buf"}
+            if edge_feats is not None:
+                produces |= {"edge_feat_table"}
         requires = {"src", "dst", "time"} | ({"neg"} if include_negatives else set())
-        super().__init__(requires=requires, produces=produces)
-        self.sampler = DeviceRecencySampler(num_nodes, k, device=device)
+        # Shared checkpoint key with the host twin: the sampler state_dicts
+        # are interchangeable, so HookManager checkpoint keys must match
+        # across device_sampling pipeline flavors (display name stays
+        # accurate for diagnostics).
+        super().__init__(requires=requires, produces=produces,
+                         state_key="RecencyNeighborHook")
+        self.sampler = DeviceRecencySampler(num_nodes, k, device=device,
+                                            retain_state=expose_buffer)
         self.k = k
         self.num_hops = num_hops
         self.include_negatives = include_negatives
         self.update_buffer = update_buffer
+        self.expose_buffer = expose_buffer
+        self._edge_table = None
+        if expose_buffer and edge_feats is not None:
+            import jax.numpy as jnp
+
+            self._edge_table = jnp.asarray(edge_feats, jnp.float32)
 
     def reset_state(self) -> None:
+        """Clear the on-device circular buffers (start of an epoch)."""
         self.sampler.reset_state()
 
     def state_dict(self) -> dict:
+        """Checkpoint the sampler buffers (shared host/device contract)."""
         return self.sampler.state_dict()
 
     def load_state_dict(self, state: dict) -> None:
+        """Restore sampler buffers saved by either recency sampler."""
         self.sampler.load_state_dict(state)
 
     def __call__(self, batch: Batch) -> Batch:
+        """Sample hop-1/2 neighborhoods, expose the pre-update buffer, then
+        reveal the batch's positive edges to the sampler."""
         import jax.numpy as jnp
 
         src, dst, t = batch["src"], batch["dst"], batch["time"]
+        if self.expose_buffer:
+            # Pre-update snapshot: the state the neighborhoods below are
+            # sampled from (predict-then-reveal).
+            batch["nbr_buf"] = self.sampler.packed_buffer
+            if self._edge_table is not None:
+                batch["edge_feat_table"] = self._edge_table
         seeds = [np.asarray(src), np.asarray(dst)]
         times = [np.asarray(t), np.asarray(t)]
         if self.include_negatives and "neg" in batch:
@@ -279,7 +341,14 @@ class DeviceRecencyNeighborHook(Hook):
 
 
 class UniformNeighborHook(Hook):
-    """Uniform temporal neighbor sampling (requires a pre-built adjacency)."""
+    """Uniform temporal neighbor sampling (requires a pre-built adjacency).
+
+    Seeds are the batch's (src, dst[, neg...]) nodes queried at the batch
+    event times; each seed draws K uniform neighbors from its strict past
+    (``t < query_t``), so a once-per-split ``build`` over the full stream
+    leaks nothing. Stateless across batches except for the reproducible
+    draw counter (checkpointed via ``state_dict``).
+    """
 
     def __init__(self, num_nodes: int, k: int, include_negatives: bool = False,
                  seed: int = 0):
@@ -293,13 +362,24 @@ class UniformNeighborHook(Hook):
         self.include_negatives = include_negatives
 
     def build(self, src, dst, t, eids=None) -> "UniformNeighborHook":
+        """Build the sampler's CSR-by-time adjacency; returns self."""
         self.sampler.build(src, dst, t, eids)
         return self
 
     def reset_state(self) -> None:
+        """Rewind the sampler's draw counter (epochs replay exactly)."""
         self.sampler.reset_state()
 
+    def state_dict(self) -> dict:
+        """Checkpoint the sampler (shared host/device uniform contract)."""
+        return self.sampler.state_dict()
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore state saved by either uniform sampler."""
+        self.sampler.load_state_dict(state)
+
     def __call__(self, batch: Batch) -> Batch:
+        """Sample hop-1 uniform temporal neighborhoods for the batch."""
         src, dst, t = batch["src"], batch["dst"], batch["time"]
         seeds = [src, dst]
         times = [t, t]
@@ -313,6 +393,30 @@ class UniformNeighborHook(Hook):
         batch["nbr_ids"], batch["nbr_times"] = blk.nbr_ids, blk.nbr_times
         batch["nbr_eids"], batch["nbr_mask"] = blk.nbr_eids, blk.mask
         return batch
+
+
+class DeviceUniformNeighborHook(UniformNeighborHook):
+    """Device-resident uniform temporal neighbor sampling
+    (``device_sampling=True`` + ``sampler="uniform"``).
+
+    Same contract and seed assembly as ``UniformNeighborHook`` but backed by
+    ``DeviceUniformSampler``: the CSR-by-time adjacency lives on the
+    accelerator and sampling is one jitted composite-key ``searchsorted``
+    over the whole seed batch — the produced neighbor tensors are born
+    device-resident, mirroring ``DeviceRecencyNeighborHook``.
+    """
+
+    def __init__(self, num_nodes: int, k: int, include_negatives: bool = False,
+                 seed: int = 0, device=None):
+        from repro.core.device_uniform import DeviceUniformSampler
+
+        super().__init__(num_nodes, k, include_negatives=include_negatives,
+                         seed=seed)
+        self.sampler = DeviceUniformSampler(num_nodes, k, seed=seed,
+                                            device=device)
+        # Shared checkpoint key with the host twin (see
+        # DeviceRecencyNeighborHook): state_dicts are interchangeable.
+        self.state_key = "UniformNeighborHook"
 
 
 class EdgeFeatureLookupHook(Hook):
@@ -425,6 +529,7 @@ class DOSEstimateHook(Hook):
         self._rng = np.random.default_rng(seed)
 
     def reset_state(self) -> None:
+        """Stateless across epochs (probe RNG deliberately persists)."""
         pass
 
     def __call__(self, batch: Batch) -> Batch:

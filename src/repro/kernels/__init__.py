@@ -13,4 +13,7 @@ Kernels:
   segment_reduce     — sorted-segment sum as MXU one-hot matmuls
                        (discretization psi_r + GCN aggregation)
   ssd_chunk          — mamba2 SSD intra-chunk + fused state recurrence
+
+Memory layouts, the scalar-prefetch/DMA tricks, and the interpret-mode
+parity-testing story are documented in ``docs/kernels.md``.
 """

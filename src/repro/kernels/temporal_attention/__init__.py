@@ -1,13 +1,16 @@
 from repro.kernels.temporal_attention.kernel import (
     fused_recency_attention_kernel,
+    fused_temporal_layer_kernel,
     temporal_attention_kernel,
 )
 from repro.kernels.temporal_attention.ops import (
     fused_recency_attention,
+    fused_temporal_layer,
     temporal_attention,
 )
 from repro.kernels.temporal_attention.ref import (
     fused_recency_attention_ref,
+    fused_temporal_layer_ref,
     temporal_attention_ref,
 )
 
@@ -15,6 +18,9 @@ __all__ = [
     "fused_recency_attention",
     "fused_recency_attention_kernel",
     "fused_recency_attention_ref",
+    "fused_temporal_layer",
+    "fused_temporal_layer_kernel",
+    "fused_temporal_layer_ref",
     "temporal_attention",
     "temporal_attention_kernel",
     "temporal_attention_ref",

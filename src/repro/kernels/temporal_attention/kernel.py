@@ -1,10 +1,14 @@
-"""Temporal neighbor attention Pallas TPU kernel.
+"""Temporal neighbor attention Pallas TPU kernels.
 
 The paper's profiling (Table 11) puts TGAT attention + sampling at ~28% of
 epoch time. On TPU the hot loop is: for each seed node, attend its K most
-recent neighbors (K = 10..32, padded). This kernel tiles seeds into VMEM
-blocks and keeps the whole (block_s, K) score tile resident — one softmax
-pass, no HBM round-trip for the intermediate scores.
+recent neighbors (K = 10..32, padded). See ``docs/kernels.md`` for the full
+memory-space layout and parity-testing story.
+
+``temporal_attention_kernel`` is the un-fused baseline: it consumes
+pre-gathered ``(S, K, H, D)`` k/v tensors, tiles seeds into VMEM blocks and
+keeps the whole (block_s, K) score tile resident — one softmax pass, no HBM
+round-trip for the intermediate scores.
 
 Grid: (num_seed_blocks,) — embarrassingly parallel over seeds.
 Blocks (VMEM):
@@ -17,16 +21,34 @@ Blocks (VMEM):
 With block_s=128, K=32, H=2, D=64 the working set is ~4.5 MiB f32 — well
 inside the 16 MiB VMEM budget, and head_dim 64/128 keeps MXU tiles aligned.
 
-``fused_recency_attention_kernel`` is the device-sampling variant: instead
-of consuming pre-gathered ``(S, K, H, D)`` k/v tensors, it takes the seed
-ids, the resident recency-buffer rows (``buf_ids`` from
-``DeviceRecencySampler``) and node-level k/v tables, and performs the
-neighbor gather *inside* the kernel — the buffer row and each neighbor's
-table row are DMA'd from HBM into VMEM scratch per seed, so the fat
-``(S, K, H, D)`` intermediates never exist in HBM. Seed ids arrive via
+``fused_temporal_layer_kernel`` is the device-sampling variant (the layer-1
+compute of TGAT/TGN when ``device_sampling=True``): instead of consuming
+pre-gathered ``(S, K, H, D)`` k/v tensors, it takes the seed ids + query
+times, the resident packed recency buffer (``(N+1, K, 3)`` rows of
+``DeviceRecencySampler``) and *node-level* k/v tables, and performs the
+neighbor gather inside the kernel. The edge-feature and Bochner
+time-encoding terms of the TGAT key/value projections are folded in as
+additive biases computed in VMEM:
+
+  k[s, j] = k_table[nbr_j]                      # DMA'd node-level term
+          + phi(t_s - t_j) @ Wt_k               # in-kernel time bias
+          + edge_feats[eid_j] @ We_k            # DMA'd edge bias
+
+so the fat ``(S, K, H, D)`` intermediates never exist in HBM. The buffer
+row (ids, times, eids) and each neighbor's table/edge-feature row are DMA'd
+from HBM into VMEM scratch per seed; seed ids and query times arrive via
 scalar prefetch (``PrefetchScalarGridSpec``) so DMA source indices are known
-before the kernel body runs. The un-fused ``temporal_attention_kernel`` and
-the jnp oracle remain the correctness references.
+before the kernel body runs.
+
+Per-seed DMAs are double-buffered: while seed ``j``'s neighborhood is being
+reduced on the VPU/MXU, seed ``j+1``'s buffer row and its K neighbor-row
+copies (issued back-to-back, all in flight at once) land in the other half
+of a 2-slot scratch. ``fused_recency_attention_kernel`` (the PR-1 surface:
+ids-only buffer, no bias folding) is kept as a thin wrapper and runs through
+the same double-buffered body.
+
+The jnp oracles in ``ref.py`` remain the correctness references
+(``interpret=True`` executes these kernel bodies on CPU for parity tests).
 """
 
 from __future__ import annotations
@@ -98,51 +120,140 @@ def temporal_attention_kernel(q, k, v, mask, *, block_s: int = 128,
     return out[:S]
 
 
-def _fused_recency_attention_kernel(
+def _fused_layer_kernel(
     seeds_ref,  # scalar prefetch: (S_pad,) int32 seed node ids (SMEM)
-    q_ref,      # (block_s, H, D) VMEM
-    k_hbm,      # (N, H, D) ANY/HBM — node-level key table
-    v_hbm,      # (N, H, D) ANY/HBM — node-level value table
-    buf_hbm,    # (Nb, K) ANY/HBM — resident recency buffer (neighbor ids)
-    o_ref,      # (block_s, H, D) VMEM
-    ids_smem,   # (K,) int32 SMEM scratch — DMA'd buffer row (for indexing)
-    ids_vmem,   # (K,) int32 VMEM scratch — same row (for the vector mask)
-    k_scr,      # (K, H, D) VMEM scratch
-    v_scr,      # (K, H, D) VMEM scratch
-    sem_ids, sem_ids2, sem_k, sem_v,
-    *, scale: float, block_s: int, kbuf: int,
+    times_ref,  # scalar prefetch: (S_pad,) int32 seed query times (SMEM)
+    *refs,
+    scale: float, block_s: int, kbuf: int, heads: int, hdim: int,
+    has_time: bool, has_edge: bool,
 ):
+    """Double-buffered fused gather + bias-fold + attention body.
+
+    ``refs`` unpacks (in order) the non-prefetch inputs, the output, and the
+    scratch allocated by ``fused_temporal_layer_kernel``; the exact layout
+    depends on the static ``has_time`` / ``has_edge`` flags.
+    """
+    it = iter(refs)
+    q_ref = next(it)                     # (bs, H, D) VMEM
+    k_hbm = next(it)                     # (N, H, D) ANY/HBM node key table
+    v_hbm = next(it)                     # (N, H, D) ANY/HBM node value table
+    buf_hbm = next(it)                   # (Nb, K, 3) ANY/HBM packed buffer
+    if has_time:
+        tw_ref = next(it)                # (1, d_time) VMEM Bochner freqs
+        tb_ref = next(it)                # (1, d_time) VMEM Bochner phases
+        wtk_ref = next(it)               # (d_time, H*D) VMEM key time proj
+        wtv_ref = next(it)               # (d_time, H*D) VMEM value time proj
+    if has_edge:
+        ef_hbm = next(it)                # (E, d_edge) ANY/HBM edge features
+        wek_ref = next(it)               # (d_edge, H*D) VMEM key edge proj
+        wev_ref = next(it)               # (d_edge, H*D) VMEM value edge proj
+    o_ref = next(it)                     # (bs, H, D) VMEM
+    row_smem = next(it)                  # (2, K, 3) SMEM — scalar DMA indices
+    row_vmem = next(it)                  # (2, K, 3) VMEM — vector mask/times
+    k_scr = next(it)                     # (2, K, H, D) VMEM
+    v_scr = next(it)                     # (2, K, H, D) VMEM
+    e_scr = next(it) if has_edge else None   # (2, K, d_edge) VMEM
+    sem_row = next(it)                   # DMA((2,)) — per-slot semaphores
+    sem_rowv = next(it)
+    sem_k = next(it)
+    sem_v = next(it)
+    sem_e = next(it) if has_edge else None
+
     pid = pl.program_id(0)
 
-    def per_seed(j, carry):
+    def row_copies(j):
+        sl = j % 2
         seed = seeds_ref[pid * block_s + j]
-        # Buffer row -> SMEM (scalar reads drive the gather DMAs below) and
-        # -> VMEM (vector mask for the softmax).
-        row = pltpu.make_async_copy(buf_hbm.at[seed], ids_smem, sem_ids)
-        row.start()
-        row_v = pltpu.make_async_copy(buf_hbm.at[seed], ids_vmem, sem_ids2)
-        row_v.start()
-        row.wait()
+        return (
+            pltpu.make_async_copy(buf_hbm.at[seed], row_smem.at[sl],
+                                  sem_row.at[sl]),
+            pltpu.make_async_copy(buf_hbm.at[seed], row_vmem.at[sl],
+                                  sem_rowv.at[sl]),
+        )
 
-        def gather(kk, c):
-            nid = jnp.maximum(ids_smem[kk], 0)  # clamp padding (-1) to row 0
-            ck = pltpu.make_async_copy(k_hbm.at[nid], k_scr.at[kk], sem_k)
-            cv = pltpu.make_async_copy(v_hbm.at[nid], v_scr.at[kk], sem_v)
-            ck.start()
-            cv.start()
-            ck.wait()
-            cv.wait()
+    def issue_nbrs(j):
+        """Start all K neighbor-row copies (k, v[, edge]) back-to-back so
+        they are in flight concurrently; requires row_smem[slot] landed."""
+        sl = j % 2
+
+        def one(kk, c):
+            nid = jnp.maximum(row_smem[sl, kk, 0], 0)  # clamp padding (-1)
+            pltpu.make_async_copy(k_hbm.at[nid], k_scr.at[sl, kk],
+                                  sem_k.at[sl]).start()
+            pltpu.make_async_copy(v_hbm.at[nid], v_scr.at[sl, kk],
+                                  sem_v.at[sl]).start()
+            if has_edge:
+                eid = jnp.maximum(row_smem[sl, kk, 2], 0)
+                pltpu.make_async_copy(ef_hbm.at[eid], e_scr.at[sl, kk],
+                                      sem_e.at[sl]).start()
             return c
 
-        jax.lax.fori_loop(0, kbuf, gather, 0)
+        jax.lax.fori_loop(0, kbuf, one, 0)
+
+    def wait_nbrs(j):
+        sl = j % 2
+
+        def one(kk, c):
+            nid = jnp.maximum(row_smem[sl, kk, 0], 0)
+            pltpu.make_async_copy(k_hbm.at[nid], k_scr.at[sl, kk],
+                                  sem_k.at[sl]).wait()
+            pltpu.make_async_copy(v_hbm.at[nid], v_scr.at[sl, kk],
+                                  sem_v.at[sl]).wait()
+            if has_edge:
+                eid = jnp.maximum(row_smem[sl, kk, 2], 0)
+                pltpu.make_async_copy(ef_hbm.at[eid], e_scr.at[sl, kk],
+                                      sem_e.at[sl]).wait()
+            return c
+
+        jax.lax.fori_loop(0, kbuf, one, 0)
+
+    def stage(j):
+        """Issue seed j's DMAs: buffer row, then (once the scalar copy of
+        the row has landed, so neighbor indices are known) the batched
+        neighbor-row copies."""
+        row_s, row_v = row_copies(j)
+        row_s.start()
+        row_v.start()
+        row_s.wait()
+        issue_nbrs(j)
+
+    # Prologue: stage seed 0; the loop then overlaps seed j+1's copies with
+    # seed j's compute (classic 2-slot software pipeline).
+    stage(0)
+
+    def per_seed(j, carry):
+        @pl.when(j + 1 < block_s)
+        def _():
+            stage(j + 1)
+
+        sl = j % 2
+        _, row_v = row_copies(j)
         row_v.wait()
+        wait_nbrs(j)
 
-        q = q_ref[j].astype(jnp.float32) * scale  # (H, D)
-        k = k_scr[...].astype(jnp.float32)  # (K, H, D)
-        v = v_scr[...].astype(jnp.float32)
-        mask = ids_vmem[...] >= 0  # (K,)
+        ids = row_vmem[sl, :, 0]                      # (K,)
+        mask = ids >= 0
+        k = k_scr[sl].astype(jnp.float32).reshape(kbuf, heads * hdim)
+        v = v_scr[sl].astype(jnp.float32).reshape(kbuf, heads * hdim)
+        if has_time:
+            # dt in int32 first (exactly like nn.time_encode's caller), then
+            # the Bochner encoding phi = cos(dt * w + b) on the VPU, then the
+            # (K, d_time) @ (d_time, H*D) bias matmul on the MXU.
+            dt = (times_ref[pid * block_s + j] - row_vmem[sl, :, 1]).astype(
+                jnp.float32)
+            phi = jnp.cos(dt[:, None] * tw_ref[0] + tb_ref[0])
+            k = k + phi @ wtk_ref[...]
+            v = v + phi @ wtv_ref[...]
+        if has_edge:
+            ev = (row_vmem[sl, :, 2] >= 0).astype(jnp.float32)[:, None]
+            e = e_scr[sl].astype(jnp.float32) * ev   # zero featureless slots
+            k = k + e @ wek_ref[...]
+            v = v + e @ wev_ref[...]
+        k = k.reshape(kbuf, heads, hdim)
+        v = v.reshape(kbuf, heads, hdim)
 
-        s = jnp.einsum("hd,khd->hk", q, k)  # (H, K)
+        q = q_ref[j].astype(jnp.float32) * scale      # (H, D)
+        s = jnp.einsum("hd,khd->hk", q, k)            # (H, K)
         s = jnp.where(mask[None, :], s, NEG_INF)
         m = s.max(axis=-1, keepdims=True)
         p = jnp.exp(s - m)
@@ -154,6 +265,99 @@ def _fused_recency_attention_kernel(
     jax.lax.fori_loop(0, block_s, per_seed, 0)
 
 
+def fused_temporal_layer_kernel(
+    q, k_table, v_table, seeds, seed_times, buf, *,
+    time_w=None, time_b=None, wt_k=None, wt_v=None,
+    edge_feats=None, we_k=None, we_v=None,
+    block_s: int = 128, scale: float | None = None,
+    interpret: bool = False,
+):
+    """Fused neighbor-gather + bias-fold + attention over the packed buffer.
+
+    q: (S, H, D) seed queries; k_table, v_table: (N, H, D) node-level
+    projected keys/values (stay in HBM); seeds/seed_times: (S,) int32;
+    buf: (Nb, K, 3) packed circular buffer (channels = neighbor id, time,
+    edge id; -1 id = empty slot) — ``DeviceRecencySampler.state["buf"]``.
+
+    Optional bias folds (both on or both off per group):
+      time_w/time_b: (d_time,) Bochner parameters, wt_k/wt_v:
+        (d_time, H*D) time-encoding slices of the key/value projections;
+      edge_feats: (E, d_edge) edge-feature storage (stays in HBM), we_k /
+        we_v: (d_edge, H*D) edge-feature slices of the projections.
+
+    Returns (S, H, D). The (S, K, H, D) gathered k/v exist only as 2-slot
+    (K, H, D) VMEM scratch, never in HBM; per-seed DMAs are double-buffered.
+    """
+    S, H, D = q.shape
+    K = buf.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    has_time = wt_k is not None
+    has_edge = we_k is not None
+
+    seeds = seeds.astype(jnp.int32)
+    seed_times = (jnp.zeros_like(seeds) if seed_times is None
+                  else seed_times.astype(jnp.int32))
+    buf = buf.astype(jnp.int32)
+    block_s = min(block_s, S)
+    pad = (-S) % block_s
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        seeds = jnp.pad(seeds, (0, pad))
+        seed_times = jnp.pad(seed_times, (0, pad))
+    ns = (S + pad) // block_s
+
+    full = lambda a: pl.BlockSpec(a.shape, lambda i, *_: (0,) * a.ndim)  # noqa: E731
+    in_specs = [
+        pl.BlockSpec((block_s, H, D), lambda i, *_: (i, 0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    operands = [q, k_table, v_table, buf]
+    if has_time:
+        tw = time_w.reshape(1, -1).astype(jnp.float32)
+        tb = time_b.reshape(1, -1).astype(jnp.float32)
+        wtk = wt_k.reshape(wt_k.shape[0], H * D).astype(jnp.float32)
+        wtv = wt_v.reshape(wt_v.shape[0], H * D).astype(jnp.float32)
+        in_specs += [full(tw), full(tb), full(wtk), full(wtv)]
+        operands += [tw, tb, wtk, wtv]
+    if has_edge:
+        wek = we_k.reshape(we_k.shape[0], H * D).astype(jnp.float32)
+        wev = we_v.reshape(we_v.shape[0], H * D).astype(jnp.float32)
+        in_specs += [pl.BlockSpec(memory_space=pltpu.ANY), full(wek),
+                     full(wev)]
+        operands += [edge_feats, wek, wev]
+
+    scratch = [
+        pltpu.SMEM((2, K, 3), jnp.int32),
+        pltpu.VMEM((2, K, 3), jnp.int32),
+        pltpu.VMEM((2, K, H, D), k_table.dtype),
+        pltpu.VMEM((2, K, H, D), v_table.dtype),
+    ]
+    if has_edge:
+        scratch.append(pltpu.VMEM((2, K, edge_feats.shape[1]),
+                                  edge_feats.dtype))
+    scratch += [pltpu.SemaphoreType.DMA((2,))] * (5 if has_edge else 4)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ns,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_s, H, D), lambda i, *_: (i, 0, 0)),
+        scratch_shapes=scratch,
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_layer_kernel, scale=scale, block_s=block_s, kbuf=K,
+            heads=H, hdim=D, has_time=has_time, has_edge=has_edge,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S + pad, H, D), q.dtype),
+        interpret=interpret,
+    )(seeds, seed_times, *operands)
+    return out[:S]
+
+
 def fused_recency_attention_kernel(q, k_table, v_table, seeds, buf_ids, *,
                                    block_s: int = 128,
                                    scale: float | None = None,
@@ -163,49 +367,19 @@ def fused_recency_attention_kernel(q, k_table, v_table, seeds, buf_ids, *,
     q: (S, H, D) seed queries; k_table, v_table: (N, H, D) node-level
     projected keys/values (stay in HBM); seeds: (S,) int32 node ids;
     buf_ids: (Nb, K) int32 circular-buffer neighbor ids (-1 = empty, rows
-    indexed by node id — ``DeviceRecencySampler.state['ids']``).
-    Returns (S, H, D). The (S, K, H, D) gathered k/v exist only as a
-    (K, H, D) VMEM scratch per seed, never in HBM.
+    indexed by node id — ``DeviceRecencySampler.buffer_ids``).
+    Returns (S, H, D).
+
+    Thin wrapper over ``fused_temporal_layer_kernel`` with the time/edge
+    bias folds disabled (ids-only buffer): same double-buffered DMA body,
+    no (S, K, H, D) HBM intermediate.
     """
-    S, H, D = q.shape
-    K = buf_ids.shape[1]
-    scale = scale if scale is not None else 1.0 / np.sqrt(D)
-
-    seeds = seeds.astype(jnp.int32)
     buf_ids = buf_ids.astype(jnp.int32)
-    block_s = min(block_s, S)
-    pad = (-S) % block_s
-    if pad:
-        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
-        seeds = jnp.pad(seeds, (0, pad))
-    ns = (S + pad) // block_s
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(ns,),
-        in_specs=[
-            pl.BlockSpec((block_s, H, D), lambda i, *_: (i, 0, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
-        out_specs=pl.BlockSpec((block_s, H, D), lambda i, *_: (i, 0, 0)),
-        scratch_shapes=[
-            pltpu.SMEM((K,), jnp.int32),
-            pltpu.VMEM((K,), jnp.int32),
-            pltpu.VMEM((K, H, D), k_table.dtype),
-            pltpu.VMEM((K, H, D), v_table.dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-        ],
+    buf = jnp.stack(
+        [buf_ids, jnp.zeros_like(buf_ids), jnp.full_like(buf_ids, -1)],
+        axis=-1,
     )
-    out = pl.pallas_call(
-        functools.partial(_fused_recency_attention_kernel, scale=scale,
-                          block_s=block_s, kbuf=K),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((S + pad, H, D), q.dtype),
-        interpret=interpret,
-    )(seeds, q, k_table, v_table, buf_ids)
-    return out[:S]
+    return fused_temporal_layer_kernel(
+        q, k_table, v_table, seeds, None, buf,
+        block_s=block_s, scale=scale, interpret=interpret,
+    )

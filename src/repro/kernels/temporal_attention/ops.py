@@ -1,11 +1,17 @@
 """Public jit'd wrappers: Pallas kernels on TPU, jnp references elsewhere.
 
 ``temporal_attention``       — consumes pre-gathered (S, K, H, D) k/v.
-``fused_recency_attention``  — device-sampling path: consumes seed ids plus
-                               the resident recency buffer and node-level
-                               k/v tables; the gather happens inside the
-                               kernel (TPU) or via a take in the reference
-                               (other backends), never as a hook on the host.
+``fused_recency_attention``  — device-sampling path (ids-only buffer):
+                               consumes seed ids plus the resident recency
+                               buffer and node-level k/v tables; the gather
+                               happens inside the kernel (TPU) or via a take
+                               in the reference (other backends), never as a
+                               hook on the host.
+``fused_temporal_layer``     — the full TGAT/TGN layer-1 compute for
+                               ``device_sampling=True``: adds the in-kernel
+                               time-encoding and edge-feature bias folds and
+                               a custom VJP so the fused forward is usable
+                               inside a jitted, differentiated train step.
 """
 
 from __future__ import annotations
@@ -16,10 +22,12 @@ import jax
 
 from repro.kernels.temporal_attention.kernel import (
     fused_recency_attention_kernel,
+    fused_temporal_layer_kernel,
     temporal_attention_kernel,
 )
 from repro.kernels.temporal_attention.ref import (
     fused_recency_attention_ref,
+    fused_temporal_layer_ref,
     temporal_attention_ref,
 )
 
@@ -41,3 +49,78 @@ def fused_recency_attention(q, k_table, v_table, seeds, buf_ids, *,
         return fused_recency_attention_kernel(
             q, k_table, v_table, seeds, buf_ids, block_s=block_s)
     return fused_recency_attention_ref(q, k_table, v_table, seeds, buf_ids)
+
+
+def _assemble(flt: dict, aux: dict) -> dict:
+    """Merge the differentiable / auxiliary operand dicts back into the
+    keyword form shared by the kernel and the reference."""
+    kw = dict(aux)
+    kw.update(flt)
+    return kw
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _fused_layer_call(flt, aux, block_s, interpret):
+    return fused_temporal_layer_kernel(
+        **_assemble(flt, aux), block_s=block_s, interpret=interpret)
+
+
+def _fused_layer_fwd(flt, aux, block_s, interpret):
+    return _fused_layer_call(flt, aux, block_s, interpret), (flt, aux)
+
+
+def _fused_layer_bwd(block_s, interpret, res, g):
+    # Flash-attention-style backward: recompute from the jnp oracle. The
+    # recompute materializes the (S, K, H, D) intermediates, so only the
+    # forward is gather-free; a dedicated backward kernel is a ROADMAP item.
+    flt, aux = res
+    _, vjp = jax.vjp(lambda f: fused_temporal_layer_ref(**_assemble(f, aux)),
+                     flt)
+    return vjp(g)[0], None
+
+
+_fused_layer_call.defvjp(_fused_layer_fwd, _fused_layer_bwd)
+
+
+def fused_temporal_layer(q, k_table, v_table, seeds, seed_times, buf, *,
+                         time_w=None, time_b=None, wt_k=None, wt_v=None,
+                         edge_feats=None, we_k=None, we_v=None,
+                         block_s: int = 128, mode: str = "auto"):
+    """Fused TGAT/TGN-style layer attention over the packed recency buffer.
+
+    Computes, for each seed ``s`` with packed buffer row ``buf[seeds[s]]``:
+
+      k[s, j] = k_table[id_j] + phi(t_s - t_j) @ wt_k
+                + edge_feats[eid_j] @ we_k        (v analogously)
+      out[s]  = softmax((q[s] * scale) . k[s]) @ v[s]   over valid slots
+
+    q: (S, H, D); k_table/v_table: (N, H, D) node-level projected terms
+    (dense bias already folded in by the caller); seeds/seed_times: (S,)
+    int32; buf: (Nb, K, 3). The time group (``time_w``, ``time_b``,
+    ``wt_k``, ``wt_v``) and edge group (``edge_feats``, ``we_k``, ``we_v``)
+    are each optional but all-or-nothing.
+
+    ``mode`` selects the implementation:
+      * ``"auto"``      — Pallas kernel on TPU, jnp reference elsewhere;
+      * ``"ref"``       — force the materializing jnp oracle;
+      * ``"kernel"``    — force the Pallas kernel (compiled);
+      * ``"interpret"`` — force the kernel in interpret mode (CPU parity
+                          tests and jaxpr inspection).
+
+    The kernel path is differentiable via a custom VJP whose backward
+    recomputes from the reference (forward stays gather-free in HBM).
+    """
+    if mode not in ("auto", "ref", "kernel", "interpret"):
+        raise ValueError(f"unknown fused_temporal_layer mode {mode!r}")
+    use_kernel = (mode in ("kernel", "interpret")
+                  or (mode == "auto" and jax.default_backend() == "tpu"))
+    flt = {"q": q, "k_table": k_table, "v_table": v_table}
+    aux = {"seeds": seeds, "seed_times": seed_times, "buf": buf}
+    if wt_k is not None:
+        flt.update(time_w=time_w, time_b=time_b, wt_k=wt_k, wt_v=wt_v)
+    if we_k is not None:
+        flt.update(we_k=we_k, we_v=we_v)
+        aux.update(edge_feats=edge_feats)
+    if use_kernel:
+        return _fused_layer_call(flt, aux, block_s, mode == "interpret")
+    return fused_temporal_layer_ref(**_assemble(flt, aux))

@@ -43,3 +43,48 @@ def fused_recency_attention_ref(q, k_table, v_table, seeds, buf_ids, *,
     k = k_table[safe]  # (S, K, H, D) — materialized here, not in the kernel
     v = v_table[safe]
     return temporal_attention_ref(q, k, v, mask, scale=scale)
+
+
+def fused_temporal_layer_ref(
+    q, k_table, v_table, seeds, seed_times, buf, *,
+    time_w=None, time_b=None, wt_k=None, wt_v=None,
+    edge_feats=None, we_k=None, we_v=None, scale: float | None = None,
+):
+    """Oracle for ``fused_temporal_layer_kernel`` — and the non-TPU fallback
+    of ``ops.fused_temporal_layer``.
+
+    Materializes everything the kernel keeps in VMEM scratch: the gathered
+    node-level k/v rows (S, K, H, D), the Bochner time-encoding bias
+    ``phi(t_seed - t_nbr) @ wt``, and the edge-feature bias
+    ``edge_feats[eid] @ we``; then runs the plain attention oracle. Same
+    argument shapes/semantics as the kernel (``buf``: (Nb, K, 3) packed
+    rows; bias groups optional).
+    """
+    S, H, D = q.shape
+    K = buf.shape[1]
+    ids = buf[seeds, :, 0]          # (S, K)
+    mask = ids >= 0
+    k = k_table[jnp.maximum(ids, 0)].reshape(S, K, H * D).astype(jnp.float32)
+    v = v_table[jnp.maximum(ids, 0)].reshape(S, K, H * D).astype(jnp.float32)
+    if wt_k is not None:
+        dt = (seed_times[:, None] - buf[seeds, :, 1]).astype(jnp.float32)
+        phi = jnp.cos(dt[..., None] * time_w.reshape(-1)
+                      + time_b.reshape(-1))                     # (S, K, dt)
+        k = k + phi @ wt_k.reshape(wt_k.shape[0], H * D)
+        v = v + phi @ wt_v.reshape(wt_v.shape[0], H * D)
+    if we_k is not None:
+        eids = buf[seeds, :, 2]
+        e = edge_feats[jnp.maximum(eids, 0)].astype(jnp.float32)
+        e = e * (eids >= 0)[..., None]          # zero featureless slots
+        k = k + e @ we_k.reshape(we_k.shape[0], H * D)
+        v = v + e @ we_v.reshape(we_v.shape[0], H * D)
+    k = k.reshape(S, K, H, D)
+    v = v.reshape(S, K, H, D)
+
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qs = q.astype(jnp.float32) * scale
+    s = jnp.einsum("shd,skhd->shk", qs, k)
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1)[:, None, None], p, 0.0)
+    return jnp.einsum("shk,skhd->shd", p, v).astype(q.dtype)

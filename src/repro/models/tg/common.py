@@ -31,6 +31,7 @@ def split_seeds(h, batch_size: int):
 
 
 def link_decoder_init(key, d_model: int, hidden: int = 0):
+    """Init the 2-layer MLP link decoder over [h_u ; h_v]."""
     hidden = hidden or d_model
     return {"mlp": mlp_init(key, [2 * d_model, hidden, 1])}
 
@@ -74,8 +75,50 @@ def node_feature_init(key, num_nodes: int, d_static: int, d_model: int):
 
 
 def node_features(params, ids, static_feats=None):
+    """Gather per-id node features (learned embedding + optional static
+    projection); rows with id < 0 (padding) are zeroed."""
     safe = jnp.maximum(ids, 0)
     h = params["emb"][safe]
     if static_feats is not None and "static_proj" in params:
         h = h + dense(params["static_proj"], static_feats[safe])
     return jnp.where((ids >= 0)[..., None], h, 0.0)
+
+
+def all_node_features(params, static_feats=None):
+    """Every node's feature row at once: (N, d_model).
+
+    The node-level table the fused device-sampling attention gathers from
+    (instead of materializing per-seed ``node_features`` copies)."""
+    h = params["emb"]
+    if static_feats is not None and "static_proj" in params:
+        h = h + dense(params["static_proj"], static_feats)
+    return h
+
+
+def fused_mode(fused, batch):
+    """Resolve a model's ``fused`` argument against the batch contents.
+
+    Returns ``None`` (use the classic pre-gathered path) or a
+    ``fused_temporal_layer`` mode string. ``fused=None``/``"auto"`` engages
+    the fused path only when the batch carries the resident buffer
+    (``nbr_buf``, produced by ``DeviceRecencyNeighborHook``) *and* the
+    backend is TPU — on CPU/GPU the classic jnp path is both the oracle and
+    the fastest option, keeping ``device_sampling=True`` bit-identical to
+    the host-sampling pipeline there. Explicit values (``True``/"kernel"/
+    "interpret"/"ref") force the fused math and require ``nbr_buf``.
+    """
+    if fused is False:
+        return None
+    if fused is None or fused == "auto":
+        if "nbr_buf" in batch and jax.default_backend() == "tpu":
+            return "auto"
+        return None
+    if "nbr_buf" not in batch:
+        raise ValueError(
+            "fused temporal attention requires the resident packed buffer "
+            "(batch has no 'nbr_buf'): build RECIPE_TGB_LINK with "
+            "device_sampling=True and make sure DeviceRecencyNeighborHook "
+            "exposes it (expose_buffer=True — the auto default skips GPU, "
+            "where the fused kernel has no implementation)"
+        )
+    return "auto" if fused is True else fused

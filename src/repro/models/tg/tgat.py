@@ -4,6 +4,14 @@ Each layer computes a seed embedding by attending over the seed's temporal
 neighborhood; keys/values are [neighbor embedding || edge features ||
 Bochner time encoding of (t_seed - t_nbr)]. Two layers consume the 2-hop
 block produced by the recency/uniform neighbor hook.
+
+With ``device_sampling=True`` the batch additionally carries the resident
+packed recency buffer (``nbr_buf``), and ``embed`` can compute the layer-1
+attention with ``fused_temporal_layer`` — node-level k/v tables plus
+in-kernel time/edge bias folds — so the ``(S, K, H, Dh)`` pre-gathered
+neighbor tensors never materialize in HBM (see ``docs/kernels.md``). The
+classic pre-gathered path stays the numerical oracle and the non-TPU
+default.
 """
 
 from __future__ import annotations
@@ -13,8 +21,19 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models.tg.common import link_decoder_init, link_logits, node_feature_init, node_features
-from repro.nn.attention import mha_init, seed_neighbor_attention
+from repro.models.tg.common import (
+    all_node_features,
+    fused_mode,
+    link_decoder_init,
+    link_logits,
+    node_feature_init,
+    node_features,
+)
+from repro.nn.attention import (
+    fused_seed_neighbor_attention,
+    mha_init,
+    seed_neighbor_attention,
+)
 from repro.nn.mlp import mlp, mlp_init
 from repro.nn.time_encode import time_encode, time_encode_init
 
@@ -62,8 +81,71 @@ def _layer(params, l, cfg, h_seed, seed_t, h_nbr, nbr_t, nbr_feats, nbr_mask):
     return mlp(params[f"merge_{l}"], jnp.concatenate([att, h_seed], axis=-1))
 
 
-def embed(params, cfg: TGATConfig, batch, static_feats=None):
-    """Embed all S seeds. Uses hop-2 tensors when cfg.num_layers == 2."""
+def _fused_layer0(params, cfg, h_all, h_seed, seeds, seed_t, buf, edge_table,
+                  mode):
+    """Layer-0 attention for ``seeds`` straight off the packed buffer.
+
+    The kv projection's node term comes from the (N, d_model) table; the
+    time-encoding and edge-feature terms are folded in by the fused op, so
+    no ``(S, K, ·)`` kv tensor is built here.
+    """
+    dt0 = time_encode(params["time"], jnp.zeros_like(seed_t, jnp.float32))
+    att = fused_seed_neighbor_attention(
+        params["attn_0"], h_all, jnp.concatenate([h_seed, dt0], axis=-1),
+        seeds, seed_t, buf, params["time"], d_edge=cfg.d_edge,
+        edge_table=edge_table, num_heads=cfg.num_heads, mode=mode,
+    )
+    return mlp(params["merge_0"], jnp.concatenate([att, h_seed], axis=-1))
+
+
+def _embed_fused(params, cfg: TGATConfig, batch, static_feats, mode):
+    """Device-sampling embed: layer-1 compute via ``fused_temporal_layer``.
+
+    1-layer TGAT never materializes a pre-gathered neighbor tensor; 2-layer
+    TGAT fuses the hop-2 stage (the (S*K, K, ·) tensors) and keeps the final
+    layer's attention over the *computed* (S, K, d_model) layer-0 embeddings
+    — those are produced, not gathered, so there is nothing left to fuse.
+    """
+    seeds, seed_t = batch["seed_nodes"], batch["seed_times"]
+    buf = batch["nbr_buf"]
+    edge_table = batch.get("edge_feat_table") if cfg.d_edge else None
+    h_all = all_node_features(params["nodes"], static_feats)  # (N, d_model)
+    h_seed = h_all[seeds]
+    h1 = _fused_layer0(params, cfg, h_all, h_seed, seeds, seed_t, buf,
+                       edge_table, mode)
+    if cfg.num_layers == 1:
+        return h1
+
+    # Hop-1 frontier through layer 0 (fused over the same resident buffer;
+    # padded slots are clamped to node 0 and masked out again below).
+    nbr_ids, nbr_t, nbr_mask = (batch["nbr_ids"], batch["nbr_times"],
+                                batch["nbr_mask"])
+    S, K = nbr_ids.shape
+    f_nodes = nbr_ids.reshape(-1)
+    f_t = nbr_t.reshape(-1)
+    f_safe = jnp.maximum(f_nodes, 0)
+    h_f = jnp.where((f_nodes >= 0)[:, None], h_all[f_safe], 0.0)
+    h_f1 = _fused_layer0(params, cfg, h_all, h_f, f_safe, f_t, buf,
+                         edge_table, mode)
+    # Layer 1: classic attention over the computed layer-0 embeddings.
+    h_nbr1 = h_f1.reshape(S, K, -1)
+    nbr_feats = batch.get("nbr_feats") if cfg.d_edge else None
+    return _layer(params, 1, cfg, h1, seed_t, h_nbr1, nbr_t, nbr_feats,
+                  nbr_mask)
+
+
+def embed(params, cfg: TGATConfig, batch, static_feats=None, fused=None):
+    """Embed all S seeds. Uses hop-2 tensors when cfg.num_layers == 2.
+
+    ``fused`` selects the device-sampling fused attention path (see
+    ``models.tg.common.fused_mode``): ``None``/"auto" fuses on TPU when the
+    batch carries ``nbr_buf``; ``False`` forces the classic pre-gathered
+    path; "ref"/"kernel"/"interpret" force a specific fused implementation.
+    """
+    mode = fused_mode(fused, batch)
+    if mode is not None:
+        return _embed_fused(params, cfg, batch, static_feats, mode)
+
     seeds, seed_t = batch["seed_nodes"], batch["seed_times"]
     nbr_ids, nbr_t = batch["nbr_ids"], batch["nbr_times"]
     nbr_mask = batch["nbr_mask"]
@@ -93,6 +175,7 @@ def embed(params, cfg: TGATConfig, batch, static_feats=None):
     return _layer(params, 1, cfg, h_seed1, seed_t, h_nbr1, nbr_t, nbr_feats, nbr_mask)
 
 
-def link_scores(params, cfg: TGATConfig, batch, batch_size: int, static_feats=None):
-    h = embed(params, cfg, batch, static_feats)
+def link_scores(params, cfg: TGATConfig, batch, batch_size: int,
+                static_feats=None, fused=None):
+    h = embed(params, cfg, batch, static_feats, fused=fused)
     return link_logits(params["decoder"], h, batch_size)

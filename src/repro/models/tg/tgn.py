@@ -20,8 +20,19 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models.tg.common import link_decoder_init, link_logits, node_feature_init, node_features
-from repro.nn.attention import mha_init, seed_neighbor_attention
+from repro.models.tg.common import (
+    all_node_features,
+    fused_mode,
+    link_decoder_init,
+    link_logits,
+    node_feature_init,
+    node_features,
+)
+from repro.nn.attention import (
+    fused_seed_neighbor_attention,
+    mha_init,
+    seed_neighbor_attention,
+)
 from repro.nn.mlp import mlp, mlp_init
 from repro.nn.recurrent import gru, gru_init
 from repro.nn.time_encode import time_encode, time_encode_init
@@ -62,7 +73,44 @@ def init_state(cfg: TGNConfig):
     }
 
 
-def embed(params, cfg: TGNConfig, state, batch, static_feats=None):
+def _embed_fused(params, cfg: TGNConfig, state, batch, static_feats, mode):
+    """Device-sampling embed: attention over the resident packed buffer.
+
+    The kv input's node-level slice is ``memory ‖ node features`` — both are
+    (N, ·) tables — so the whole node term of the k/v projections becomes an
+    (N, H, Dh) table; time/edge terms are folded in by the fused op and the
+    per-seed (S, K, ·) kv tensors never materialize.
+    """
+    seeds, seed_t = batch["seed_nodes"], batch["seed_times"]
+    buf = batch["nbr_buf"]
+    edge_table = batch.get("edge_feat_table") if cfg.d_edge else None
+    mem = state["memory"]
+    h_all = all_node_features(params["nodes"], static_feats)
+    node_kv = jnp.concatenate([mem, h_all], axis=-1)  # (N, d_mem + d_model)
+    m_seed = mem[jnp.maximum(seeds, 0)]
+    h_seed = h_all[jnp.maximum(seeds, 0)]
+    q_in = jnp.concatenate(
+        [m_seed, h_seed,
+         time_encode(params["time"], jnp.zeros_like(seed_t, jnp.float32))],
+        axis=-1)
+    att = fused_seed_neighbor_attention(
+        params["attn"], node_kv, q_in, seeds, seed_t, buf, params["time"],
+        d_edge=cfg.d_edge, edge_table=edge_table, num_heads=cfg.num_heads,
+        mode=mode,
+    )
+    return mlp(params["merge"], jnp.concatenate([att, m_seed, h_seed], -1))
+
+
+def embed(params, cfg: TGNConfig, state, batch, static_feats=None, fused=None):
+    """Temporal-attention embedding of the batch seeds over node memory.
+
+    ``fused`` behaves as in ``tgat.embed`` (see
+    ``models.tg.common.fused_mode``).
+    """
+    mode = fused_mode(fused, batch)
+    if mode is not None:
+        return _embed_fused(params, cfg, state, batch, static_feats, mode)
+
     seeds, seed_t = batch["seed_nodes"], batch["seed_times"]
     nbr_ids, nbr_t, nbr_mask = batch["nbr_ids"], batch["nbr_times"], batch["nbr_mask"]
 
@@ -121,9 +169,9 @@ def update_memory(params, cfg: TGNConfig, state, batch):
 
 
 def link_scores(params, cfg: TGNConfig, state, batch, batch_size: int,
-                static_feats=None):
+                static_feats=None, fused=None):
     """Returns ((pos, neg), new_state)."""
-    h = embed(params, cfg, state, batch, static_feats)
+    h = embed(params, cfg, state, batch, static_feats, fused=fused)
     logits = link_logits(params["decoder"], h, batch_size)
     new_state = update_memory(params, cfg, state, batch)
     return logits, new_state

@@ -17,6 +17,8 @@ NEG_INF = -1e9
 
 
 def mha_init(key, d_q: int, d_kv: int, d_model: int, num_heads: int, dtype=jnp.float32):
+    """Init q/k/v/o dense params for multi-head attention with separate
+    query (d_q) and key/value (d_kv) input widths."""
     if d_model % num_heads:
         raise ValueError(f"d_model {d_model} not divisible by heads {num_heads}")
     kq, kk, kv, ko = jax.random.split(key, 4)
@@ -65,3 +67,59 @@ def seed_neighbor_attention(params, seed_feat, nbr_feat, nbr_mask, num_heads: in
     out = mha(params, seed_feat[:, None, :], nbr_feat, nbr_mask[:, None, :],
               num_heads=num_heads)
     return out[:, 0, :]
+
+
+def fused_seed_neighbor_attention(params, node_kv_in, q_in, seeds, seed_times,
+                                  buf, time_params, d_edge: int = 0,
+                                  edge_table=None, num_heads: int = 2,
+                                  mode: str = "auto"):
+    """Fused twin of ``seed_neighbor_attention`` over the resident recency
+    buffer (the ``device_sampling=True`` layer-1 compute of TGAT/TGN).
+
+    Instead of a pre-gathered ``(S, K, Dkv)`` neighbor tensor, this takes the
+    *node-level* slice of the kv inputs (``node_kv_in``: (N, d_node), e.g.
+    node features, or memory ‖ node features for TGN) and the packed buffer
+    ``buf``: (Nb, K, 3). The kv projection ``concat([node, edge, time]) @ W``
+    is split by input block: the node term becomes an (N, H, Dh) table
+    (dense bias folded in), while the edge-feature and Bochner time-encoding
+    terms are folded in as additive biases by ``fused_temporal_layer`` —
+    in-kernel on TPU, so the ``(S, K, H, Dh)`` gather never lands in HBM.
+
+    q_in: (S, Dq) query inputs (projected here); seeds/seed_times: (S,);
+    time_params: ``nn.time_encode`` params; edge_table: (E, d_edge) raw
+    edge-feature storage (or None). ``mode`` is forwarded to
+    ``fused_temporal_layer``. Returns (S, d_model).
+
+    Cost note: the node term is projected for *all* N nodes (O(N * d^2)
+    per call) instead of the classic path's O(S*K * d^2) gathered-row
+    projection — a win when S*K is comparable to or larger than N (the
+    TGB one-vs-many eval regime) and on TPU where it unlocks the in-kernel
+    gather, but asymptotically slower when N >> S*K. Projecting only the
+    batch-reachable rows needs dynamic shapes under jit and is a ROADMAP
+    item; gate with ``fused=False`` for huge-N / tiny-batch workloads.
+    """
+    from repro.kernels.temporal_attention import fused_temporal_layer
+
+    d_model = params["o"]["w"].shape[0]
+    h = num_heads
+    dh = d_model // h
+    d_node = node_kv_in.shape[-1]
+    wk, wv = params["k"], params["v"]
+    k_tab = (node_kv_in @ wk["w"][:d_node] + wk["b"]).reshape(-1, h, dh)
+    v_tab = (node_kv_in @ wv["w"][:d_node] + wv["b"]).reshape(-1, h, dh)
+    use_edge = bool(d_edge) and edge_table is not None
+    we_k = wk["w"][d_node:d_node + d_edge] if use_edge else None
+    we_v = wv["w"][d_node:d_node + d_edge] if use_edge else None
+    wt_k = wk["w"][d_node + d_edge:]
+    wt_v = wv["w"][d_node + d_edge:]
+    q = _split_heads(dense(params["q"], q_in), h)  # (S, H, Dh)
+    att = fused_temporal_layer(
+        q, k_tab, v_tab,
+        jnp.asarray(seeds, jnp.int32), jnp.asarray(seed_times, jnp.int32),
+        buf,
+        time_w=time_params["w"], time_b=time_params["b"],
+        wt_k=wt_k, wt_v=wt_v,
+        edge_feats=edge_table if use_edge else None,
+        we_k=we_k, we_v=we_v, mode=mode,
+    )
+    return dense(params["o"], att.reshape(-1, d_model))

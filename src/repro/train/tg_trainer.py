@@ -63,6 +63,7 @@ class LinkPredictionTrainer:
         model_kwargs: Optional[Dict[str, Any]] = None,
         device_sampling: bool = False,
         prefetch: int = 2,
+        sampler: str = "recency",
     ):
         if model_name not in _STATELESS | _STATEFUL:
             raise ValueError(f"unknown CTDG model {model_name!r}")
@@ -109,11 +110,34 @@ class LinkPredictionTrainer:
             num_hops=num_hops,
             batch_size=batch_size,
             eval_negatives=eval_negatives,
-            edge_feats=self.train_data.edge_feats if d_edge else None,
+            # Full-stream features: sampled nbr_eids are global event
+            # indices (the loader offsets sliced splits by their
+            # ``eid_offset``), so the lookup table must cover val/test
+            # warm-up too (the train rows are the identical prefix).
+            edge_feats=data.edge_feats if d_edge else None,
             edge_feat_dim=d_edge,
             seed=seed,
             device_sampling=device_sampling,
+            sampler=sampler,
+            # Only TGAT/TGN have a fused attention path consuming the
+            # exposed packed buffer; other models skip the snapshot so the
+            # device sampler's buffer update can donate in place.
+            expose_buffer=None if model_name in ("tgat", "tgn") else False,
         )
+        if sampler == "uniform":
+            # The uniform samplers draw from a static CSR-by-time adjacency;
+            # build it once over the full stream — the strict t < query_t
+            # filter at sample time keeps it leak-free.
+            from repro.core.tg_hooks import (
+                DeviceUniformNeighborHook,
+                UniformNeighborHook,
+            )
+
+            for hook in self.manager.hooks():
+                if isinstance(hook, (UniformNeighborHook,
+                                     DeviceUniformNeighborHook)):
+                    hook.build(data.src, data.dst, data.edge_t,
+                               np.arange(len(data.src), dtype=np.int64))
 
         self.opt_cfg = AdamWConfig(lr=lr)
         self.opt_state = adamw_init(self.params)

@@ -1,0 +1,74 @@
+"""Docs quality gates: relative links in README/docs must resolve, and the
+device-sampling-pipeline modules must keep full public-API docstring
+coverage (the PR-1 additions originally shipped thin — this stops that from
+regressing)."""
+
+import importlib
+import inspect
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_readme_and_docs_exist():
+    assert (ROOT / "README.md").exists()
+    assert (ROOT / "docs" / "architecture.md").exists()
+    assert (ROOT / "docs" / "kernels.md").exists()
+
+
+def test_relative_doc_links_resolve():
+    """Same rule as the CI link-check step (scripts/check_doc_links.py)."""
+    sys.path.insert(0, str(ROOT / "scripts"))
+    try:
+        from check_doc_links import broken_links, doc_files
+    finally:
+        sys.path.pop(0)
+    assert len(doc_files(ROOT)) >= 3
+    assert broken_links(ROOT) == []
+
+
+# Modules whose public surface must stay documented (the device-resident
+# sampling pipeline: PR-1 additions + the fused-attention layer).
+DOCUMENTED_MODULES = [
+    "repro.core.device_sampler",
+    "repro.core.device_uniform",
+    "repro.core.loader",
+    "repro.core.tg_hooks",
+    "repro.core.sampler",
+    "repro.core.recipes",
+    "repro.kernels.temporal_attention.kernel",
+    "repro.kernels.temporal_attention.ops",
+    "repro.kernels.temporal_attention.ref",
+    "repro.nn.attention",
+    "repro.models.tg.common",
+]
+
+
+def _undocumented(module_name):
+    m = importlib.import_module(module_name)
+    missing = []
+    if not inspect.getdoc(m):
+        missing.append(module_name)
+    for name, obj in vars(m).items():
+        if name.startswith("_") or getattr(obj, "__module__", None) != module_name:
+            continue
+        if inspect.isfunction(obj):
+            if not inspect.getdoc(obj):
+                missing.append(f"{module_name}.{name}")
+        elif inspect.isclass(obj):
+            if not inspect.getdoc(obj):
+                missing.append(f"{module_name}.{name}")
+            for mname, meth in vars(obj).items():
+                if mname.startswith("_"):
+                    continue
+                if inspect.isfunction(meth) and not inspect.getdoc(meth):
+                    missing.append(f"{module_name}.{name}.{mname}")
+    return missing
+
+
+def test_public_api_docstrings():
+    missing = []
+    for mod in DOCUMENTED_MODULES:
+        missing += _undocumented(mod)
+    assert missing == [], f"undocumented public symbols: {missing}"

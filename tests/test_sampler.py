@@ -4,6 +4,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     DeviceRecencySampler,
+    DeviceUniformSampler,
     RecencySampler,
     SequentialRecencySampler,
     UniformSampler,
@@ -203,6 +204,140 @@ def test_uniform_sampler_no_history():
     s.build(np.array([0]), np.array([1]), np.array([100]))
     blk = s.sample(np.array([5]), np.array([50]))
     assert not blk.mask.any()
+
+
+def _uniform_candidates(s: UniformSampler, seed: int, qt: int):
+    """The host sampler's ground-truth candidate multiset for one query:
+    all (id, time, eid) adjacency entries of ``seed`` with t < qt."""
+    lo, hi = s._indptr[seed], s._indptr[seed + 1]
+    sel = slice(lo, hi)
+    keep = s._adj_t[sel] < qt
+    return set(zip(s._adj_nbr[sel][keep].tolist(),
+                   s._adj_t[sel][keep].tolist(),
+                   s._adj_e[sel][keep].tolist()))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_nodes=st.integers(2, 25),
+    n_events=st.integers(1, 120),
+    k=st.integers(1, 6),
+)
+def test_property_device_uniform_parity_with_host(seed, n_nodes, n_events, k):
+    """Device CSR + composite-key search must agree with the host path on
+    randomized streams: identical valid-prefix masks, and every drawn
+    neighbor a member of the host's strict-past candidate set — including
+    duplicate timestamps, nodes with < K past neighbors, empty prefixes."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_nodes, n_events)
+    dst = rng.integers(0, n_nodes, n_events)
+    t = np.sort(rng.integers(0, 30, n_events))  # duplicate timestamps likely
+    eids = np.arange(n_events, dtype=np.int64)
+
+    host = UniformSampler(n_nodes, k, seed=1)
+    host.build(src, dst, t, eids)
+    dev = DeviceUniformSampler(n_nodes, k, seed=1)
+    dev.build(src, dst, t, eids)
+
+    seeds = rng.integers(0, n_nodes, 17)
+    qt = rng.integers(0, 40, 17)
+    hb = host.sample(seeds, qt)
+    db = dev.sample(seeds, qt)
+    np.testing.assert_array_equal(np.asarray(db.mask), hb.mask)
+    for i in range(len(seeds)):
+        cands = _uniform_candidates(host, int(seeds[i]), int(qt[i]))
+        if not cands:
+            assert not np.asarray(db.mask)[i].any()
+            continue
+        got = set(zip(np.asarray(db.nbr_ids)[i].tolist(),
+                      np.asarray(db.nbr_times)[i].tolist(),
+                      np.asarray(db.nbr_eids)[i].tolist()))
+        assert got <= cands
+        assert (np.asarray(db.nbr_times)[i] < qt[i]).all()
+
+
+def test_device_uniform_adjacency_matches_host_csr():
+    """The segment-op CSR build must produce exactly the host lexsort CSR
+    (same node-major/time-ascending layout, same indptr)."""
+    rng = np.random.default_rng(3)
+    N, E = 20, 200
+    src = rng.integers(0, N, E)
+    dst = rng.integers(0, N, E)
+    t = np.sort(rng.integers(0, 50, E))
+    host = UniformSampler(N, 4)
+    host.build(src, dst, t)
+    dev = DeviceUniformSampler(N, 4)
+    dev.build(src, dst, t)
+    adj = {k2: np.asarray(v) for k2, v in dev._adj.items()}
+    np.testing.assert_array_equal(adj["indptr"], host._indptr)
+    np.testing.assert_array_equal(adj["adj_t"], host._adj_t)
+    # Within exact (node, time) ties host lexsort and the device stable
+    # argsort both keep stream order, so ids/eids must match exactly too.
+    np.testing.assert_array_equal(adj["adj_nbr"], host._adj_nbr)
+    np.testing.assert_array_equal(adj["adj_e"], host._adj_e)
+
+
+def test_uniform_state_dict_roundtrip_and_interchange():
+    """Checkpoint contract: device state restores into the host uniform
+    sampler and vice versa; the draw counter round-trips so a restored run
+    continues the same reproducible draw sequence."""
+    rng = np.random.default_rng(9)
+    N, E, k = 15, 80, 3
+    src = rng.integers(0, N, E)
+    dst = rng.integers(0, N, E)
+    t = np.sort(rng.integers(0, 40, E))
+
+    dev = DeviceUniformSampler(N, k, seed=5)
+    dev.build(src, dst, t)
+    seeds = rng.integers(0, N, 9)
+    qt = rng.integers(10, 50, 9)
+    dev.sample(seeds, qt)  # advance the counter
+    state = dev.state_dict()
+    assert int(state["counter"]) == 1
+
+    # device -> device: identical continuation
+    dev2 = DeviceUniformSampler(N, k, seed=5)
+    dev2.load_state_dict(state)
+    a, b = dev.sample(seeds, qt), dev2.sample(seeds, qt)
+    _assert_same_np(a, b)
+
+    # device -> host: same adjacency, valid draws, same counter
+    host = UniformSampler(N, k, seed=5)
+    host.load_state_dict(state)
+    np.testing.assert_array_equal(host._indptr, np.asarray(dev._adj["indptr"]))
+    hb = host.sample(seeds, qt)
+    np.testing.assert_array_equal(hb.mask, np.asarray(a.mask))
+
+    # host -> device round-trip preserves the adjacency bit-for-bit
+    dev3 = DeviceUniformSampler(N, k, seed=5)
+    dev3.load_state_dict(host.state_dict())
+    np.testing.assert_array_equal(np.asarray(dev3._adj["adj_key"]),
+                                  np.asarray(dev._adj["adj_key"]))
+
+
+def test_uniform_reset_state_replays_draws():
+    """Counter-derived RNG: reset_state must replay the epoch exactly, for
+    both the host and device samplers."""
+    rng = np.random.default_rng(2)
+    N, E, k = 12, 60, 4
+    src, dst = rng.integers(0, N, E), rng.integers(0, N, E)
+    t = np.sort(rng.integers(0, 30, E))
+    for cls in (UniformSampler, DeviceUniformSampler):
+        s = cls(N, k, seed=3)
+        s.build(src, dst, t)
+        seeds, qt = rng.integers(0, N, 8), rng.integers(5, 35, 8)
+        first = [s.sample(seeds, qt) for _ in range(3)]
+        s.reset_state()
+        second = [s.sample(seeds, qt) for _ in range(3)]
+        for a, b in zip(first, second):
+            _assert_same_np(a, b)
+
+
+def test_device_uniform_requires_build():
+    s = DeviceUniformSampler(5, 2)
+    with pytest.raises(RuntimeError, match="build"):
+        s.sample(np.array([0]), np.array([10]))
 
 
 def test_uniform_sampler_global_searchsorted_matches_per_seed_loop():

@@ -29,6 +29,20 @@ def test_paper_fig5_workflow(small_stream):
     assert 0 <= mrr <= 1
 
 
+@pytest.mark.parametrize("device_sampling", [False, True])
+def test_uniform_sampler_trainer_end_to_end(small_stream, device_sampling):
+    """The uniform temporal sampler (host and device-CSR twins) is
+    interchangeable with recency inside the TGB link recipe."""
+    tr = LinkPredictionTrainer("tgat", small_stream, batch_size=48, k=4,
+                               eval_negatives=5, sampler="uniform",
+                               device_sampling=device_sampling,
+                               model_kwargs={"num_layers": 1})
+    loss, _ = tr.train_epoch()
+    assert np.isfinite(loss)
+    mrr, _ = tr.evaluate("val")
+    assert 0 <= mrr <= 1
+
+
 def test_rq2_granularity_is_a_hyperparameter(small_stream):
     """Snapshot granularity changes DTDG behaviour with one-line changes."""
     mrrs = {}
