@@ -1,0 +1,103 @@
+"""DTDG pipeline microbenchmarks: the scan-compiled epoch vs the
+per-snapshot jitted dispatch loop (same math, bit-identical results — the
+delta is pure dispatch/staging overhead), and the jitted device
+discretization vs host numpy. Both emit into BENCH_JSON via
+``benchmarks.common.emit`` so CI keeps a trajectory."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+
+from repro.core import TimeDelta
+from repro.core.discretize import (
+    _host_ticks,
+    discretize,
+    discretize_edges_padded,
+    jax_discretize_supported,
+)
+from repro.data import generate
+from repro.train import SnapshotLinkTrainer
+
+
+def jit_discretize_call(data, unit: TimeDelta, reduce: str = "count"):
+    """Steady-state jitted-discretize closure for benchmarks: stages the
+    edge arrays once (with the same ``jax_discretize_supported`` guard and
+    ``_host_ticks`` tick pre-division the library path applies, so huge raw
+    timestamps never wrap) and returns a zero-arg callable that dispatches
+    ``discretize_edges_padded`` and blocks on the result. Shared by
+    ``table5_discretize`` and ``bench_discretize_jit``."""
+    k = unit.ticks_per(data.granularity)
+    if not jax_discretize_supported(data, k):
+        raise ValueError(
+            "graph exceeds the int32 device-discretize guard; benchmark the "
+            "numpy path instead"
+        )
+    e = data.num_edge_events
+    t_staged, k_dev = _host_ticks(data.edge_t, k)
+    src = jnp.asarray(data.src)
+    dst = jnp.asarray(data.dst)
+    t = jnp.asarray(t_staged)
+    feats = (jnp.zeros((e, 0), jnp.float32) if data.edge_feats is None
+             else jnp.asarray(data.edge_feats))
+
+    def call():
+        out = discretize_edges_padded(src, dst, t, feats, k=k_dev,
+                                      reduce=reduce, capacity=e,
+                                      feat_dim=data.edge_feat_dim)
+        jax.block_until_ready(out[:3])
+
+    return call
+
+
+def bench_dtdg_scan_vs_loop(model: str = "tgcn", dataset: str = "wikipedia",
+                            scale: float = 0.01, unit: str = "h",
+                            d_embed: int = 32) -> None:
+    """Train-epoch wall time: one scanned jitted call vs T per-snapshot
+    dispatches (numerical parity is asserted in tests; this measures the
+    speedup the scan buys)."""
+    data = generate(dataset, scale=scale)
+    trainers = {
+        "scan": SnapshotLinkTrainer(model, data, snapshot_unit=unit,
+                                    d_embed=d_embed, compiled=True),
+        "loop": SnapshotLinkTrainer(model, data, snapshot_unit=unit,
+                                    d_embed=d_embed, compiled=False),
+    }
+    results = {}
+    for name, tr in trainers.items():
+        tr.train_epoch()  # compile + warm
+        results[name] = timeit(lambda tr=tr: tr.train_epoch(), repeats=3,
+                               warmup=0)
+    scan_tr = trainers["scan"]
+    emit(f"dtdg/{model}_{unit}_epoch_loop", results["loop"],
+         f"T={scan_tr.snapshots.num_snapshots} cap={scan_tr.capacity} "
+         f"backend={jax.default_backend()}")
+    emit(f"dtdg/{model}_{unit}_epoch_scan", results["scan"],
+         f"T={scan_tr.snapshots.num_snapshots} cap={scan_tr.capacity} "
+         f"backend={jax.default_backend()} "
+         f"speedup_vs_loop={results['loop'] / results['scan']:.2f}x")
+
+
+def bench_discretize_jit(dataset: str = "wikipedia", scale: float = 0.02,
+                         unit: str = "h") -> None:
+    """Steady-state jitted ``discretize_edges_padded`` dispatch vs the
+    vectorized host numpy path (same reduction)."""
+    data = generate(dataset, scale=scale)
+    gran = TimeDelta(unit)
+    t_np = timeit(lambda: discretize(data, gran, reduce="count"))
+    t_jit = timeit(jit_discretize_call(data, gran, reduce="count"))
+    e = data.num_edge_events
+    emit(f"dtdg/discretize_numpy_{unit}", t_np, f"E={e}")
+    emit(f"dtdg/discretize_jit_{unit}", t_jit,
+         f"E={e} vs_numpy={t_np / t_jit:.2f}x backend={jax.default_backend()}")
+
+
+def run() -> None:
+    bench_dtdg_scan_vs_loop()
+    bench_discretize_jit()
+
+
+if __name__ == "__main__":
+    run()

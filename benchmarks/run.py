@@ -9,6 +9,7 @@ for CI; table selection via ``--only table5,table9``.
   table6  snapshot granularity vs MRR (RQ2)
   table8  eval batch size / unit vs MRR (RQ3)
   table9  one-vs-many validation latency (batch dedup on/off)
+  dtdg    scan-compiled DTDG epoch vs per-snapshot loop + jitted discretize
   kernels kernel reference-path microbenchmarks
   roofline per-cell roofline terms (reads results/dryrun.json)
 """
@@ -29,6 +30,7 @@ def main() -> None:
     only = set(filter(None, args.only.split(",")))
 
     from benchmarks import (
+        dtdg_bench,
         kernels_bench,
         roofline,
         table3_linkpred,
@@ -48,6 +50,10 @@ def main() -> None:
         ("table8", lambda: table8_batchsize.run(scale=0.005 if fast else 0.01)),
         ("table9", lambda: table9_validation.run(scale=0.005 if fast else 0.02)),
         ("table11", lambda: table11_profile.run(scale=0.005 if fast else 0.01)),
+        ("dtdg", lambda: (
+            dtdg_bench.bench_dtdg_scan_vs_loop(scale=0.005 if fast else 0.01),
+            dtdg_bench.bench_discretize_jit(scale=0.01 if fast else 0.02),
+        )),
         ("kernels", kernels_bench.run),
         ("roofline", roofline.run),
     ]

@@ -44,11 +44,14 @@ def main():
         results[model] = mrr
 
     for model in ["gcn", "gclstm"]:
+        # Scan-compiled DTDG pipeline: one jitted call per train epoch.
         tr = SnapshotLinkTrainer(model, data, snapshot_unit="d", d_embed=64)
         for epoch in range(args.epochs):
-            loss, _ = tr.run_epoch(train=True)
-            print(f"[{model}] epoch {epoch}: loss={loss:.4f}")
-        results[model], _ = tr.run_epoch(train=False)
+            loss, secs = tr.train_epoch()
+            print(f"[{model}] epoch {epoch}: loss={loss:.4f} ({secs:.1f}s, "
+                  f"{tr.snapshots.num_snapshots} snapshots scanned)")
+        tr.save_checkpoint(f"{args.ckpt_dir}/{model}", args.epochs - 1)
+        results[model], _ = tr.evaluate("test")
 
     print("\ntest MRR (20 negatives):")
     for model, mrr in sorted(results.items(), key=lambda kv: -kv[1]):

@@ -8,13 +8,18 @@ temporal neighbor sampling.
 from repro.core.batch import Batch
 from repro.core.device_sampler import DeviceRecencySampler
 from repro.core.device_uniform import DeviceUniformSampler
-from repro.core.discretize import discretize, discretize_jax, discretize_naive
+from repro.core.discretize import (
+    discretize,
+    discretize_edges_padded,
+    discretize_jax,
+    discretize_naive,
+)
 from repro.core.events import EdgeEvent, NodeEvent
 from repro.core.granularity import EventOrderedError, TimeDelta
-from repro.core.graph import DGData, DGraph
+from repro.core.graph import DGData, DGraph, SnapshotTensor
 from repro.core.hooks import BASE_ATTRS, Hook, HookManager, LambdaHook, RecipeError, resolve_order
-from repro.core.loader import DGDataLoader, PrefetchLoader
-from repro.core.negatives import NegativeEdgeSampler
+from repro.core.loader import DGDataLoader, PrefetchLoader, snapshot_tensor
+from repro.core.negatives import NegativeEdgeSampler, snapshot_negatives
 from repro.core.recipes import (
     EVAL_KEY,
     RECIPE_ANALYTICS_DOS,
@@ -52,12 +57,16 @@ __all__ = [
     "RecipeError",
     "RecipeRegistry",
     "SequentialRecencySampler",
+    "SnapshotTensor",
     "TimeDelta",
     "UniformSampler",
     "discretize",
+    "discretize_edges_padded",
     "discretize_jax",
     "discretize_naive",
     "resolve_order",
+    "snapshot_negatives",
+    "snapshot_tensor",
     "RECIPE_TGB_LINK",
     "RECIPE_TGB_NODE",
     "RECIPE_DTDG_SNAPSHOT",

@@ -108,7 +108,8 @@ class DeviceUniformSampler:
     reproducible and ``reset_state`` rewinds an epoch exactly.
     """
 
-    def __init__(self, num_nodes: int, k: int, seed: int = 0, device=None):
+    def __init__(self, num_nodes: int, k: int, seed: int = 0, device=None,
+                 checkpoint_adjacency: bool = True):
         if k <= 0:
             raise ValueError("k must be positive")
         self.num_nodes = int(num_nodes)
@@ -117,6 +118,7 @@ class DeviceUniformSampler:
         self._counter = 0
         self._device = device or jax.devices()[0]
         self._adj = None
+        self.checkpoint_adjacency = bool(checkpoint_adjacency)
 
     # ------------------------------------------------------------------
     _as_i32 = staticmethod(as_int32)
@@ -174,8 +176,10 @@ class DeviceUniformSampler:
     def state_dict(self) -> dict:
         """Canonical host-numpy state: the CSR arrays plus the draw counter.
         Loads into either uniform sampler (self-contained restore at an
-        O(E) checkpoint cost — see ``UniformSampler.state_dict``)."""
-        if not self._built:
+        O(E) checkpoint cost — see ``UniformSampler.state_dict``). With
+        ``checkpoint_adjacency=False``, counter-only: the restoring side
+        rebuilds the CSR from storage via ``build(...)``."""
+        if not self._built or not self.checkpoint_adjacency:
             return {"counter": np.int64(self._counter)}
         host = jax.device_get(self._adj)
         return {

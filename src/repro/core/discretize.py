@@ -4,11 +4,14 @@ Maps a temporal graph at native granularity ``tau`` to a coarser granularity
 ``tau_hat``, grouping events into equivalence classes ``(floor(t/k), src,
 dst)`` and applying a reduction ``r`` to each class's features.
 
-Three implementations:
+Three interchangeable implementations:
   * ``discretize``        — vectorized numpy (lexsort + reduceat); the default
                             host path and the one benchmarked against UTG.
-  * ``discretize_jax``    — vectorized jnp segment ops (eager; device-resident
-                            data). Same semantics.
+  * ``discretize_jax``    — jnp segment ops over the **jittable** padded core
+                            ``discretize_edges_padded`` (static reduce, fixed
+                            output capacity + valid-count), so granularity
+                            conversion runs compiled on device. Same
+                            semantics as the numpy path.
   * ``discretize_naive``  — UTG-style python-dict reference baseline, used as
                             the comparison point for Table 5 and as the oracle
                             in property tests.
@@ -16,21 +19,27 @@ Three implementations:
 Reductions: first | last | sum | mean | max | count.
 ``count`` appends (or creates) a 1-dim feature holding the multiplicity.
 
-See ``docs/architecture.md`` (the CTDG/DTDG split) for where ``psi_r`` sits
-in the pipeline.
+The jitted core is also what ``core.loader.snapshot_tensor`` uses to
+tensorize a stream into the device-resident DTDG ``SnapshotTensor`` view —
+see ``docs/dtdg.md``; ``docs/architecture.md`` (the CTDG/DTDG split) covers
+where ``psi_r`` sits in the pipeline.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional, Tuple
 
+import jax
 import numpy as np
 
 from repro.core.granularity import TimeDelta
 from repro.core.graph import DGData
 
 _REDUCTIONS = ("first", "last", "sum", "mean", "max", "count")
+
+_I32_SENTINEL = 2**31 - 1
 
 
 def _coarse_ticks(data: DGData, new_gran: TimeDelta) -> int:
@@ -143,56 +152,169 @@ def discretize(
     )
 
 
-def discretize_jax(data: DGData, new_gran: TimeDelta, reduce: str = "first") -> DGData:
-    """jnp segment-op implementation (device-vectorized, eager)."""
+def jax_discretize_supported(data: DGData, k: int,
+                             edges_only: bool = False) -> bool:
+    """True iff the int32 rank-sorted device path can represent this graph.
+
+    The jitted core group-by is a three-level stable argsort (no dense pair
+    key), so node ids only need to fit int32 individually
+    (``num_nodes < 2**31``, guaranteed by construction) and the remaining
+    conditions are on time: coarse ticks must fit int32
+    (``max(t) // k < 2**31``); anything larger falls back to the host numpy
+    path (which is int64 throughout). Raw timestamps beyond int32 are fine
+    as long as the coarse ticks fit: callers pre-divide on the host
+    (``_host_ticks``) before staging, since ``jnp.asarray`` would otherwise
+    silently wrap int64 inputs under the default x64-disabled config.
+
+    ``edges_only=True`` skips the node-event collapse-key condition (the
+    dense ``tick * n + node`` key, which does bound ``num_nodes``) for
+    callers that only consume edge structure, e.g. ``snapshot_tensor`` —
+    their graphs stay on the compiled path even when the node-event keys
+    would overflow.
+    """
+    n = max(int(data.num_nodes), 1)
+    tmax = int(data.edge_t.max()) if len(data.edge_t) else 0
+    if not edges_only and data.node_t is not None and len(data.node_t):
+        tmax = max(tmax, int(data.node_t.max()))
+        # The node-event collapse keys (tick * n + node) densely.
+        if (tmax // max(k, 1) + 1) * n >= 2**31:
+            return False
+    return tmax // max(k, 1) < _I32_SENTINEL
+
+
+def _host_ticks(t: np.ndarray, k: int):
+    """Timestamps staged for the int32 device core: raw when they fit int32
+    (the core divides by ``k`` on device), else pre-divided to coarse ticks
+    on the host (int64 division; the guard ensures ticks fit) with the
+    device-side divisor collapsing to 1. Returns ``(t_staged, k_device)``."""
+    if len(t) and int(t.max()) >= _I32_SENTINEL:
+        return t // k, 1
+    return t, k
+
+
+@partial(jax.jit, static_argnames=("k", "reduce", "capacity", "feat_dim"))
+def discretize_edges_padded(src, dst, t, feats, *, k: int, reduce: str,
+                            capacity: int, feat_dim: int):
+    """Jittable ``psi_r`` over edge events with a fixed output capacity.
+
+    The group-by ``(floor(t/k), src, dst)`` is computed with a three-level
+    stable argsort (no dense composite key at all, so int32 is enough for
+    any graph passing ``jax_discretize_supported`` — node counts are only
+    bounded by int32 ids), and every output is padded to the static
+    ``capacity``:
+
+      src/dst : (capacity,) int32, coarse-tick-major sorted; 0 where padded
+      ct      : (capacity,) int32 coarse ticks; int32-max sentinel where
+                padded (keeps the array globally sorted for searchsorted)
+      feats   : (capacity, feat_dim') float32 reduced features (or None when
+                the input has none and ``reduce != 'count'``)
+      count   : () int32 — number of valid groups (callers must check
+                ``count <= capacity``; overflow silently drops the tail)
+
+    Inputs must be time-sorted (as ``DGData`` guarantees) so the
+    ``first``/``last`` reductions pick the chronologically first/last event
+    of each class. ``capacity``/``reduce`` are static: one XLA compilation
+    per (E, capacity, reduce) signature, after which granularity conversion
+    is a single device dispatch — the compiled half of the paper's 175x
+    discretization speedup story (see ``docs/dtdg.md``).
+    """
     import jax.numpy as jnp
     from jax import ops as jops
 
-    k = _coarse_ticks(data, new_gran)
-    src = jnp.asarray(data.src)
-    dst = jnp.asarray(data.dst)
-    ct = jnp.asarray(data.edge_t) // k
+    e = src.shape[0]
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+    ct = (t.astype(jnp.int32) // k).astype(jnp.int32)
 
-    n = max(int(data.num_nodes), 1)
-    # Dense composite key; guard overflow by falling back to numpy on huge ids.
-    tmax = int(ct.max()) + 1 if len(data.edge_t) else 1
-    if data.node_t is not None and len(data.node_t):
-        tmax = max(tmax, int(data.node_t.max()) // k + 1)
-    if tmax * n * n >= 2**62:
-        return discretize(data, new_gran, reduce=reduce, backend="numpy")
-    key = (ct * n + src) * n + dst
-    ukey, seg = jnp.unique(key, return_inverse=True)
-    g = len(ukey)
-    counts = jops.segment_sum(jnp.ones_like(seg, dtype=jnp.float32), seg, g)
+    # Stable lexsort by (ct, src, dst): least-significant key first.
+    order = jnp.argsort(dst, stable=True)
+    order = order[jnp.argsort(src[order], stable=True)]
+    order = order[jnp.argsort(ct[order], stable=True)]
+    cs, ss, ds = ct[order], src[order], dst[order]
+    new = jnp.ones(e, dtype=bool)
+    if e > 1:
+        new = new.at[1:].set(
+            (cs[1:] != cs[:-1]) | (ss[1:] != ss[:-1]) | (ds[1:] != ds[:-1])
+        )
+    seg = jnp.cumsum(new.astype(jnp.int32)) - 1  # group id per sorted event
+    count = new.astype(jnp.int32).sum()
 
-    usrc = (ukey // n) % n
-    udst = ukey % n
-    ut = ukey // (n * n)
+    # Scatter group heads into the padded outputs (scatter OOB drops).
+    head = jnp.where(new, seg, capacity)
+    out_src = jnp.zeros(capacity, jnp.int32).at[head].set(ss)
+    out_dst = jnp.zeros(capacity, jnp.int32).at[head].set(ds)
+    out_ct = jnp.full(capacity, _I32_SENTINEL, jnp.int32).at[head].set(cs)
 
-    feats = None
-    if data.edge_feats is not None or reduce == "count":
-        f = None if data.edge_feats is None else jnp.asarray(data.edge_feats)
+    out_feats = None
+    if feat_dim or reduce == "count":
+        counts = jops.segment_sum(jnp.ones(e, jnp.float32), seg, capacity)
+        f = None if not feat_dim else feats[order].astype(jnp.float32)
         if reduce in ("first", "last"):
-            idx = jnp.arange(len(seg))
+            idx = jnp.arange(e, dtype=jnp.int32)
             pick = (
-                jops.segment_min(idx, seg, g)
+                jops.segment_min(idx, seg, capacity)
                 if reduce == "first"
-                else jops.segment_max(idx, seg, g)
+                else jops.segment_max(idx, seg, capacity)
             )
-            feats = None if f is None else f[pick]
+            pick = jnp.clip(pick, 0, max(e - 1, 0))
+            out_feats = None if f is None else f[pick]
         elif reduce == "sum":
-            feats = None if f is None else jops.segment_sum(f, seg, g)
+            out_feats = None if f is None else jops.segment_sum(f, seg, capacity)
         elif reduce == "mean":
-            feats = None if f is None else jops.segment_sum(f, seg, g) / counts[:, None]
-        elif reduce == "max":
-            feats = None if f is None else jops.segment_max(f, seg, g)
-        elif reduce == "count":
-            base = None if f is None else jops.segment_sum(f, seg, g)
-            feats = (
-                counts[:, None]
-                if base is None
-                else jnp.concatenate([base, counts[:, None]], axis=1)
+            out_feats = (
+                None if f is None
+                else jops.segment_sum(f, seg, capacity)
+                / jnp.maximum(counts, 1.0)[:, None]
             )
+        elif reduce == "max":
+            out_feats = None if f is None else jops.segment_max(f, seg, capacity)
+        elif reduce == "count":
+            base = None if f is None else jops.segment_sum(f, seg, capacity)
+            cnt = counts[:, None]
+            out_feats = cnt if base is None else jnp.concatenate([base, cnt], 1)
+        if out_feats is not None:
+            valid = jnp.arange(capacity) < count
+            out_feats = jnp.where(valid[:, None], out_feats, 0.0)
+    return out_src, out_dst, out_ct, out_feats, count
+
+
+def discretize_jax(data: DGData, new_gran: TimeDelta, reduce: str = "first") -> DGData:
+    """Device implementation of ``psi_r`` over the jitted padded core.
+
+    Runs ``discretize_edges_padded`` at ``capacity=E`` (an upper bound on
+    the number of classes) and slices to the valid count; node events
+    collapse through eager segment ops as before. Falls back to the numpy
+    path when the graph exceeds the int32 guard
+    (``jax_discretize_supported``).
+    """
+    import jax.numpy as jnp
+    from jax import ops as jops
+
+    if reduce not in _REDUCTIONS:
+        raise ValueError(f"unknown reduction {reduce!r}; expected one of {_REDUCTIONS}")
+    k = _coarse_ticks(data, new_gran)
+    if not jax_discretize_supported(data, k):
+        return discretize(data, new_gran, reduce=reduce, backend="numpy")
+    n = max(int(data.num_nodes), 1)
+    e = data.num_edge_events
+    if e == 0:
+        return discretize(data, new_gran, reduce=reduce, backend="numpy")
+
+    feat_dim = data.edge_feat_dim
+    feats_in = (
+        jnp.zeros((e, 0), jnp.float32)
+        if feat_dim == 0
+        else jnp.asarray(data.edge_feats, jnp.float32)
+    )
+    t_staged, k_dev = _host_ticks(data.edge_t, k)
+    usrc, udst, ut, feats, count = discretize_edges_padded(
+        jnp.asarray(data.src), jnp.asarray(data.dst), jnp.asarray(t_staged),
+        feats_in, k=k_dev, reduce=reduce, capacity=e, feat_dim=feat_dim,
+    )
+    g = int(count)  # one host sync to slice the valid prefix
+    usrc, udst, ut = usrc[:g], udst[:g], ut[:g]
+    if feats is not None:
+        feats = feats[:g]
 
     node_kwargs = {}
     if data.node_ids is not None:
@@ -201,7 +323,8 @@ def discretize_jax(data: DGData, new_gran: TimeDelta, reduce: str = "first") -> 
         # feature wins within a bucket; inputs are time-sorted so the max
         # within-segment index is the latest event).
         nids = jnp.asarray(data.node_ids)
-        nct = jnp.asarray(data.node_t) // k
+        nt_staged, nk_dev = _host_ticks(data.node_t, k)
+        nct = jnp.asarray(nt_staged) // nk_dev
         if len(data.node_ids):
             nkey = nct * n + nids
             nukey, nseg = jnp.unique(nkey, return_inverse=True)

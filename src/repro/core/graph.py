@@ -5,8 +5,13 @@ timestamp array doubling as a binary-search index). ``DGraph`` is a
 lightweight *view*: a (storage, t_lo, t_hi, granularity) tuple that is O(1)
 to create and concurrency-safe because the storage is immutable.
 
-All storage lives in host numpy; batches are materialized to device tensors
-by the loader/hook pipeline (the ``device_transfer`` hook).
+Root storage lives in host numpy; batches are materialized to device
+tensors by the loader/hook pipeline (the ``device_transfer`` hook). The
+DTDG path additionally has a *device-resident* view: ``SnapshotTensor``,
+the discretized stream tensorized once into padded ``(T, capacity)``
+src/dst/mask JAX arrays (built by ``core.loader.snapshot_tensor`` via the
+jitted ``discretize_edges_padded``), which is what the scan-compiled
+snapshot pipeline consumes — see ``docs/dtdg.md``.
 """
 
 from __future__ import annotations
@@ -227,6 +232,7 @@ class DGData:
         return lo, hi
 
     def node_event_range(self, t_lo, t_hi) -> Tuple[int, int]:
+        """Node-event index range with t in [t_lo, t_hi). O(log #events)."""
         if self.node_t is None:
             return 0, 0
         lo = 0 if t_lo is None else int(np.searchsorted(self.node_t, t_lo, "left"))
@@ -246,9 +252,86 @@ class DGData:
         reduce: str = "first",
         backend: str = "numpy",
     ) -> "DGData":
+        """Coarsen to ``granularity`` via ``psi_r`` (``core/discretize.py``)."""
         from repro.core.discretize import discretize as _disc
 
         return _disc(self, TimeDelta.coerce(granularity), reduce=reduce, backend=backend)
+
+    def to_snapshots(
+        self,
+        granularity: TimeDelta | str,
+        capacity: Optional[int] = None,
+        device=None,
+    ) -> "SnapshotTensor":
+        """Tensorize this storage into a device-resident ``SnapshotTensor``
+        (delegates to ``core.loader.snapshot_tensor``)."""
+        from repro.core.loader import snapshot_tensor
+
+        return snapshot_tensor(self, granularity, capacity=capacity,
+                               device=device)
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotTensor:
+    """Device-resident DTDG view: the discretized stream as padded tensors.
+
+    Built **once** per (storage, granularity) by
+    ``core.loader.snapshot_tensor`` — the jitted ``discretize_edges_padded``
+    collapses duplicate ``(tick, src, dst)`` classes on device and a second
+    jitted scatter lays the classes out snapshot-major:
+
+      ``src``/``dst`` : (T, capacity) int32, zero where padded
+      ``mask``        : (T, capacity) bool edge-validity mask
+      ``counts``      : (T,) int32 valid edges per snapshot (empty windows
+                        are materialized as all-False rows, matching the
+                        loader's ``emit_empty=True`` iterate-by-time mode)
+
+    Row ``i`` is the snapshot ``G|_[(t0+i)*k, (t0+i+1)*k)`` of the source
+    stream (``k`` native ticks per snapshot). Because every row has the
+    same static shape, a whole epoch over the view is one ``lax.scan`` —
+    the compiled DTDG pipeline (``docs/dtdg.md``).
+    """
+
+    src: object
+    dst: object
+    mask: object
+    counts: object
+    t0: int
+    ticks: int
+    unit: TimeDelta
+    num_nodes: int
+
+    @property
+    def num_snapshots(self) -> int:
+        """T: number of snapshot rows (including empty windows)."""
+        return int(self.src.shape[0])
+
+    @property
+    def capacity(self) -> int:
+        """Fixed per-snapshot edge capacity (padded width)."""
+        return int(self.src.shape[1])
+
+    def row(self, i: int) -> dict:
+        """One snapshot's padded arrays: ``{src, dst, snap_mask}``."""
+        return {"src": self.src[i], "dst": self.dst[i],
+                "snap_mask": self.mask[i]}
+
+    def row_of_time(self, t: int) -> int:
+        """Snapshot row index containing native-granularity time ``t``."""
+        return int(t) // self.ticks - self.t0
+
+    def negatives(self, seed: int, num_negatives: int, rows=None):
+        """Per-snapshot negative destinations ``(R, capacity, m)`` for
+        ``rows`` (default: every snapshot); pure in
+        ``(seed, m, row)`` — see ``core.negatives.snapshot_negatives``."""
+        import numpy as _np
+
+        from repro.core.negatives import snapshot_negatives
+
+        if rows is None:
+            rows = _np.arange(self.num_snapshots)
+        return snapshot_negatives(seed, self.num_nodes, self.capacity,
+                                  num_negatives, rows)
 
 
 class DGraph:
@@ -308,6 +391,7 @@ class DGraph:
         return hi - lo
 
     def edge_slice(self) -> Tuple[int, int]:
+        """Edge-event index range [lo, hi) of this view in its storage."""
         return self.data.edge_range(self.t_lo, self.t_hi)
 
     # -- materialization -----------------------------------------------------

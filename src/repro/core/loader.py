@@ -21,18 +21,27 @@ correct because the hook pipeline still executes strictly sequentially, just
 one batch ahead of the consumer. This is the loader half of the
 ``device_sampling=True`` pipeline in ``train.tg_trainer``. The staging
 model is documented in ``docs/architecture.md``.
+
+``snapshot_tensor`` is the DTDG counterpart of loading: instead of
+iterating host batches, it tensorizes the whole discretized stream once
+into the device-resident ``SnapshotTensor`` view (padded ``(T, capacity)``
+src/dst/mask arrays) that the scan-compiled snapshot trainer consumes —
+see ``docs/dtdg.md``.
 """
 
 from __future__ import annotations
 
 import queue
 import threading
+from functools import partial
 from typing import Iterator, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batch import Batch
-from repro.core.graph import DGraph
+from repro.core.graph import DGData, DGraph, SnapshotTensor
 from repro.core.granularity import TimeDelta
 from repro.core.hooks import HookManager
 
@@ -144,6 +153,113 @@ class DGDataLoader:
         if self.manager is None:
             return batch
         return self.manager.execute(batch)
+
+
+@partial(jax.jit, static_argnames=("num_rows", "capacity"))
+def _tensorize_snapshots(usrc, udst, uct, count, *, num_rows: int,
+                         capacity: int):
+    """Scatter tick-major discretized events into ``(T, capacity)`` grids.
+
+    Inputs are the padded outputs of ``discretize_edges_padded`` with
+    ``uct`` already shifted to **zero-based** row ticks (the caller
+    subtracts the first tick on staging, so huge absolute ticks can never
+    overflow the int32 arithmetic here; padding keeps a large sentinel
+    beyond ``count``, so the array stays globally sorted and the per-row
+    extents come from one ``searchsorted``). Events beyond a row's
+    ``capacity`` are dropped by the scatter's out-of-bounds semantics;
+    callers size ``capacity`` to the max row count to make that impossible
+    by construction.
+    """
+    g = usrc.shape[0]
+    idx = jnp.arange(g, dtype=jnp.int32)
+    valid = idx < count
+    starts = jnp.searchsorted(
+        uct, jnp.arange(num_rows, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    row = jnp.clip(uct, 0, num_rows - 1)
+    pos = idx - starts[row]
+    ok = valid & (pos < capacity)
+    flat = jnp.where(ok, row * capacity + pos, num_rows * capacity)
+    grid = lambda fill, dtype: jnp.full(num_rows * capacity, fill, dtype)
+    src_g = grid(0, jnp.int32).at[flat].set(usrc)
+    dst_g = grid(0, jnp.int32).at[flat].set(udst)
+    mask_g = grid(False, bool).at[flat].set(ok)
+    bounds = jnp.concatenate([starts, count[None].astype(jnp.int32)])
+    counts = jnp.clip(jnp.diff(bounds), 0, capacity)
+    shape = (num_rows, capacity)
+    return (src_g.reshape(shape), dst_g.reshape(shape),
+            mask_g.reshape(shape), counts)
+
+
+def snapshot_tensor(
+    data: DGData,
+    granularity: TimeDelta | str,
+    capacity: Optional[int] = None,
+    device=None,
+) -> SnapshotTensor:
+    """Tensorize a stream into the device-resident ``SnapshotTensor`` view.
+
+    One jitted ``discretize_edges_padded`` call collapses duplicate
+    ``(tick, src, dst)`` classes at the target granularity, then one jitted
+    scatter (``_tensorize_snapshots``) lays them out as padded
+    ``(T, capacity)`` src/dst/mask device arrays. The only host syncs are
+    build-time bookkeeping (valid count + per-row extents to choose the
+    capacity); after this, a DTDG epoch touches no host arrays at all.
+
+    ``capacity`` defaults to the max per-snapshot edge count rounded up to
+    a power of two (one XLA compilation across granularities that land in
+    the same bucket); passing a smaller value deterministically drops each
+    oversized snapshot's tail.
+    """
+    from repro.core.discretize import (
+        _coarse_ticks,
+        _host_ticks,
+        discretize_edges_padded,
+        jax_discretize_supported,
+    )
+
+    unit = TimeDelta.coerce(granularity)
+    k = _coarse_ticks(data, unit)
+    e = data.num_edge_events
+    span = data.time_span
+    t0, t_end = span[0] // k, span[1] // k
+    num_rows = max(int(t_end - t0) + 1, 1)
+
+    if e and jax_discretize_supported(data, k, edges_only=True):
+        t_staged, k_dev = _host_ticks(data.edge_t, k)
+        usrc, udst, uct, _, count = discretize_edges_padded(
+            jnp.asarray(data.src), jnp.asarray(data.dst),
+            jnp.asarray(t_staged), jnp.zeros((e, 0), jnp.float32),
+            k=k_dev, reduce="first", capacity=e, feat_dim=0,
+        )
+        # Zero-base the row ticks for the scatter (t0 >= 0, so the padded
+        # int32-max sentinel shifts without wrapping and stays largest).
+        uct = uct - np.int32(t0)
+    else:  # int32 guard tripped (or empty stream): host numpy fallback
+        disc = data.discretize(unit, reduce="first", backend="numpy")
+        usrc = jnp.asarray(disc.src, jnp.int32)
+        udst = jnp.asarray(disc.dst, jnp.int32)
+        # Shift in int64 on host: absolute ticks can exceed int32 (that is
+        # exactly why this branch runs), relative ones cannot.
+        uct = jnp.asarray(disc.edge_t - t0, jnp.int32)
+        count = jnp.asarray(disc.num_edge_events, jnp.int32)
+
+    g = int(count)
+    row_counts = np.bincount(
+        np.asarray(uct[:g], dtype=np.int64), minlength=num_rows
+    )
+    if capacity is None:
+        capacity = int(2 ** np.ceil(np.log2(max(row_counts.max(), 1))))
+    src_g, dst_g, mask_g, counts = _tensorize_snapshots(
+        usrc, udst, uct, count, num_rows=num_rows, capacity=int(capacity),
+    )
+    if device is not None:
+        src_g, dst_g, mask_g, counts = jax.device_put(
+            (src_g, dst_g, mask_g, counts), device)
+    return SnapshotTensor(
+        src=src_g, dst=dst_g, mask=mask_g, counts=counts,
+        t0=int(t0), ticks=int(k), unit=unit, num_nodes=int(data.num_nodes),
+    )
 
 
 class PrefetchLoader:

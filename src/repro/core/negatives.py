@@ -7,6 +7,12 @@ Supports the standard protocols:
   * one-vs-many — TGB-style: each positive is ranked against a fixed set of
                  ``num_negatives`` sampled destinations (deterministic per
                  batch, seeded), enabling MRR computation.
+
+``snapshot_negatives`` is the DTDG counterpart: per-snapshot corrupted
+destinations as a pure function of ``(seed, num_negatives, snapshot row)``,
+so the scan-compiled epoch (which pre-draws every snapshot's negatives in
+one call) and the per-snapshot hook path (``SnapshotNegativeHook``) produce
+bit-identical draws. See ``docs/dtdg.md``.
 """
 
 from __future__ import annotations
@@ -16,7 +22,36 @@ from typing import Optional, Set, Tuple
 import numpy as np
 
 
+def snapshot_negatives(seed: int, num_nodes: int, capacity: int,
+                       num_negatives: int, rows):
+    """Deterministic per-snapshot negative destinations, device-resident.
+
+    Returns a ``(len(rows), capacity, num_negatives)`` int32 JAX array of
+    uniform node draws. Row ``r``'s draws depend only on
+    ``(seed, num_negatives, r)`` — a counter-derived ``fold_in`` chain — so
+    any contiguous or scattered subset of rows reproduces exactly the same
+    negatives as a bulk draw over all rows (the scan-vs-loop parity
+    invariant), and resuming from a checkpointed snapshot cursor replays the
+    stream bit-identically.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), num_negatives)
+
+    def one(row):
+        return jax.random.randint(
+            jax.random.fold_in(key, row), (capacity, num_negatives),
+            0, max(int(num_nodes), 1), jnp.int32,
+        )
+
+    return jax.vmap(one)(jnp.asarray(rows, jnp.int32))
+
+
 class NegativeEdgeSampler:
+    """Stateful negative-edge sampler for the CTDG link recipes (random or
+    historical destination corruption; see the module docstring)."""
+
     def __init__(
         self,
         num_nodes: int,
@@ -43,6 +78,7 @@ class NegativeEdgeSampler:
         self._hist_dirty = False
 
     def reset_state(self) -> None:
+        """Reset the RNG and the historical destination pool."""
         self._rng = np.random.default_rng(self._seed)
         self._hist.clear()
         self._hist_dst = np.zeros(0, dtype=np.int64)

@@ -14,8 +14,11 @@ hooks under the right activation keys:
                          (same outputs; neighbor tensors born on device).
   RECIPE_TGB_NODE      : recency neighbors + pad + device transfer (labels
                          come from the dataset).
-  RECIPE_DTDG_SNAPSHOT : snapshot pipeline (no sampling; models consume whole
-                         snapshots) + device transfer.
+  RECIPE_DTDG_SNAPSHOT : snapshot link-prediction pipeline — per-snapshot
+                         train/eval negatives (counter-derived, bit-identical
+                         to the scan-compiled path's bulk draws) + device
+                         transfer. Models consume whole padded snapshots;
+                         see ``docs/dtdg.md``.
   RECIPE_ANALYTICS_DOS : density-of-states analytics (paper Fig. 3).
 """
 
@@ -35,6 +38,7 @@ from repro.core.tg_hooks import (
     NegativeEdgeHook,
     PadBatchHook,
     RecencyNeighborHook,
+    SnapshotNegativeHook,
     TGBEvalNegativesHook,
     UniformNeighborHook,
 )
@@ -90,23 +94,25 @@ def _tgb_link(
     device_sampling: bool = False,
     sampler: str = "recency",
     expose_buffer: Optional[bool] = None,
+    checkpoint_adjacency: bool = True,
 ) -> HookManager:
     """Build the TGB link-prediction hook pipeline.
 
     ``sampler`` selects the temporal neighbor strategy: ``"recency"`` (K
     most recent, circular buffers) or ``"uniform"`` (K uniform draws from
-    the strict past; hop-1 only, and the returned hook's ``build(...)`` must
-    be called with the edge storage before iterating).
-    ``device_sampling=True`` swaps in the device-resident twin of either
-    sampler (same outputs / checkpoint contract; tensors born on device).
-    ``expose_buffer`` forwards to ``DeviceRecencyNeighborHook`` (None =
-    backend auto; pass False for models without a fused attention path so
-    buffer updates can donate in place).
+    the strict past; hop-1 or recursive hop-2 frontier, and the returned
+    hook's ``build(...)`` must be called with the edge storage before
+    iterating). ``device_sampling=True`` swaps in the device-resident twin
+    of either sampler (same outputs / checkpoint contract; tensors born on
+    device). ``expose_buffer`` forwards to ``DeviceRecencyNeighborHook``
+    (None = backend auto; pass False for models without a fused attention
+    path so buffer updates can donate in place). ``checkpoint_adjacency``
+    forwards to the uniform samplers: ``False`` drops the O(E) CSR from
+    ``state_dict`` (counter-only checkpoints; the adjacency is rebuilt from
+    storage by the restoring trainer's ``build``).
     """
     if sampler not in ("recency", "uniform"):
         raise ValueError(f"unknown sampler {sampler!r}; use 'recency' or 'uniform'")
-    if sampler == "uniform" and num_hops != 1:
-        raise ValueError("sampler='uniform' supports num_hops=1 only")
     m = HookManager()
     # Padding runs FIRST so negatives/neighbor tensors come out fixed-shape;
     # stateful hooks exclude padded events via batch_mask.
@@ -127,10 +133,12 @@ def _tgb_link(
     if sampler == "uniform":
         if device_sampling:
             m.register(DeviceUniformNeighborHook(
-                num_nodes, k, include_negatives=True, seed=seed, device=device))
+                num_nodes, k, include_negatives=True, seed=seed, device=device,
+                num_hops=num_hops, checkpoint_adjacency=checkpoint_adjacency))
         else:
             m.register(UniformNeighborHook(
-                num_nodes, k, include_negatives=True, seed=seed))
+                num_nodes, k, include_negatives=True, seed=seed,
+                num_hops=num_hops, checkpoint_adjacency=checkpoint_adjacency))
     elif device_sampling:
         m.register(DeviceRecencyNeighborHook(num_nodes, k, num_hops=num_hops,
                                              device=device,
@@ -163,8 +171,33 @@ def _tgb_node(
 
 
 @RecipeRegistry.register(RECIPE_DTDG_SNAPSHOT)
-def _dtdg_snapshot(device=None) -> HookManager:
+def _dtdg_snapshot(
+    num_nodes: Optional[int] = None,
+    capacity: Optional[int] = None,
+    num_negatives: int = 1,
+    eval_negatives: int = 20,
+    seed: int = 0,
+    device=None,
+) -> HookManager:
+    """Build the DTDG snapshot link-prediction hook pipeline.
+
+    With ``num_nodes``/``capacity`` given, registers counter-derived
+    per-snapshot negative hooks under the train/eval activation keys
+    (``SnapshotNegativeHook``; the draws are a pure function of the
+    snapshot row, so the hook path matches the scan-compiled epoch's bulk
+    draws bit-for-bit). Without them (legacy callers), the recipe degrades
+    to the plain device-transfer pipeline.
+    """
     m = HookManager()
+    if num_nodes is not None and capacity is not None:
+        m.register(
+            SnapshotNegativeHook(num_nodes, capacity, num_negatives, seed=seed),
+            key=TRAIN_KEY,
+        )
+        m.register(
+            SnapshotNegativeHook(num_nodes, capacity, eval_negatives, seed=seed),
+            key=EVAL_KEY,
+        )
     m.register(DeviceTransferHook(device))
     return m
 

@@ -228,12 +228,14 @@ class UniformSampler:
     counter``), making the two interchangeable inside ``RECIPE_TGB_LINK``.
     """
 
-    def __init__(self, num_nodes: int, k: int, seed: int = 0):
+    def __init__(self, num_nodes: int, k: int, seed: int = 0,
+                 checkpoint_adjacency: bool = True):
         self.num_nodes = int(num_nodes)
         self.k = int(k)
         self._seed = seed
         self._counter = 0
         self._built = False
+        self.checkpoint_adjacency = bool(checkpoint_adjacency)
 
     def build(self, src: np.ndarray, dst: np.ndarray, t: np.ndarray,
               eids: Optional[np.ndarray] = None) -> None:
@@ -309,10 +311,14 @@ class UniformSampler:
         """CSR arrays + draw counter; loads into either uniform sampler.
 
         Including the adjacency makes restore self-contained (no rebuild
-        required) at an O(E) checkpoint cost; for very large streams a
-        counter-only checkpoint with rebuild-on-load is a ROADMAP item.
+        required) at an O(E) checkpoint cost. With
+        ``checkpoint_adjacency=False`` only the draw counter is saved — the
+        adjacency is a pure function of the storage slice, so the restoring
+        side rebuilds it with ``build(...)`` from storage (what the
+        trainers already do at construction), shrinking checkpoints from
+        O(E) to O(1) for huge streams.
         """
-        if not self._built:
+        if not self._built or not self.checkpoint_adjacency:
             return {"counter": np.int64(self._counter)}
         return {
             "adj_nbr": self._adj_nbr, "adj_t": self._adj_t,
@@ -321,7 +327,8 @@ class UniformSampler:
         }
 
     def load_state_dict(self, state: dict) -> None:
-        """Restore from either uniform sampler's ``state_dict``."""
+        """Restore from either uniform sampler's ``state_dict``. Counter-only
+        states keep (or await) an adjacency built from storage."""
         self._counter = int(state["counter"])
         if "adj_nbr" not in state:
             return

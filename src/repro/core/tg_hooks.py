@@ -34,6 +34,14 @@ from repro.core.negatives import NegativeEdgeSampler
 from repro.core.sampler import RecencySampler, UniformSampler
 
 
+def _jnp():
+    """Lazy ``jax.numpy`` accessor for array-module dispatch in hooks that
+    serve both host (numpy) and device (JAX) sampler twins."""
+    import jax.numpy as jnp
+
+    return jnp
+
+
 class NegativeEdgeHook(Hook):
     """Produces ``neg``: (B, num_negatives) corrupted destinations."""
 
@@ -348,17 +356,28 @@ class UniformNeighborHook(Hook):
     (``t < query_t``), so a once-per-split ``build`` over the full stream
     leaks nothing. Stateless across batches except for the reproducible
     draw counter (checkpointed via ``state_dict``).
+
+    With ``num_hops=2`` the hop-1 frontier is sampled recursively: each
+    sampled neighbor becomes a hop-2 seed queried at its *own* interaction
+    time (strict ``t < t_hop1``, the TGAT temporal-causality convention),
+    producing ``nbr2_*`` blocks aligned with the flattened hop-1 frontier —
+    rows whose hop-1 slot is padding come back fully masked.
     """
 
     def __init__(self, num_nodes: int, k: int, include_negatives: bool = False,
-                 seed: int = 0):
+                 seed: int = 0, num_hops: int = 1,
+                 checkpoint_adjacency: bool = True):
+        if num_hops not in (1, 2):
+            raise ValueError("num_hops must be 1 or 2")
         requires = {"src", "dst", "time"} | ({"neg"} if include_negatives else set())
-        super().__init__(
-            requires=requires,
-            produces={"seed_nodes", "seed_times", "nbr_ids", "nbr_times",
-                      "nbr_eids", "nbr_mask"},
-        )
-        self.sampler = UniformSampler(num_nodes, k, seed=seed)
+        produces = {"seed_nodes", "seed_times", "nbr_ids", "nbr_times",
+                    "nbr_eids", "nbr_mask"}
+        if num_hops == 2:
+            produces |= {"nbr2_ids", "nbr2_times", "nbr2_eids", "nbr2_mask"}
+        super().__init__(requires=requires, produces=produces)
+        self.sampler = UniformSampler(num_nodes, k, seed=seed,
+                                      checkpoint_adjacency=checkpoint_adjacency)
+        self.num_hops = num_hops
         self.include_negatives = include_negatives
 
     def build(self, src, dst, t, eids=None) -> "UniformNeighborHook":
@@ -392,6 +411,21 @@ class UniformNeighborHook(Hook):
         batch["seed_nodes"], batch["seed_times"] = seed_nodes, seed_times
         batch["nbr_ids"], batch["nbr_times"] = blk.nbr_ids, blk.nbr_times
         batch["nbr_eids"], batch["nbr_mask"] = blk.nbr_eids, blk.mask
+
+        if self.num_hops == 2:
+            # Recursive frontier: hop-1 neighbors become hop-2 seeds queried
+            # at their own interaction times (strict past, leak-free).
+            xp = np if isinstance(blk.nbr_ids, np.ndarray) else _jnp()
+            flat_ids = blk.nbr_ids.reshape(-1)
+            flat_t = blk.nbr_times.reshape(-1)
+            invalid = flat_ids < 0
+            safe = xp.where(invalid, 0, flat_ids)
+            blk2 = self.sampler.sample(safe, xp.where(invalid, 0, flat_t))
+            pad = invalid[:, None]
+            batch["nbr2_ids"] = xp.where(pad, -1, blk2.nbr_ids)
+            batch["nbr2_times"] = xp.where(pad, 0, blk2.nbr_times)
+            batch["nbr2_eids"] = xp.where(pad, -1, blk2.nbr_eids)
+            batch["nbr2_mask"] = xp.where(pad, False, blk2.mask)
         return batch
 
 
@@ -399,7 +433,8 @@ class DeviceUniformNeighborHook(UniformNeighborHook):
     """Device-resident uniform temporal neighbor sampling
     (``device_sampling=True`` + ``sampler="uniform"``).
 
-    Same contract and seed assembly as ``UniformNeighborHook`` but backed by
+    Same contract and seed assembly as ``UniformNeighborHook`` (including
+    the ``num_hops=2`` recursive frontier) but backed by
     ``DeviceUniformSampler``: the CSR-by-time adjacency lives on the
     accelerator and sampling is one jitted composite-key ``searchsorted``
     over the whole seed batch — the produced neighbor tensors are born
@@ -407,16 +442,74 @@ class DeviceUniformNeighborHook(UniformNeighborHook):
     """
 
     def __init__(self, num_nodes: int, k: int, include_negatives: bool = False,
-                 seed: int = 0, device=None):
+                 seed: int = 0, device=None, num_hops: int = 1,
+                 checkpoint_adjacency: bool = True):
         from repro.core.device_uniform import DeviceUniformSampler
 
         super().__init__(num_nodes, k, include_negatives=include_negatives,
-                         seed=seed)
-        self.sampler = DeviceUniformSampler(num_nodes, k, seed=seed,
-                                            device=device)
+                         seed=seed, num_hops=num_hops)
+        self.sampler = DeviceUniformSampler(
+            num_nodes, k, seed=seed, device=device,
+            checkpoint_adjacency=checkpoint_adjacency)
         # Shared checkpoint key with the host twin (see
         # DeviceRecencyNeighborHook): state_dicts are interchangeable.
         self.state_key = "UniformNeighborHook"
+
+
+class SnapshotNegativeHook(Hook):
+    """Per-snapshot negative destinations for the DTDG link recipe.
+
+    Produces ``neg``: (capacity, num_negatives) int32 corrupted destinations
+    for the batch's (predicted) snapshot. Draws are a pure function of
+    ``(seed, num_negatives, snapshot row)`` via
+    ``core.negatives.snapshot_negatives`` — the same function the
+    scan-compiled epoch uses to pre-draw every snapshot at once — so the
+    hook path and the scanned path are bit-identical (see ``docs/dtdg.md``).
+
+    The snapshot row comes from ``batch.meta['snapshot_row']`` when present
+    (how ``SnapshotLinkTrainer`` drives the hook — resume correctness then
+    follows from the trainer's checkpointed snapshot cursor plus the
+    row-pure draws). For standalone recipe use without row metadata, an
+    internal cursor advances one row per call; ``seek(row)`` positions it
+    and ``state_dict`` checkpoints it.
+    """
+
+    def __init__(self, num_nodes: int, capacity: int, num_negatives: int = 1,
+                 seed: int = 0):
+        super().__init__(requires={"src"}, produces={"neg"})
+        self.num_nodes = int(num_nodes)
+        self.capacity = int(capacity)
+        self.num_negatives = int(num_negatives)
+        self._seed = int(seed)
+        self._cursor = 0
+
+    def seek(self, row: int) -> None:
+        """Position the cursor at snapshot ``row`` (split boundaries)."""
+        self._cursor = int(row)
+
+    def reset_state(self) -> None:
+        """Rewind the snapshot cursor (start of an epoch)."""
+        self._cursor = 0
+
+    def state_dict(self) -> dict:
+        """Checkpoint the snapshot cursor (draws are cursor-derived)."""
+        return {"cursor": np.int64(self._cursor)}
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore the snapshot cursor."""
+        self._cursor = int(state["cursor"])
+
+    def __call__(self, batch: Batch) -> Batch:
+        """Attach this snapshot's deterministic negative draws."""
+        from repro.core.negatives import snapshot_negatives
+
+        row = int(batch.meta.get("snapshot_row", self._cursor))
+        batch["neg"] = snapshot_negatives(
+            self._seed, self.num_nodes, self.capacity, self.num_negatives,
+            [row],
+        )[0]
+        self._cursor = row + 1
+        return batch
 
 
 class EdgeFeatureLookupHook(Hook):

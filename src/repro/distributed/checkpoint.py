@@ -161,14 +161,21 @@ def restore(ckpt_dir: str, step: Optional[int] = None, *, target=None,
 
     if target is None:
         return flat, step, manifest["extra"]
+    return assemble(flat, target), step, manifest["extra"]
 
+
+def assemble(flat: Dict[str, Any], target):
+    """Reassemble a flat ``{path-key: array}`` dict (as returned by
+    ``restore(target=None)``) into ``target``'s pytree structure — the
+    structural half of ``restore``, usable without re-reading leaves from
+    disk. Raises ``KeyError`` on leaves the flat dict is missing."""
     keys_in_order = [k for k, _ in _flatten_with_paths(target)]
     missing = [k for k in keys_in_order if k not in flat]
     if missing:
         raise KeyError(f"checkpoint missing leaves: {missing[:5]}...")
     leaves = [flat[k] for k in keys_in_order]
     treedef = jax.tree_util.tree_structure(target)
-    return treedef.unflatten(leaves), step, manifest["extra"]
+    return treedef.unflatten(leaves)
 
 
 class AsyncCheckpointer:

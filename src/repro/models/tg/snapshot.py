@@ -1,10 +1,20 @@
 """Snapshot (DTDG) models: GCN, GCLSTM, T-GCN.
 
-All operate on discretized snapshots produced by iterate-by-time loading
-(paper Def. 3.4): a padded COO edge list per snapshot + a learned node
-embedding table. Each model maps a snapshot (and its recurrent state, if
-any) to per-node embeddings Z in R^{N x d}; link prediction on snapshot
-t+1 is decoded from Z computed on snapshots <= t.
+All operate on discretized snapshots — padded COO edge lists of a fixed
+capacity (the ``SnapshotTensor`` rows built by
+``core.loader.snapshot_tensor``) + a learned node embedding table. Each
+model maps a snapshot (and its recurrent state, if any) to per-node
+embeddings Z in R^{N x d}; link prediction on snapshot t+1 is decoded from
+Z computed on snapshots <= t.
+
+Every model exposes the same ``lax.scan``-compatible contract through the
+``init_params`` / ``init_state`` / ``make_apply`` registry: the recurrent
+state is a pytree carry (``()`` for the stateless GCN) and
+``apply(params, src, dst, mask, state) -> (z, state)`` is pure, so a whole
+epoch of snapshots runs as **one** scanned jitted call in
+``train.tg_trainer.SnapshotLinkTrainer`` instead of one dispatch per
+snapshot. Neighbor aggregation inside every model routes through the
+``kernels/segment_reduce`` op (``nn.graph_conv``). See ``docs/dtdg.md``.
 """
 
 from __future__ import annotations
@@ -22,6 +32,8 @@ from repro.nn.linear import dense, dense_init
 
 @dataclasses.dataclass(frozen=True)
 class SnapshotConfig:
+    """Shared DTDG model hyperparameters (node count, widths, depth)."""
+
     num_nodes: int
     d_node: int = 256
     d_embed: int = 128
@@ -32,6 +44,7 @@ class SnapshotConfig:
 # GCN: snapshot-independent encoder
 # ----------------------------------------------------------------------
 def gcn_model_init(key, cfg: SnapshotConfig):
+    """Init GCN params: embedding table + GCN stack + link decoder."""
     k1, k2, k3 = jax.random.split(key, 3)
     dims = [cfg.d_node] + [cfg.d_embed] * cfg.num_layers
     return {
@@ -42,6 +55,7 @@ def gcn_model_init(key, cfg: SnapshotConfig):
 
 
 def gcn_model_apply(params, cfg: SnapshotConfig, src, dst, edge_mask):
+    """Per-node embeddings Z from one padded snapshot (stateless)."""
     return gcn(params["gcn"], params["emb"], src, dst, edge_mask, cfg.num_nodes)
 
 
@@ -49,6 +63,7 @@ def gcn_model_apply(params, cfg: SnapshotConfig, src, dst, edge_mask):
 # GCLSTM (Chen et al., 2018): LSTM whose hidden transforms are GCNs
 # ----------------------------------------------------------------------
 def gclstm_init(key, cfg: SnapshotConfig):
+    """Init GCLSTM params: embeddings, gate dense/GCN pairs, decoder."""
     keys = jax.random.split(key, 11)
     d_in, d_h = cfg.d_node, cfg.d_embed
     p = {
@@ -63,11 +78,13 @@ def gclstm_init(key, cfg: SnapshotConfig):
 
 
 def gclstm_state(cfg: SnapshotConfig):
+    """Zero (h, c) recurrent state: two (N, d_embed) arrays."""
     z = jnp.zeros((cfg.num_nodes, cfg.d_embed))
     return (z, z)
 
 
 def gclstm_apply(params, cfg: SnapshotConfig, src, dst, edge_mask, state):
+    """One GCLSTM step over a padded snapshot: returns (z, (h, c))."""
     h, c = state
     x = params["emb"]
     n = cfg.num_nodes
@@ -92,6 +109,7 @@ def gclstm_apply(params, cfg: SnapshotConfig, src, dst, edge_mask, state):
 # T-GCN (Zhao et al., 2019): GRU whose transforms are GCNs over [X || h]
 # ----------------------------------------------------------------------
 def tgcn_init(key, cfg: SnapshotConfig):
+    """Init T-GCN params: embeddings, GRU-gate GCNs, decoder."""
     keys = jax.random.split(key, 5)
     d_in, d_h = cfg.d_node, cfg.d_embed
     return {
@@ -104,10 +122,12 @@ def tgcn_init(key, cfg: SnapshotConfig):
 
 
 def tgcn_state(cfg: SnapshotConfig):
+    """Zero hidden state: one (N, d_embed) array."""
     return jnp.zeros((cfg.num_nodes, cfg.d_embed))
 
 
 def tgcn_apply(params, cfg: SnapshotConfig, src, dst, edge_mask, h):
+    """One T-GCN (GRU-over-GCN) step: returns (z, h_new) with z = h_new."""
     x = params["emb"]
     n = cfg.num_nodes
     xh = jnp.concatenate([x, h], -1)
@@ -117,6 +137,65 @@ def tgcn_apply(params, cfg: SnapshotConfig, src, dst, edge_mask, h):
     c = jnp.tanh(gcn_layer(params["gc"], xrh, src, dst, edge_mask, n))
     h_new = u * h + (1.0 - u) * c
     return h_new, h_new
+
+
+# ----------------------------------------------------------------------
+# Uniform scan-compatible registry
+# ----------------------------------------------------------------------
+SNAPSHOT_MODELS = ("gcn", "gclstm", "tgcn")
+
+
+def init_params(name: str, key, cfg: SnapshotConfig):
+    """Initialize parameters for snapshot model ``name``."""
+    if name == "gcn":
+        return gcn_model_init(key, cfg)
+    if name == "gclstm":
+        return gclstm_init(key, cfg)
+    if name == "tgcn":
+        return tgcn_init(key, cfg)
+    raise ValueError(f"unknown DTDG model {name!r}; have {SNAPSHOT_MODELS}")
+
+
+def init_state(name: str, cfg: SnapshotConfig):
+    """Initial recurrent state: a pytree usable as a ``lax.scan`` carry
+    (``()`` for the stateless GCN)."""
+    if name == "gcn":
+        return ()
+    if name == "gclstm":
+        return gclstm_state(cfg)
+    if name == "tgcn":
+        return tgcn_state(cfg)
+    raise ValueError(f"unknown DTDG model {name!r}; have {SNAPSHOT_MODELS}")
+
+
+def make_apply(name: str, cfg: SnapshotConfig):
+    """Pure per-snapshot apply fn with the uniform carry signature.
+
+    Returns ``apply(params, src, dst, mask, state) -> (z, new_state)`` where
+    ``src/dst/mask`` are one padded snapshot's (capacity,) arrays and
+    ``state`` matches ``init_state``. The same function is the body of both
+    the per-snapshot jitted step (loop mode) and the scanned epoch, which
+    is what makes scan-vs-loop parity exact.
+    """
+    if name not in SNAPSHOT_MODELS:
+        raise ValueError(f"unknown DTDG model {name!r}; have {SNAPSHOT_MODELS}")
+
+    if name == "gcn":
+
+        def apply(params, src, dst, mask, state):
+            return gcn_model_apply(params, cfg, src, dst, mask), state
+
+    elif name == "gclstm":
+
+        def apply(params, src, dst, mask, state):
+            return gclstm_apply(params, cfg, src, dst, mask, state)
+
+    else:
+
+        def apply(params, src, dst, mask, state):
+            return tgcn_apply(params, cfg, src, dst, mask, state)
+
+    return apply
 
 
 # ----------------------------------------------------------------------

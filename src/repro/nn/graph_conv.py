@@ -1,7 +1,13 @@
 """Graph convolution over COO edge lists (snapshot/DTDG models).
 
-Message passing is expressed with ``jax.ops.segment_sum`` over a fixed-size
+Message passing is expressed as a segment reduction over a fixed-size
 (padded) edge list so snapshot models compile once per snapshot capacity.
+Aggregation routes through the ``kernels/segment_reduce`` op: on TPU that
+is the one-hot-matmul Pallas kernel (the whole segment tile stays in VMEM);
+on CPU/GPU it lowers to the ``jax.ops.segment_sum`` reference — the parity
+oracle asserted in ``tests/test_dtdg_pipeline.py``. Because the op is a
+plain jitted function with static segment count, it nests cleanly inside
+the scan-compiled DTDG epoch (``docs/dtdg.md``).
 """
 
 from __future__ import annotations
@@ -9,10 +15,20 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.segment_reduce import segment_sum as _segment_sum_op
 from repro.nn.linear import dense, dense_init
 
 
+def segment_agg(values, seg_ids, num_segments: int):
+    """Segment-sum ``values`` (E,) or (E, D) by ``seg_ids`` via the
+    ``kernels/segment_reduce`` op (Pallas on TPU, jnp reference elsewhere)."""
+    if values.ndim == 1:
+        return _segment_sum_op(values[:, None], seg_ids, num_segments)[:, 0]
+    return _segment_sum_op(values, seg_ids, num_segments)
+
+
 def gcn_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    """Init one GCN layer (a dense transform)."""
     return {"lin": dense_init(key, d_in, d_out, dtype=dtype)}
 
 
@@ -26,19 +42,20 @@ def gcn_layer(params, x, src, dst, edge_mask, num_nodes: int):
     w = edge_mask.astype(x.dtype)
     ones = w
     deg = (
-        jax.ops.segment_sum(ones, src, num_nodes)
-        + jax.ops.segment_sum(ones, dst, num_nodes)
+        segment_agg(ones, src, num_nodes)
+        + segment_agg(ones, dst, num_nodes)
         + 1.0  # self loop
     )
     dinv = jax.lax.rsqrt(deg)
     h = dense(params["lin"], x)
     coeff = (dinv[src] * dinv[dst] * w)[:, None]
-    agg = jax.ops.segment_sum(coeff * h[dst], src, num_nodes)
-    agg = agg + jax.ops.segment_sum(coeff * h[src], dst, num_nodes)
+    agg = segment_agg(coeff * h[dst], src, num_nodes)
+    agg = agg + segment_agg(coeff * h[src], dst, num_nodes)
     return agg + dinv[:, None] ** 2 * h  # self-loop term
 
 
 def gcn_init(key, dims, dtype=jnp.float32):
+    """Init a GCN stack with layer widths ``dims``."""
     keys = jax.random.split(key, len(dims) - 1)
     return {
         f"layer_{i}": gcn_layer_init(keys[i], dims[i], dims[i + 1], dtype)
@@ -47,6 +64,7 @@ def gcn_init(key, dims, dtype=jnp.float32):
 
 
 def gcn(params, x, src, dst, edge_mask, num_nodes: int, act=jax.nn.relu):
+    """Multi-layer GCN forward over one padded snapshot edge list."""
     n = len(params)
     for i in range(n):
         x = gcn_layer(params[f"layer_{i}"], x, src, dst, edge_mask, num_nodes)

@@ -14,9 +14,19 @@ device from a background thread while the current jitted step runs. The
 default (``device_sampling=False``) keeps the host-numpy sampler, which
 doubles as the parity oracle in tests.
 
-``SnapshotLinkTrainer`` — DTDG models (GCN, GCLSTM, TGCN) over
-time-iterated snapshots: embeddings from snapshots <= t predict the edges of
-snapshot t+1.
+``SnapshotLinkTrainer`` — DTDG models (GCN, GCLSTM, TGCN) over the
+device-resident ``SnapshotTensor`` view: embeddings from snapshots <= t
+predict the edges of snapshot t+1. The stream is discretized and padded
+**once** (jitted ``discretize_edges_padded`` + tensorize scatter); a whole
+epoch over a split then runs as a single scanned, jitted call
+(``lax.scan`` over snapshot pairs, with the optimizer update inside the
+scan body) instead of one dispatch per snapshot. ``compiled=False`` keeps
+the per-snapshot jitted loop — same body function, bit-identical results —
+as the parity oracle. Splits follow ``DGData.split`` (chronological
+train/val/test) with the recurrent state carried across split boundaries,
+and checkpoints bundle params / optimizer state / recurrent state / hook
+cursors / the snapshot cursor through the shared ``state_dict`` contract.
+See ``docs/dtdg.md`` for the full pipeline.
 """
 
 from __future__ import annotations
@@ -26,7 +36,6 @@ from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
@@ -34,11 +43,13 @@ from repro.core import (
     DGraph,
     DGDataLoader,
     PrefetchLoader,
+    RECIPE_DTDG_SNAPSHOT,
     RECIPE_TGB_LINK,
     RecipeRegistry,
     TimeDelta,
     TRAIN_KEY,
     EVAL_KEY,
+    snapshot_tensor,
 )
 from repro.distributed import checkpoint as ckpt
 from repro.models.tg import dygformer, graphmixer, snapshot, tgat, tgn, tpnet
@@ -50,7 +61,33 @@ _STATELESS = {"tgat", "graphmixer", "dygformer"}
 _STATEFUL = {"tgn", "tpnet"}
 
 
+def _restore_with_saved_hooks(ckpt_dir, step, target):
+    """Two-phase checkpoint restore with a checkpoint-shaped hooks subtree.
+
+    The hooks state is checkpoint-dependent (e.g. the uniform samplers'
+    counter-only mode drops the CSR leaves), so a target prototype built
+    from the *current* hook state can demand leaves the checkpoint never
+    saved. Read the flat checkpoint once, reassemble the hooks subtree
+    that was actually written (``<group>/<idx>/<state_key>`` keys with flat
+    array leaves — the shared contract), and assemble the rest structurally
+    from the already-loaded leaves; the samplers' ``load_state_dict``
+    accepts either form.
+    """
+    flat, step, meta = ckpt.restore(ckpt_dir, step, target=None)
+    hooks: Dict[str, Dict] = {}
+    for k, v in flat.items():
+        if k.startswith("hooks/"):
+            group, leaf = k[len("hooks/"):].rsplit("/", 1)
+            hooks.setdefault(group, {})[leaf] = v
+    target = dict(target)
+    target["hooks"] = hooks
+    return ckpt.assemble(flat, target), step, meta
+
+
 class LinkPredictionTrainer:
+    """CTDG link-prediction driver over the TGB link recipe (see the
+    module docstring for the pipeline flavors)."""
+
     def __init__(
         self,
         model_name: str,
@@ -64,6 +101,7 @@ class LinkPredictionTrainer:
         device_sampling: bool = False,
         prefetch: int = 2,
         sampler: str = "recency",
+        uniform_checkpoint_adjacency: bool = True,
     ):
         if model_name not in _STATELESS | _STATEFUL:
             raise ValueError(f"unknown CTDG model {model_name!r}")
@@ -119,6 +157,7 @@ class LinkPredictionTrainer:
             seed=seed,
             device_sampling=device_sampling,
             sampler=sampler,
+            checkpoint_adjacency=uniform_checkpoint_adjacency,
             # Only TGAT/TGN have a fused attention path consuming the
             # exposed packed buffer; other models skip the snapshot so the
             # device sampler's buffer update can donate in place.
@@ -220,6 +259,7 @@ class LinkPredictionTrainer:
         return {k: batch[k] for k in batch.keys()}
 
     def reset_epoch_state(self):
+        """Clear hook/sampler state (+ recurrent model state) for an epoch."""
         self.manager.reset_state()
         if self.model_name == "tgn":
             self.model_state = tgn.init_state(self.cfg)
@@ -231,6 +271,7 @@ class LinkPredictionTrainer:
     # expose the same state_dict contract) ride along with params/optimizer
     # state, so a restored run resumes mid-stream with warm neighbor state.
     def save_checkpoint(self, ckpt_dir: str, step: int) -> str:
+        """Write a checkpoint (atomic step directory). Returns its path."""
         tree = {
             "params": self.params,
             "opt_state": self.opt_state,
@@ -242,14 +283,14 @@ class LinkPredictionTrainer:
                          extra_meta={"model_name": self.model_name})
 
     def restore_checkpoint(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        """Restore params/opt/hook (+ model) state; returns the step."""
         target = {
             "params": self.params,
             "opt_state": self.opt_state,
-            "hooks": self.manager.state_dict(),
         }
         if self.model_name in _STATEFUL:
             target["model_state"] = self.model_state
-        tree, step, meta = ckpt.restore(ckpt_dir, step, target=target)
+        tree, step, meta = _restore_with_saved_hooks(ckpt_dir, step, target)
         if meta.get("model_name") not in (None, self.model_name):
             raise ValueError(
                 f"checkpoint is for model {meta['model_name']!r}, "
@@ -313,7 +354,22 @@ class LinkPredictionTrainer:
 
 
 class SnapshotLinkTrainer:
-    """DTDG link prediction: process snapshot t, predict snapshot t+1."""
+    """DTDG link prediction over the scan-compiled snapshot pipeline.
+
+    Snapshot t's embeddings predict the edges of snapshot t+1. The stream is
+    tensorized once into a device-resident ``SnapshotTensor``; with
+    ``compiled=True`` (default) each split's epoch is one scanned jitted
+    call (optionally chunked via ``chunk_size``), with ``compiled=False``
+    the same body runs as a per-snapshot jitted loop through the
+    ``RECIPE_DTDG_SNAPSHOT`` hook pipeline — the scan-vs-loop parity oracle.
+
+    Splits are chronological ``DGData.split`` boundaries mapped to snapshot
+    rows; a prediction pair belongs to the split that contains its
+    *predicted* snapshot, and the recurrent state is carried across split
+    boundaries by advance-only scans. Checkpoints bundle
+    ``{params, opt_state[, model_state], hooks, pipeline}`` where
+    ``pipeline`` holds the mid-epoch snapshot-pair cursor.
+    """
 
     def __init__(
         self,
@@ -326,129 +382,340 @@ class SnapshotLinkTrainer:
         eval_negatives: int = 20,
         edge_capacity: Optional[int] = None,
         seed: int = 0,
+        val_ratio: float = 0.15,
+        test_ratio: float = 0.15,
+        compiled: bool = True,
+        chunk_size: Optional[int] = None,
+        device=None,
     ):
-        if model_name not in ("gcn", "gclstm", "tgcn"):
+        if model_name not in snapshot.SNAPSHOT_MODELS:
             raise ValueError(f"unknown DTDG model {model_name!r}")
         self.model_name = model_name
         self.data = data
         self.unit = TimeDelta.coerce(snapshot_unit)
         self.num_negatives = num_negatives
         self.eval_negatives = eval_negatives
-        self._rng = np.random.default_rng(seed)
         self._seed = seed
+        self.compiled = compiled
+        self.chunk_size = chunk_size
+
+        # Tensorize once: the whole DTDG stream as (T, capacity) device
+        # arrays (jitted discretize + scatter; core/loader.py).
+        self.snapshots = snapshot_tensor(
+            data, self.unit, capacity=edge_capacity, device=device
+        )
+        self.capacity = self.snapshots.capacity
+        T = self.snapshots.num_snapshots
+
+        # Chronological split boundaries, mapped to snapshot rows. A pair
+        # (t -> t+1) belongs to the split containing its predicted snapshot.
+        train_d, val_d, test_d = data.split(val_ratio, test_ratio)
+        self._test_row = (
+            self.snapshots.row_of_time(int(test_d.edge_t[0]))
+            if test_d.num_edge_events else T
+        )
+        # An empty val split collapses onto the test boundary (val pairs
+        # empty, test pairs intact) rather than swallowing the test split.
+        self._val_row = (
+            self.snapshots.row_of_time(int(val_d.edge_t[0]))
+            if val_d.num_edge_events else self._test_row
+        )
+        self._val_row = min(max(self._val_row, 1), T)
+        self._test_row = min(max(self._test_row, self._val_row), T)
 
         self.cfg = snapshot.SnapshotConfig(num_nodes=data.num_nodes, d_embed=d_embed)
-        key = jax.random.PRNGKey(seed)
-        if model_name == "gcn":
-            self.params = snapshot.gcn_model_init(key, self.cfg)
-        elif model_name == "gclstm":
-            self.params = snapshot.gclstm_init(key, self.cfg)
-        else:
-            self.params = snapshot.tgcn_init(key, self.cfg)
+        self.params = snapshot.init_params(
+            model_name, jax.random.PRNGKey(seed), self.cfg
+        )
+        self._apply = snapshot.make_apply(model_name, self.cfg)
+        self._has_state = model_name != "gcn"
+        self.model_state = snapshot.init_state(model_name, self.cfg)
 
-        # Snapshot capacity: max discretized snapshot size (power-of-2 pad).
-        disc = data.discretize(self.unit, reduce="count")
-        self.disc = disc
-        loader = DGDataLoader(DGraph(disc), None, batch_size=None, batch_unit=self.unit)
-        sizes = [b.num_events for b in loader]
-        cap = edge_capacity or int(2 ** np.ceil(np.log2(max(max(sizes), 1))))
-        self.capacity = cap
+        self.manager = RecipeRegistry.build(
+            RECIPE_DTDG_SNAPSHOT,
+            num_nodes=data.num_nodes,
+            capacity=self.capacity,
+            num_negatives=num_negatives,
+            eval_negatives=eval_negatives,
+            seed=seed,
+            device=device,
+        )
+
         self.opt_cfg = AdamWConfig(lr=lr)
         self.opt_state = adamw_init(self.params)
+        self._cursor = 0  # next train pair (mid-epoch checkpoint resume)
+        self._xs_cache: Dict[Tuple[int, int, int], Dict[str, Any]] = {}
         self._build_steps()
 
-    def _init_state(self):
-        if self.model_name == "gcn":
-            return ()
-        if self.model_name == "gclstm":
-            return snapshot.gclstm_state(self.cfg)
-        return snapshot.tgcn_state(self.cfg)
-
-    def _apply(self, params, src, dst, mask, state):
-        if self.model_name == "gcn":
-            z = snapshot.gcn_model_apply(params, self.cfg, src, dst, mask)
-            return z, state
-        if self.model_name == "gclstm":
-            return snapshot.gclstm_apply(params, self.cfg, src, dst, mask, state)
-        return snapshot.tgcn_apply(params, self.cfg, src, dst, mask, state)
-
+    # ------------------------------------------------------------------
     def _build_steps(self):
         apply = self._apply
+        opt_cfg = self.opt_cfg
 
-        def loss_fn(params, state, cur, nxt):
-            z, new_state = apply(params, cur["src"], cur["dst"], cur["mask"], state)
-            h_src, h_dst = z[nxt["src"]], z[nxt["dst"]]
-            pos = link_decoder(params["decoder"], h_src, h_dst)
-            h_neg = z[nxt["neg"]]
-            neg = link_decoder(params["decoder"], h_src, h_neg)
-            return bce_link_loss(pos, neg, nxt["mask"]), new_state
+        def loss_fn(params, state, x):
+            z, new_state = apply(params, x["src"], x["dst"], x["mask"], state)
+            h_src = z[x["nsrc"]]
+            pos = link_decoder(params["decoder"], h_src, z[x["ndst"]])
+            neg = link_decoder(params["decoder"], h_src, z[x["neg"]])
+            return bce_link_loss(pos, neg, x["nmask"]), new_state
 
-        @jax.jit
-        def train_step(params, opt_state, state, cur, nxt):
+        def train_body(carry, x):
+            params, opt_state, state = carry
             (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, state, cur, nxt
+                params, state, x
             )
-            params, opt_state = adamw_update(params, grads, opt_state, self.opt_cfg)
-            return params, opt_state, new_state, loss
+            params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+            return (params, opt_state, new_state), loss
 
-        @jax.jit
-        def eval_step(params, state, cur, nxt):
-            z, new_state = apply(params, cur["src"], cur["dst"], cur["mask"], state)
-            h_src, h_dst = z[nxt["src"]], z[nxt["dst"]]
-            pos = link_decoder(params["decoder"], h_src, h_dst)
-            neg = link_decoder(params["decoder"], h_src, z[nxt["neg"]])
-            return pos, neg, new_state
+        def eval_body(params, state, x):
+            z, new_state = apply(params, x["src"], x["dst"], x["mask"], state)
+            h_src = z[x["nsrc"]]
+            pos = link_decoder(params["decoder"], h_src, z[x["ndst"]])
+            neg = link_decoder(params["decoder"], h_src, z[x["neg"]])
+            return new_state, (pos, neg)
 
-        self._train_step, self._eval_step = train_step, eval_step
+        def advance_body(params, state, x):
+            _, new_state = apply(params, x["src"], x["dst"], x["mask"], state)
+            return new_state
+
+        # One jitted scan per split chunk (the compiled pipeline) and the
+        # same bodies as standalone jitted per-snapshot steps (loop mode).
+        self._train_scan = jax.jit(
+            lambda p, o, s, xs: jax.lax.scan(train_body, (p, o, s), xs)
+        )
+        self._train_step = jax.jit(lambda p, o, s, x: train_body((p, o, s), x))
+        self._eval_scan = jax.jit(
+            lambda p, s, xs: jax.lax.scan(
+                lambda st, x: eval_body(p, st, x), s, xs
+            )
+        )
+        self._eval_step = jax.jit(eval_body)
+        self._advance_scan = jax.jit(
+            lambda p, s, xs: jax.lax.scan(
+                lambda st, x: (advance_body(p, st, x), None), s, xs
+            )[0]
+        )
+        self._advance_step = jax.jit(advance_body)
 
     # ------------------------------------------------------------------
-    def _snapshots(self):
-        loader = DGDataLoader(
-            DGraph(self.disc), None, batch_size=None,
-            batch_unit=self.unit, emit_empty=True,
-        )
-        for b in loader:
-            src, dst, mask = snapshot.pad_snapshot(b["src"], b["dst"], self.capacity)
-            yield {
-                "src": jnp.asarray(src), "dst": jnp.asarray(dst),
-                "mask": jnp.asarray(mask),
+    # Scan inputs are pure functions of (snapshot tensor, seed, range, m);
+    # cache the few ranges an epoch reuses, FIFO-evicting beyond this bound
+    # so long-lived trainers don't accumulate per-chunk device copies.
+    _XS_CACHE_MAX = 8
+
+    def _pair_xs(self, lo: int, hi: int, m: int) -> Dict[str, Any]:
+        """Stacked scan inputs for prediction pairs ``[lo, hi)`` (pair p =
+        snapshot p -> p+1) with ``m`` negatives per predicted edge."""
+        key = (lo, hi, m)
+        if key not in self._xs_cache:
+            if len(self._xs_cache) >= self._XS_CACHE_MAX:
+                self._xs_cache.pop(next(iter(self._xs_cache)))
+            st = self.snapshots
+            rows = np.arange(lo + 1, hi + 1)
+            self._xs_cache[key] = {
+                "src": st.src[lo:hi], "dst": st.dst[lo:hi],
+                "mask": st.mask[lo:hi],
+                "nsrc": st.src[lo + 1:hi + 1], "ndst": st.dst[lo + 1:hi + 1],
+                "nmask": st.mask[lo + 1:hi + 1],
+                "neg": st.negatives(self._seed, m, rows),
             }
+        return self._xs_cache[key]
 
-    def _with_negatives(self, snap, m: int):
-        neg = self._rng.integers(0, self.cfg.num_nodes, size=(self.capacity, m))
-        return {**snap, "neg": jnp.asarray(neg, jnp.int32)}
+    def _pair_x(self, p: int, neg) -> Dict[str, Any]:
+        """One pair's arrays (loop mode), with hook-produced negatives."""
+        st = self.snapshots
+        return {
+            "src": st.src[p], "dst": st.dst[p], "mask": st.mask[p],
+            "nsrc": st.src[p + 1], "ndst": st.dst[p + 1],
+            "nmask": st.mask[p + 1], "neg": neg,
+        }
 
-    def run_epoch(self, train_frac: float = 0.7, train: bool = True) -> Tuple[float, float]:
-        """Returns (mean metric, seconds). metric = loss if train else MRR."""
-        self._rng = np.random.default_rng(self._seed)
-        snaps = list(self._snapshots())
-        n_train = max(1, int(len(snaps) * train_frac))
-        state = self._init_state()
+    def _hook_negatives(self, p: int):
+        """Run the predicted snapshot through the active hook pipeline and
+        return its ``neg`` draws (identical to the scan path's bulk draw)."""
+        from repro.core.batch import Batch
+
+        st = self.snapshots
+        batch = Batch(
+            {"src": st.src[p + 1], "dst": st.dst[p + 1],
+             "time": np.full(st.capacity, (st.t0 + p + 1) * st.ticks,
+                             dtype=np.int64),
+             "snap_mask": st.mask[p + 1]},
+            meta={"snapshot_row": p + 1},
+        )
+        return self.manager.execute(batch)["neg"]
+
+    def _chunks(self, lo: int, hi: int):
+        step = self.chunk_size or max(hi - lo, 1)
+        for start in range(lo, hi, step):
+            yield start, min(start + step, hi)
+
+    def _split_pairs(self, split: str) -> Tuple[int, int]:
+        """Prediction-pair range ``[lo, hi)`` for a split."""
+        T = self.snapshots.num_snapshots
+        if split == "train":
+            return 0, max(self._val_row - 1, 0)
+        if split == "val":
+            return max(self._val_row - 1, 0), max(self._test_row - 1, 0)
+        if split == "test":
+            return max(self._test_row - 1, 0), max(T - 1, 0)
+        raise ValueError(f"unknown split {split!r}")
+
+    def reset_epoch_state(self):
+        """Reset hook cursors and the recurrent state (start of an epoch)."""
+        self.manager.reset_state()
+        self.model_state = snapshot.init_state(self.model_name, self.cfg)
+
+    # ------------------------------------------------------------------
+    def train_epoch(self) -> Tuple[float, float]:
+        """One epoch over the train split. Returns (mean loss, seconds).
+
+        ``compiled=True``: one scanned jitted call per chunk (default: the
+        whole split in one call). A restored mid-epoch snapshot cursor
+        resumes from where the checkpoint left off.
+        """
+        lo, hi = self._split_pairs("train")
+        if self._cursor == 0:
+            self.reset_epoch_state()
+        start = max(self._cursor, lo)
         t0 = time.perf_counter()
-        out, weights = [], []
-        for i in range(len(snaps) - 1):
-            cur = snaps[i]
-            is_train = i + 1 < n_train
-            if train and is_train:
-                nxt = self._with_negatives(snaps[i + 1], self.num_negatives)
-                self.params, self.opt_state, state, loss = self._train_step(
-                    self.params, self.opt_state, state, cur, nxt
-                )
-                out.append(float(loss))
-                weights.append(1.0)
-            elif not train and not is_train:
-                nxt = self._with_negatives(snaps[i + 1], self.eval_negatives)
-                pos, neg, state = self._eval_step(self.params, state, cur, nxt)
-                w = float(np.asarray(nxt["mask"]).sum())
-                out.append(mrr(pos, neg, nxt["mask"]) * w)
-                weights.append(w)
-            else:
-                # advance recurrent state through non-scored snapshots
-                _, state = self._advance(state, cur)
-        t1 = time.perf_counter()
-        denom = max(sum(weights), 1.0)
-        return float(np.sum(out) / denom if not train else np.mean(out)), t1 - t0
+        losses = []
+        if self.compiled:
+            for clo, chi in self._chunks(start, hi):
+                xs = self._pair_xs(clo, chi, self.num_negatives)
+                (self.params, self.opt_state, self.model_state), ls = \
+                    self._train_scan(self.params, self.opt_state,
+                                     self.model_state, xs)
+                losses.extend(float(l) for l in np.asarray(ls))
+                self._cursor = chi
+        else:
+            with self.manager.activate(TRAIN_KEY):
+                for p in range(start, hi):
+                    x = self._pair_x(p, self._hook_negatives(p))
+                    (self.params, self.opt_state, self.model_state), loss = \
+                        self._train_step(self.params, self.opt_state,
+                                         self.model_state, x)
+                    losses.append(float(loss))
+                    self._cursor = p + 1
+        self._cursor = 0
+        secs = time.perf_counter() - t0
+        return float(np.mean(losses)) if losses else 0.0, secs
 
-    def _advance(self, state, cur):
-        z, state = self._apply(self.params, cur["src"], cur["dst"], cur["mask"], state)
-        return z, state
+    def evaluate(self, split: str = "val") -> Tuple[float, float]:
+        """One-vs-many MRR on val/test. Returns (MRR, seconds).
+
+        The recurrent state is warmed through all earlier snapshots with an
+        advance-only scan (carried across the split boundary), then the
+        split's pairs are scored in one scanned call per chunk.
+        """
+        lo, hi = self._split_pairs(split)
+        self.manager.reset_state()
+        t0 = time.perf_counter()
+        # Local state: evaluation re-warms from scratch and must not clobber
+        # a mid-epoch training state (checkpoint-resume safety).
+        state = snapshot.init_state(self.model_name, self.cfg)
+        if self._has_state and lo > 0:
+            if self.compiled:
+                st = self.snapshots
+                warm = {"src": st.src[:lo], "dst": st.dst[:lo],
+                        "mask": st.mask[:lo]}
+                state = self._advance_scan(self.params, state, warm)
+            else:
+                st = self.snapshots
+                for p in range(lo):
+                    state = self._advance_step(
+                        self.params, state,
+                        {"src": st.src[p], "dst": st.dst[p],
+                         "mask": st.mask[p]},
+                    )
+        pos_rows, neg_rows, mask_rows = [], [], []
+        if self.compiled:
+            for clo, chi in self._chunks(lo, hi):
+                xs = self._pair_xs(clo, chi, self.eval_negatives)
+                state, (pos, neg) = self._eval_scan(self.params, state, xs)
+                pos_rows.extend(np.asarray(pos))
+                neg_rows.extend(np.asarray(neg))
+                mask_rows.extend(np.asarray(xs["nmask"]))
+        else:
+            with self.manager.activate(EVAL_KEY):
+                for p in range(lo, hi):
+                    x = self._pair_x(p, self._hook_negatives(p))
+                    state, (pos, neg) = self._eval_step(self.params, state, x)
+                    pos_rows.append(np.asarray(pos))
+                    neg_rows.append(np.asarray(neg))
+                    mask_rows.append(np.asarray(x["nmask"]))
+        out = _weighted_mrr(pos_rows, neg_rows, mask_rows)
+        return out, time.perf_counter() - t0
+
+    def run_epoch(self, train_frac: Optional[float] = None,
+                  train: bool = True) -> Tuple[float, float]:
+        """Legacy shim: ``train=True`` -> ``train_epoch()``; otherwise
+        ``evaluate('val')``. ``train_frac`` is ignored — splits now come
+        from ``DGData.split`` (chronological val/test ratios) — so an
+        explicitly passed value warns loudly instead of silently changing
+        which snapshots are scored."""
+        if train_frac is not None:
+            import warnings
+
+            warnings.warn(
+                "SnapshotLinkTrainer.run_epoch(train_frac=...) is ignored; "
+                "splits come from DGData.split — pass val_ratio/test_ratio "
+                "to the trainer and use train_epoch()/evaluate() instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        if train:
+            return self.train_epoch()
+        return self.evaluate("val")
+
+    # -- checkpointing ---------------------------------------------------
+    # Same composable contract as LinkPredictionTrainer: params + optimizer
+    # state + recurrent model state + hook cursors + the snapshot-pair
+    # cursor, so a restored run resumes mid-epoch at the right snapshot
+    # with the right negative draws.
+    def _ckpt_tree(self) -> Dict[str, Any]:
+        tree = {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "hooks": self.manager.state_dict(),
+            "pipeline": {"snapshot_cursor": np.int64(self._cursor)},
+        }
+        if self._has_state:
+            tree["model_state"] = self.model_state
+        return tree
+
+    def save_checkpoint(self, ckpt_dir: str, step: int) -> str:
+        """Write a checkpoint (atomic step directory). Returns its path."""
+        return ckpt.save(ckpt_dir, step, self._ckpt_tree(),
+                         extra_meta={"model_name": self.model_name,
+                                     "trainer": "snapshot"})
+
+    def restore_checkpoint(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        """Restore params/opt/model state, hook cursors and the snapshot
+        cursor; returns the checkpoint step."""
+        target = {k: v for k, v in self._ckpt_tree().items() if k != "hooks"}
+        tree, step, meta = _restore_with_saved_hooks(ckpt_dir, step, target)
+        if meta.get("model_name") not in (None, self.model_name):
+            raise ValueError(
+                f"checkpoint is for model {meta['model_name']!r}, "
+                f"trainer is {self.model_name!r}"
+            )
+        self.params = tree["params"]
+        self.opt_state = tree["opt_state"]
+        self.manager.load_state_dict(tree["hooks"])
+        self._cursor = int(np.asarray(tree["pipeline"]["snapshot_cursor"]))
+        if self._has_state:
+            self.model_state = tree["model_state"]
+        return step
+
+
+def _weighted_mrr(pos_rows, neg_rows, mask_rows) -> float:
+    """Per-snapshot MRR weighted by valid predicted edges — shared by the
+    scanned and loop DTDG paths so their aggregation is bit-identical."""
+    out, wsum = 0.0, 0.0
+    for pos, neg, m in zip(pos_rows, neg_rows, mask_rows):
+        w = float(np.asarray(m).sum())
+        if w:
+            out += mrr(pos, neg, m) * w
+            wsum += w
+    return float(out / max(wsum, 1.0))

@@ -2,7 +2,14 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import DGData, TimeDelta, discretize, discretize_jax, discretize_naive
+from repro.core import (
+    DGData,
+    TimeDelta,
+    discretize,
+    discretize_edges_padded,
+    discretize_jax,
+    discretize_naive,
+)
 
 REDUCTIONS = ["first", "last", "sum", "mean", "max", "count"]
 
@@ -91,6 +98,113 @@ def test_property_vectorized_equals_naive(n, n_nodes, t_hi, seed, reduce):
     assert _key_set(a) == _key_set(b)
     fa, fb = _aligned(a, b)
     np.testing.assert_allclose(fa, fb, rtol=1e-4, atol=1e-4)
+
+
+def _run_padded(d, k, reduce, capacity=None):
+    """Invoke the jitted padded core on a DGData's edge arrays."""
+    import jax.numpy as jnp
+
+    e = d.num_edge_events
+    cap = capacity or e
+    feats = (jnp.zeros((e, 0), jnp.float32) if d.edge_feats is None
+             else jnp.asarray(d.edge_feats))
+    return discretize_edges_padded(
+        jnp.asarray(d.src), jnp.asarray(d.dst), jnp.asarray(d.edge_t), feats,
+        k=k, reduce=reduce, capacity=cap, feat_dim=d.edge_feat_dim,
+    )
+
+
+@pytest.mark.parametrize("reduce", REDUCTIONS)
+def test_jit_padded_core_matches_host(reduce):
+    """The jittable fixed-capacity core == host numpy discretize: same
+    classes (tick-major sorted), same reduced features, correct valid
+    count, zero/sentinel padding beyond it."""
+    d = _mk(400, 12, 8000, seed=4)
+    k = 3600
+    usrc, udst, uct, feats, count = _run_padded(d, k, reduce)
+    ref = discretize(d, TimeDelta("h"), reduce=reduce)
+    g = int(count)
+    assert g == ref.num_edge_events
+    order = np.lexsort((ref.dst, ref.src, ref.edge_t))
+    np.testing.assert_array_equal(np.asarray(usrc)[:g], ref.src[order])
+    np.testing.assert_array_equal(np.asarray(udst)[:g], ref.dst[order])
+    np.testing.assert_array_equal(np.asarray(uct)[:g], ref.edge_t[order])
+    np.testing.assert_allclose(np.asarray(feats)[:g], ref.edge_feats[order],
+                               rtol=1e-5, atol=1e-5)
+    # padding invariants: zeros / int32-max sentinel beyond the valid count
+    assert (np.asarray(usrc)[g:] == 0).all()
+    assert (np.asarray(uct)[g:] == 2**31 - 1).all()
+    assert (np.asarray(feats)[g:] == 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 100),
+    n_nodes=st.integers(1, 10),
+    t_hi=st.integers(1, 15_000),
+    seed=st.integers(0, 5_000),
+    reduce=st.sampled_from(REDUCTIONS),
+)
+def test_property_jit_padded_equals_host(n, n_nodes, t_hi, seed, reduce):
+    """System invariant: jitted padded psi_r == host numpy psi_r, any
+    input (the device/host parity behind SnapshotTensor)."""
+    d = _mk(n, n_nodes, t_hi, seed=seed)
+    usrc, udst, uct, feats, count = _run_padded(d, 60, reduce)
+    ref = discretize(d, TimeDelta("m"), reduce=reduce)
+    g = int(count)
+    assert g == ref.num_edge_events
+    order = np.lexsort((ref.dst, ref.src, ref.edge_t))
+    np.testing.assert_array_equal(np.asarray(usrc)[:g], ref.src[order])
+    np.testing.assert_array_equal(np.asarray(udst)[:g], ref.dst[order])
+    np.testing.assert_array_equal(np.asarray(uct)[:g], ref.edge_t[order])
+    np.testing.assert_allclose(np.asarray(feats)[:g], ref.edge_feats[order],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_jax_path_handles_large_node_counts():
+    """Graphs with num_nodes > 2**15.5 (where a dense src*n+dst pair key
+    would overflow int32) stay on the device path via the three-level
+    stable argsort (regression: 46k-node cliff)."""
+    rng = np.random.default_rng(1)
+    d = DGData.from_arrays(
+        rng.integers(0, 100_000, 800), rng.integers(0, 100_000, 800),
+        rng.integers(0, 20_000, 800),
+        edge_feats=rng.standard_normal((800, 2)).astype(np.float32),
+        granularity="s", num_nodes=100_000,
+    )
+    from repro.core.discretize import jax_discretize_supported
+
+    assert jax_discretize_supported(d, 3600, edges_only=True)
+    a = discretize_jax(d, TimeDelta("h"), reduce="sum")
+    b = discretize(d, TimeDelta("h"), reduce="sum")
+    assert _key_set(a) == _key_set(b)
+    fa, fb = _aligned(a, b)
+    np.testing.assert_allclose(fa, fb, rtol=1e-5, atol=1e-5)
+
+
+def test_jax_path_handles_timestamps_beyond_int32():
+    """Raw timestamps >= 2**31 must not wrap on the device path: ticks are
+    pre-divided on the host when needed (regression: silent int32 wrap)."""
+    rng = np.random.default_rng(0)
+    t = np.sort(rng.integers(2**31 + 1000, 2**31 + 7_200_000, 200))
+    d = DGData.from_arrays(rng.integers(0, 20, 200), rng.integers(0, 20, 200),
+                           t, granularity="s")
+    a = discretize_jax(d, TimeDelta("h"), reduce="count")
+    b = discretize(d, TimeDelta("h"), reduce="count")
+    assert _key_set(a) == _key_set(b)
+    assert a.edge_t.min() > 0  # no negative wrapped ticks
+
+
+def test_jax_wrapper_still_matches_naive_all_reductions():
+    """discretize_jax (now routed through the jitted core) keeps full
+    semantic parity with the dict oracle for every reduction."""
+    d = _mk(300, 10, 5000, seed=2)
+    for reduce in REDUCTIONS:
+        a = discretize_jax(d, TimeDelta("h"), reduce=reduce)
+        b = discretize_naive(d, TimeDelta("h"), reduce=reduce)
+        assert _key_set(a) == _key_set(b)
+        fa, fb = _aligned(a, b)
+        np.testing.assert_allclose(fa, fb, rtol=1e-4, atol=1e-4)
 
 
 @settings(max_examples=15, deadline=None)

@@ -15,6 +15,7 @@ def test_readme_and_docs_exist():
     assert (ROOT / "README.md").exists()
     assert (ROOT / "docs" / "architecture.md").exists()
     assert (ROOT / "docs" / "kernels.md").exists()
+    assert (ROOT / "docs" / "dtdg.md").exists()
 
 
 def test_relative_doc_links_resolve():
@@ -29,11 +30,15 @@ def test_relative_doc_links_resolve():
 
 
 # Modules whose public surface must stay documented (the device-resident
-# sampling pipeline: PR-1 additions + the fused-attention layer).
+# sampling pipeline: PR-1 additions + the fused-attention layer + the
+# scan-compiled DTDG pipeline).
 DOCUMENTED_MODULES = [
     "repro.core.device_sampler",
     "repro.core.device_uniform",
+    "repro.core.discretize",
+    "repro.core.graph",
     "repro.core.loader",
+    "repro.core.negatives",
     "repro.core.tg_hooks",
     "repro.core.sampler",
     "repro.core.recipes",
@@ -41,7 +46,10 @@ DOCUMENTED_MODULES = [
     "repro.kernels.temporal_attention.ops",
     "repro.kernels.temporal_attention.ref",
     "repro.nn.attention",
+    "repro.nn.graph_conv",
     "repro.models.tg.common",
+    "repro.models.tg.snapshot",
+    "repro.train.tg_trainer",
 ]
 
 

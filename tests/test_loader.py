@@ -267,10 +267,14 @@ def test_checkpoint_interchange_across_device_sampling_flavors():
     mu_host.load_state_dict(mu_dev.state_dict())  # device -> host CSR
 
 
-def test_uniform_recipe_rejects_hop2():
-    with pytest.raises(ValueError, match="num_hops=1"):
-        RecipeRegistry.build(RECIPE_TGB_LINK, num_nodes=10, k=2,
+def test_uniform_recipe_supports_hop2():
+    """Hop-2 uniform sampling builds a valid recipe (recursive frontier;
+    used to raise) with the nbr2 feature lookup wired in."""
+    m = RecipeRegistry.build(RECIPE_TGB_LINK, num_nodes=10, k=2,
                              batch_size=8, sampler="uniform", num_hops=2)
+    hook = next(h for h in m.hooks() if hasattr(h, "num_hops"))
+    assert hook.num_hops == 2
+    assert "nbr2_ids" in hook.produces
 
 
 def test_device_sampling_recipe_parity_with_host_recipe():
