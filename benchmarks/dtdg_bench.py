@@ -19,7 +19,7 @@ from repro.core.discretize import (
     jax_discretize_supported,
 )
 from repro.data import generate
-from repro.train import SnapshotLinkTrainer
+from repro.tg import DataSpec, Experiment, ModelSpec, TrainSpec
 
 
 def jit_discretize_call(data, unit: TimeDelta, reduce: str = "count"):
@@ -59,12 +59,14 @@ def bench_dtdg_scan_vs_loop(model: str = "tgcn", dataset: str = "wikipedia",
     dispatches (numerical parity is asserted in tests; this measures the
     speedup the scan buys)."""
     data = generate(dataset, scale=scale)
-    trainers = {
-        "scan": SnapshotLinkTrainer(model, data, snapshot_unit=unit,
-                                    d_embed=d_embed, compiled=True),
-        "loop": SnapshotLinkTrainer(model, data, snapshot_unit=unit,
-                                    d_embed=d_embed, compiled=False),
-    }
+    def build(compiled):
+        return Experiment(
+            data=DataSpec(dataset, scale=scale, discretization=unit),
+            model=ModelSpec(model, {"d_embed": d_embed}),
+            train=TrainSpec(compiled=compiled),
+        ).compile(data)
+
+    trainers = {"scan": build(True), "loop": build(False)}
     results = {}
     for name, tr in trainers.items():
         tr.train_epoch()  # compile + warm

@@ -119,9 +119,12 @@ def bench_fused_vs_pregathered(B: int = 200, K: int = 20, N: int = 10_000,
         np.sort(rng.integers(0, 10_000, E)), edge_feats=feats,
         granularity="s",
     )
+    from repro.tg import SamplerSpec
+
     m = RecipeRegistry.build(
-        RECIPE_TGB_LINK, num_nodes=N, k=K, batch_size=B, eval_negatives=20,
-        edge_feats=feats, edge_feat_dim=d_edge, device_sampling=True, seed=0,
+        RECIPE_TGB_LINK, num_nodes=N, batch_size=B, eval_negatives=20,
+        edge_feats=feats, edge_feat_dim=d_edge, seed=0,
+        spec=SamplerSpec(k=K, device=True),
     )
     with m.activate(TRAIN_KEY):
         *_, batch = iter(DGDataLoader(DGraph(data), m, batch_size=B))

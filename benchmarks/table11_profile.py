@@ -8,7 +8,7 @@ import numpy as np
 from repro.core import TRAIN_KEY
 from repro.core.tg_hooks import RecencyNeighborHook
 from repro.data import generate
-from repro.train import LinkPredictionTrainer
+from repro.tg import DataSpec, Experiment, ModelSpec, SamplerSpec, TrainSpec
 from repro.utils import Profiler
 
 from benchmarks.common import emit
@@ -16,8 +16,12 @@ from benchmarks.common import emit
 
 def run(scale: float = 0.01, dataset: str = "wikipedia") -> None:
     data = generate(dataset, scale=scale)
-    tr = LinkPredictionTrainer("tgat", data, batch_size=200, k=10,
-                               model_kwargs={"num_layers": 1})
+    tr = Experiment(
+        data=DataSpec(dataset, scale=scale),
+        model=ModelSpec("tgat", {"num_layers": 1}),
+        sampler=SamplerSpec(k=10),
+        train=TrainSpec(batch_size=200),
+    ).compile(data)
     tr.train_epoch()  # warm compile
 
     prof = Profiler(block=True)

@@ -1,13 +1,14 @@
 """Paper Table 6 / RQ2: snapshot time-granularity vs DTDG link-pred MRR,
 measured on the scan-compiled snapshot pipeline (one jitted call per train
-epoch; tensorization cost reported separately)."""
+epoch; tensorization cost reported separately). Each granularity is one
+``tg.Experiment`` differing only in ``DataSpec.discretization``."""
 
 from __future__ import annotations
 
 from benchmarks.common import emit, timeit
 
 from repro.data import generate
-from repro.train import SnapshotLinkTrainer
+from repro.tg import DataSpec, Experiment, ModelSpec
 
 
 def run(scale: float = 0.01, dataset: str = "wikipedia",
@@ -15,7 +16,11 @@ def run(scale: float = 0.01, dataset: str = "wikipedia",
     data = generate(dataset, scale=scale)
     for unit in units:
         t_build = timeit(lambda: data.to_snapshots(unit), repeats=1, warmup=1)
-        tr = SnapshotLinkTrainer("gcn", data, snapshot_unit=unit, d_embed=32)
+        exp = Experiment(
+            data=DataSpec(dataset, scale=scale, discretization=unit),
+            model=ModelSpec("gcn", {"d_embed": 32}),
+        )
+        tr = exp.compile(data)
         secs_total = 0.0
         for _ in range(epochs):
             _, secs = tr.train_epoch()

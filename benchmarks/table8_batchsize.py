@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core import DGraph, DGDataLoader, EVAL_KEY, TRAIN_KEY
 from repro.data import generate
-from repro.train import LinkPredictionTrainer
+from repro.tg import DataSpec, Experiment, ModelSpec, SamplerSpec, TrainSpec
 from repro.train.metrics import mrr as mrr_metric
 
 from benchmarks.common import emit
@@ -23,10 +23,16 @@ from benchmarks.common import emit
 def run(scale: float = 0.01, dataset: str = "wikipedia") -> None:
     data = generate(dataset, scale=scale)
 
+    def tgat_exp(bs):
+        return Experiment(
+            data=DataSpec(dataset, scale=scale),
+            model=ModelSpec("tgat", {"num_layers": 1}),
+            sampler=SamplerSpec(k=10),
+            train=TrainSpec(batch_size=bs, eval_negatives=20),
+        )
+
     for bs in (50, 100, 200):
-        tr = LinkPredictionTrainer("tgat", data, batch_size=bs, k=10,
-                                   eval_negatives=20,
-                                   model_kwargs={"num_layers": 1})
+        tr = tgat_exp(bs).compile(data)
         tr.train_epoch()
         mrr, secs = tr.evaluate("val")
         emit(f"table8/{dataset}/batch_size={bs}", secs, f"mrr={mrr:.3f}")
@@ -34,9 +40,7 @@ def run(scale: float = 0.01, dataset: str = "wikipedia") -> None:
     # iterate-by-time evaluation: the pad hook restores static shapes, so
     # the same jitted eval step serves ragged time windows (<= batch_size).
     for unit in ("h", "d"):
-        tr = LinkPredictionTrainer("tgat", data, batch_size=200, k=10,
-                                   eval_negatives=20,
-                                   model_kwargs={"num_layers": 1})
+        tr = tgat_exp(200).compile(data)
         tr.train_epoch()
         tr.reset_epoch_state()
         with tr.manager.activate(TRAIN_KEY):

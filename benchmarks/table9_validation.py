@@ -26,7 +26,7 @@ from repro.core import (
 )
 from repro.core.tg_hooks import RecencyNeighborHook
 from repro.data import generate
-from repro.train import LinkPredictionTrainer
+from repro.tg import DataSpec, Experiment, ModelSpec, SamplerSpec, TrainSpec
 from repro.train.metrics import mrr as mrr_metric
 
 from benchmarks.common import emit
@@ -95,9 +95,12 @@ def run(scale: float = 0.02, dataset: str = "wikipedia",
         eval_negatives: int = 50) -> None:
     data = generate(dataset, scale=scale)
 
-    tr = LinkPredictionTrainer("tgat", data, batch_size=200, k=10,
-                               eval_negatives=eval_negatives,
-                               model_kwargs={"num_layers": 1})
+    tr = Experiment(
+        data=DataSpec(dataset, scale=scale),
+        model=ModelSpec("tgat", {"num_layers": 1}),
+        sampler=SamplerSpec(k=10),
+        train=TrainSpec(batch_size=200, eval_negatives=eval_negatives),
+    ).compile(data)
     tr.train_epoch()  # train weights + warm compiles
 
     mrr_tgm, t_tgm = tr.evaluate("val")

@@ -1,9 +1,11 @@
 """RQ2 (paper Table 6): snapshot granularity as a hyperparameter.
 
-One line changes the snapshot resolution; MRR shifts substantially. Runs on
-the scan-compiled DTDG pipeline: the stream is tensorized once per
-granularity (jitted discretize + scatter) and each train epoch is a single
-scanned jitted call (see docs/dtdg.md).
+One spec field changes the snapshot resolution; MRR shifts substantially.
+Each granularity is one declarative ``tg.Experiment`` whose
+``DataSpec.discretization`` axis selects the scan-compiled DTDG pipeline:
+the stream is tensorized once per granularity (jitted discretize +
+scatter) and each train epoch is a single scanned jitted call (see
+docs/dtdg.md and docs/experiment.md).
 
     PYTHONPATH=src python examples/granularity_study.py [--fast]
 
@@ -12,8 +14,8 @@ scanned jitted call (see docs/dtdg.md).
 
 import sys
 
+from repro.tg import DataSpec, Experiment, ModelSpec, TrainSpec
 from repro.data import generate
-from repro.train import SnapshotLinkTrainer
 
 
 def main(fast: bool = False):
@@ -26,13 +28,16 @@ def main(fast: bool = False):
     print(f"{'granularity':>12s} {'snapshots':>10s} {'capacity':>9s} "
           f"{'val MRR':>8s} {'test MRR':>9s}")
     for unit in units:
-        tr = SnapshotLinkTrainer("gcn", data, snapshot_unit=unit, d_embed=32)
-        for _ in range(epochs):
-            tr.train_epoch()
-        val_mrr, _ = tr.evaluate("val")
-        test_mrr, _ = tr.evaluate("test")
-        print(f"{unit:>12s} {tr.snapshots.num_snapshots:>10d} "
-              f"{tr.capacity:>9d} {val_mrr:>8.3f} {test_mrr:>9.3f}")
+        exp = Experiment(
+            data=DataSpec("wikipedia", scale=scale, discretization=unit),
+            model=ModelSpec("gcn", {"d_embed": 32}),
+            train=TrainSpec(epochs=epochs),
+        )
+        out = exp.run(data=data, splits=("val", "test"))
+        pipeline = out["pipeline"]
+        print(f"{unit:>12s} {pipeline.snapshots.num_snapshots:>10d} "
+              f"{pipeline.capacity:>9d} {out['metrics']['val']:>8.3f} "
+              f"{out['metrics']['test']:>9.3f}")
 
 
 if __name__ == "__main__":

@@ -1,17 +1,24 @@
-"""End-to-end driver: train dynamic link prediction for a few hundred steps
-across several CTDG/DTDG models and report one-vs-many test MRR, with
-checkpointing — the paper's core task, soup to nuts.
+"""End-to-end driver: train dynamic link prediction across the CTDG *and*
+DTDG halves of the model zoo through the single ``tg.Experiment`` front
+door, with checkpointing, and report one-vs-many test MRR — the paper's
+core task, soup to nuts.
+
+Each model run is one declarative ``Experiment``: the CTDG models keep the
+native event stream (``DataSpec.discretization=None`` -> event-iterated
+pipeline), the snapshot models set a daily discretization axis (->
+scan-compiled pipeline). ``--device-sampling`` only changes the
+``SamplerSpec``.
 
     PYTHONPATH=src python examples/linkpred_end_to_end.py [--scale 0.02]
 """
 
 import argparse
 
-import numpy as np
-
+from repro.tg import DataSpec, Experiment, ModelSpec, SamplerSpec, TrainSpec
 from repro.data import generate
-from repro.distributed import checkpoint as ckpt
-from repro.train import LinkPredictionTrainer, SnapshotLinkTrainer
+
+CTDG_MODELS = ["tgat", "graphmixer", "tpnet", "tgn"]
+DTDG_MODELS = ["gcn", "gclstm"]
 
 
 def main():
@@ -23,35 +30,41 @@ def main():
     p.add_argument("--device-sampling", action="store_true",
                    help="device-resident recency buffers + prefetching loader "
                         "(bit-identical outputs to the host numpy sampler)")
+    p.add_argument("--fast", action="store_true",
+                   help="CI smoke path: tiny scale, one epoch")
     args = p.parse_args()
+    if args.fast:
+        args.scale, args.epochs = 0.004, 1
 
     data = generate(args.dataset, scale=args.scale)
     print(f"{args.dataset} x{args.scale}: {data.num_edge_events} events "
           f"(~{data.num_edge_events * args.epochs // 200} train steps/model)")
 
     results = {}
-    for model in ["tgat", "graphmixer", "tpnet", "tgn"]:
-        kwargs = {"num_layers": 1} if model == "tgat" else None
-        tr = LinkPredictionTrainer(model, data, batch_size=200, k=10,
-                                   eval_negatives=20, model_kwargs=kwargs,
-                                   device_sampling=args.device_sampling)
-        for epoch in range(args.epochs):
-            loss, secs = tr.train_epoch()
-            print(f"[{model}] epoch {epoch}: loss={loss:.4f} ({secs:.1f}s)")
-        ckpt.save(f"{args.ckpt_dir}/{model}", args.epochs - 1,
-                  {"params": tr.params})
-        mrr, _ = tr.evaluate("test")
-        results[model] = mrr
-
-    for model in ["gcn", "gclstm"]:
-        # Scan-compiled DTDG pipeline: one jitted call per train epoch.
-        tr = SnapshotLinkTrainer(model, data, snapshot_unit="d", d_embed=64)
-        for epoch in range(args.epochs):
-            loss, secs = tr.train_epoch()
-            print(f"[{model}] epoch {epoch}: loss={loss:.4f} ({secs:.1f}s, "
-                  f"{tr.snapshots.num_snapshots} snapshots scanned)")
-        tr.save_checkpoint(f"{args.ckpt_dir}/{model}", args.epochs - 1)
-        results[model], _ = tr.evaluate("test")
+    for model in CTDG_MODELS + DTDG_MODELS:
+        if model in CTDG_MODELS:
+            kwargs = {"num_layers": 1} if model == "tgat" else {}
+            exp = Experiment(
+                data=DataSpec(args.dataset, scale=args.scale),
+                model=ModelSpec(model, kwargs),
+                sampler=SamplerSpec(k=10, device=args.device_sampling),
+                train=TrainSpec(epochs=args.epochs, batch_size=200,
+                                eval_negatives=20,
+                                ckpt_dir=f"{args.ckpt_dir}/{model}",
+                                ckpt_every=args.epochs),
+            )
+        else:
+            exp = Experiment(
+                data=DataSpec(args.dataset, scale=args.scale,
+                              discretization="d"),
+                model=ModelSpec(model, {"d_embed": 64}),
+                train=TrainSpec(epochs=args.epochs, eval_negatives=20,
+                                ckpt_dir=f"{args.ckpt_dir}/{model}",
+                                ckpt_every=args.epochs),
+            )
+        out = exp.run(data=data, splits=("test",),
+                      log=lambda msg: print(f"[{model}] {msg}"))
+        results[model] = out["metrics"]["test"]
 
     print("\ntest MRR (20 negatives):")
     for model, mrr in sorted(results.items(), key=lambda kv: -kv[1]):

@@ -19,7 +19,7 @@ A bounded queue (default depth 2 = double buffering) provides back-pressure
 so at most ``prefetch`` prepared batches are in flight; hook state stays
 correct because the hook pipeline still executes strictly sequentially, just
 one batch ahead of the consumer. This is the loader half of the
-``device_sampling=True`` pipeline in ``train.tg_trainer``. The staging
+``SamplerSpec(device=True)`` pipeline in ``train.loop``. The staging
 model is documented in ``docs/architecture.md``.
 
 ``snapshot_tensor`` is the DTDG counterpart of loading: instead of
@@ -262,6 +262,81 @@ def snapshot_tensor(
     )
 
 
+class _HostStagingPool:
+    """Rotating reusable host staging buffers for ``PrefetchLoader``.
+
+    Fresh numpy arrays from the hook pipeline live in pageable memory, so
+    on GPU backends every ``jax.device_put`` pays a pageable->pinned copy
+    inside the driver before the H2D DMA can overlap compute. Staging each
+    batch into a small set of *reused* host buffers (one per batch key,
+    rotated round-robin across ``depth`` slots) keeps the source addresses
+    stable — the runtime's transfer machinery can keep them registered —
+    and lets the transfer be issued with ``donate=True`` (the staged array
+    is never read again by the producer).
+
+    ``depth`` bounds how soon a slot can be rewritten (only after ``depth``
+    newer batches were staged), and rewriting additionally blocks on the
+    device array last transferred from that slot (``note`` /
+    ``block_until_ready`` — normally a no-op that far behind the queue's
+    back-pressure, but it makes reuse-before-DMA-completion impossible by
+    construction rather than by timing). Rotation is explicit (``advance``
+    once per batch) so every array of one batch shares a slot generation.
+    """
+
+    def __init__(self, depth: int):
+        if depth < 2:
+            raise ValueError("staging depth must be >= 2")
+        self.depth = depth
+        self._slot = 0
+        self._bufs = {}
+        self._pending = {}
+        # XLA's CPU client zero-copies 64-byte-aligned host buffers into
+        # device arrays, which would alias a reused slot straight into an
+        # already-yielded batch. Deliberately misaligned slots force a real
+        # copy there; on accelerators device memory is separate, so
+        # alignment is kept for the H2D DMA's sake.
+        import jax
+
+        self._misalign = jax.default_backend() == "cpu"
+
+    def _alloc(self, shape, dtype: np.dtype) -> np.ndarray:
+        n = int(np.prod(shape))
+        if not self._misalign:
+            return np.empty(shape, dtype)
+        extra = max(64 // max(dtype.itemsize, 1), 1)
+        raw = np.empty(n + extra, dtype)
+        for k in range(extra):
+            if (raw.ctypes.data + k * dtype.itemsize) % 64:
+                return raw[k:k + n].reshape(shape)
+        return raw[:n].reshape(shape)  # unreachable: a window this wide
+        # always contains a misaligned element address
+
+    def advance(self) -> None:
+        """Rotate to the next slot generation (call once per batch)."""
+        self._slot = (self._slot + 1) % self.depth
+
+    def stage(self, key: str, arr: np.ndarray) -> np.ndarray:
+        """Copy ``arr`` into this slot's reusable buffer for ``key``
+        (int64 narrowed to int32, matching ``DeviceTransferHook``),
+        waiting out any still-pending transfer from the same slot first."""
+        dtype = np.dtype(np.int32) if arr.dtype == np.int64 else arr.dtype
+        k = (key, self._slot)
+        pending = self._pending.pop(k, None)
+        if pending is not None:
+            pending.block_until_ready()
+        buf = self._bufs.get(k)
+        if buf is None or buf.shape != arr.shape or buf.dtype != dtype:
+            buf = self._alloc(arr.shape, dtype)
+            self._bufs[k] = buf
+        np.copyto(buf, arr, casting="unsafe")
+        return buf
+
+    def note(self, key: str, device_array) -> None:
+        """Record the device array transferred from this slot's ``key``
+        buffer, so the slot's next rewrite can block on its completion."""
+        self._pending[(key, self._slot)] = device_array
+
+
 class PrefetchLoader:
     """Double-buffered device-staging wrapper around any batch iterable.
 
@@ -272,6 +347,14 @@ class PrefetchLoader:
     ``DeviceTransferHook``). Arrays already on device pass through untouched,
     so it composes with device-resident hooks.
 
+    ``staging`` enables the reusable host staging buffers
+    (``_HostStagingPool``) so the H2D transfer reads from stable,
+    re-registered addresses and can donate them; ``None`` (default)
+    auto-enables this on GPU backends only — on CPU "transfer" is a local
+    copy and staging would only add another one. Donation is never applied
+    on CPU, where ``jax.device_put(..., donate=True)`` zero-copy *aliases*
+    the source buffer and a reused slot would corrupt earlier batches.
+
     Exceptions raised in the producer are re-raised in the consumer; the
     producer thread exits promptly when the consumer stops iterating
     (``close``) because the bounded queue blocks with a timeout and checks a
@@ -280,12 +363,19 @@ class PrefetchLoader:
 
     _END = object()
 
-    def __init__(self, inner, device=None, prefetch: int = 2):
+    def __init__(self, inner, device=None, prefetch: int = 2,
+                 staging: Optional[bool] = None):
         if prefetch < 1:
             raise ValueError("prefetch depth must be >= 1")
         self.inner = inner
         self._device = device
         self.prefetch = prefetch
+        if staging is None:
+            staging = jax.default_backend() == "gpu"
+        self.staging = staging
+        # depth > max batches in flight: `prefetch` queued + 1 being
+        # consumed + 1 being produced.
+        self._pool = _HostStagingPool(prefetch + 2) if staging else None
 
     def __len__(self) -> int:
         return len(self.inner)
@@ -293,7 +383,9 @@ class PrefetchLoader:
     def _stage(self, batch: Batch) -> Batch:
         from repro.core.tg_hooks import stage_batch
 
-        return stage_batch(batch, self._device)
+        if self._pool is not None:
+            self._pool.advance()
+        return stage_batch(batch, self._device, pool=self._pool)
 
     def __iter__(self) -> Iterator[Batch]:
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)

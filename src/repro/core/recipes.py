@@ -8,10 +8,12 @@ hooks under the right activation keys:
 
   RECIPE_TGB_LINK      : training negatives (random) + eval one-vs-many
                          negatives + recency neighbors (+dedup) + edge-feature
-                         lookup + pad + device transfer. Pass
-                         ``device_sampling=True`` to swap the host numpy
-                         recency buffers for the device-resident JAX sampler
-                         (same outputs; neighbor tensors born on device).
+                         lookup + pad + device transfer. The sampling strategy
+                         is declared by ``spec=repro.tg.SamplerSpec(...)``
+                         (``device=True`` swaps the host numpy buffers for the
+                         device-resident JAX sampler twins — same outputs;
+                         neighbor tensors born on device); the pre-spec kwargs
+                         still work with a DeprecationWarning.
   RECIPE_TGB_NODE      : recency neighbors + pad + device transfer (labels
                          come from the dataset).
   RECIPE_DTDG_SNAPSHOT : snapshot link-prediction pipeline — per-snapshot
@@ -79,11 +81,48 @@ class RecipeRegistry:
         return sorted(cls._builders)
 
 
+# Sentinel distinguishing "legacy kwarg explicitly passed" from defaults.
+_UNSET = object()
+
+
+def _legacy_sampler_spec(k, num_hops, device_sampling, sampler, expose_buffer,
+                         checkpoint_adjacency):
+    """Map the pre-spec kwarg surface onto a ``SamplerSpec``, warning once
+    per call when any legacy strategy kwarg was explicitly passed."""
+    import warnings
+
+    from repro.tg.specs import SamplerSpec
+
+    legacy = {
+        "device_sampling": device_sampling,
+        "sampler": sampler,
+        "expose_buffer": expose_buffer,
+        "checkpoint_adjacency": checkpoint_adjacency,
+    }
+    passed = sorted(name for name, v in legacy.items() if v is not _UNSET)
+    if passed:
+        warnings.warn(
+            f"RECIPE_TGB_LINK legacy kwargs {passed} are deprecated; pass "
+            f"spec=repro.tg.SamplerSpec(...) instead (see docs/experiment.md)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return SamplerSpec(
+        kind="recency" if sampler is _UNSET else sampler,
+        k=k,
+        num_hops=num_hops,
+        device=False if device_sampling is _UNSET else bool(device_sampling),
+        checkpoint_adjacency=(True if checkpoint_adjacency is _UNSET
+                              else bool(checkpoint_adjacency)),
+        expose_buffer=None if expose_buffer is _UNSET else expose_buffer,
+    )
+
+
 @RecipeRegistry.register(RECIPE_TGB_LINK)
 def _tgb_link(
     num_nodes: int,
-    k: int = 20,
-    num_hops: int = 1,
+    k: Optional[int] = None,
+    num_hops: Optional[int] = None,
     batch_size: int = 200,
     eval_negatives: int = 100,
     edge_feats: Optional[np.ndarray] = None,
@@ -91,28 +130,52 @@ def _tgb_link(
     dst_pool: Optional[np.ndarray] = None,
     seed: int = 0,
     device=None,
-    device_sampling: bool = False,
-    sampler: str = "recency",
-    expose_buffer: Optional[bool] = None,
-    checkpoint_adjacency: bool = True,
+    spec=None,
+    device_sampling=_UNSET,
+    sampler=_UNSET,
+    expose_buffer=_UNSET,
+    checkpoint_adjacency=_UNSET,
 ) -> HookManager:
     """Build the TGB link-prediction hook pipeline.
 
-    ``sampler`` selects the temporal neighbor strategy: ``"recency"`` (K
-    most recent, circular buffers) or ``"uniform"`` (K uniform draws from
-    the strict past; hop-1 or recursive hop-2 frontier, and the returned
-    hook's ``build(...)`` must be called with the edge storage before
-    iterating). ``device_sampling=True`` swaps in the device-resident twin
-    of either sampler (same outputs / checkpoint contract; tensors born on
-    device). ``expose_buffer`` forwards to ``DeviceRecencyNeighborHook``
-    (None = backend auto; pass False for models without a fused attention
-    path so buffer updates can donate in place). ``checkpoint_adjacency``
-    forwards to the uniform samplers: ``False`` drops the O(E) CSR from
-    ``state_dict`` (counter-only checkpoints; the adjacency is rebuilt from
-    storage by the restoring trainer's ``build``).
+    The sampling strategy comes from ``spec`` — a
+    ``repro.tg.SamplerSpec``: ``kind`` selects recency (K most recent,
+    circular buffers) vs uniform (K uniform draws from the strict past;
+    hop-1 or recursive hop-2 frontier, and the returned hook's
+    ``build(...)`` must be called with the edge storage before iterating);
+    ``device=True`` swaps in the device-resident twin of either sampler
+    (same outputs / checkpoint contract; tensors born on device);
+    ``expose_buffer`` forwards to ``DeviceRecencyNeighborHook`` (``None``
+    = backend auto; ``False`` for models without a fused attention path so
+    buffer updates can donate in place); ``checkpoint_adjacency=False``
+    keeps the uniform samplers' O(E) CSR out of ``state_dict``
+    (counter-only checkpoints; the adjacency is rebuilt from storage by
+    the restoring pipeline's ``build``). With ``spec`` given, the
+    sampling-strategy arguments — including ``k`` and ``num_hops`` — must
+    come from the spec; passing both raises.
+
+    The pre-spec kwargs (``k=``, ``num_hops=``, ``device_sampling=``,
+    ``sampler=``, ``expose_buffer=``, ``checkpoint_adjacency=``) are still
+    accepted without a spec; the strategy ones are deprecated and mapped
+    onto a ``SamplerSpec`` with a ``DeprecationWarning``.
     """
-    if sampler not in ("recency", "uniform"):
-        raise ValueError(f"unknown sampler {sampler!r}; use 'recency' or 'uniform'")
+    if spec is None:
+        spec = _legacy_sampler_spec(
+            20 if k is None else k, 1 if num_hops is None else num_hops,
+            device_sampling, sampler, expose_buffer, checkpoint_adjacency,
+        )
+    elif (k is not None or num_hops is not None
+          or any(v is not _UNSET for v in (device_sampling, sampler,
+                                           expose_buffer,
+                                           checkpoint_adjacency))):
+        raise ValueError(
+            "pass either spec=SamplerSpec(...) or the legacy sampler kwargs "
+            "(k/num_hops/device_sampling/sampler/expose_buffer/"
+            "checkpoint_adjacency), not both"
+        )
+    k = spec.k
+    num_hops = spec.num_hops if spec.num_hops is not None else 1
+    device_sampling = spec.device
     m = HookManager()
     # Padding runs FIRST so negatives/neighbor tensors come out fixed-shape;
     # stateful hooks exclude padded events via batch_mask.
@@ -128,21 +191,23 @@ def _tgb_link(
     )
     # One shared neighbor sampler serves both train and eval keys (state is
     # shared; recency buffer updates exclude padding and happen once per
-    # batch). ``device_sampling`` swaps the host numpy implementation for
-    # the JAX device-resident twin (same outputs, no host round-trip).
-    if sampler == "uniform":
+    # batch). ``spec.device`` swaps the host numpy implementation for the
+    # JAX device-resident twin (same outputs, no host round-trip).
+    if spec.kind == "uniform":
         if device_sampling:
             m.register(DeviceUniformNeighborHook(
                 num_nodes, k, include_negatives=True, seed=seed, device=device,
-                num_hops=num_hops, checkpoint_adjacency=checkpoint_adjacency))
+                num_hops=num_hops,
+                checkpoint_adjacency=spec.checkpoint_adjacency))
         else:
             m.register(UniformNeighborHook(
                 num_nodes, k, include_negatives=True, seed=seed,
-                num_hops=num_hops, checkpoint_adjacency=checkpoint_adjacency))
+                num_hops=num_hops,
+                checkpoint_adjacency=spec.checkpoint_adjacency))
     elif device_sampling:
         m.register(DeviceRecencyNeighborHook(num_nodes, k, num_hops=num_hops,
                                              device=device,
-                                             expose_buffer=expose_buffer,
+                                             expose_buffer=spec.expose_buffer,
                                              edge_feats=edge_feats))
     else:
         m.register(RecencyNeighborHook(num_nodes, k, num_hops=num_hops, dedup=True))

@@ -290,10 +290,19 @@ class UniformSampler:
         # searchsorted on the (node, time-rank) composite key: entries with
         # key < seed * base + rank(query_t) are exactly "nodes before seed"
         # plus "seed's neighbors with t < query_t" (rank() is monotone).
+        # Batch-level dedup first: duplicate (seed, query_t) pairs — the
+        # whole hop-2 frontier of a one-vs-many eval batch, where every
+        # negative shares the positives' sampled neighbors — collapse to
+        # one key each, so the binary search over the O(E) adjacency runs
+        # on the unique set and gathers back. Bit-identical to the direct
+        # search (searchsorted is deterministic per key); the K draws below
+        # stay per-seed, so duplicated seeds keep independent draws.
         qranks = np.searchsorted(self._tvals, query_t, side="left")
+        keys = seeds * self._key_base + qranks
+        uniq_keys, inverse = np.unique(keys, return_inverse=True)
         valid_ends = np.searchsorted(
-            self._adj_key, seeds * self._key_base + qranks, side="left"
-        )
+            self._adj_key, uniq_keys, side="left"
+        )[inverse.reshape(keys.shape)]
         n_valid = valid_ends - starts
         has = n_valid > 0
         rng = np.random.default_rng((self._seed, self._counter))

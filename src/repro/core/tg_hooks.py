@@ -361,7 +361,12 @@ class UniformNeighborHook(Hook):
     sampled neighbor becomes a hop-2 seed queried at its *own* interaction
     time (strict ``t < t_hop1``, the TGAT temporal-causality convention),
     producing ``nbr2_*`` blocks aligned with the flattened hop-1 frontier —
-    rows whose hop-1 slot is padding come back fully masked.
+    rows whose hop-1 slot is padding come back fully masked. The ``S*K``
+    frontier is deduplicated at the batch level before the adjacency
+    binary search (inside ``UniformSampler.sample``: duplicate
+    ``(node, time)`` pairs — ubiquitous in one-vs-many eval shapes, where
+    negatives share the positives' neighbors — collapse to one searchsorted
+    key each), bit-identically to the direct search.
     """
 
     def __init__(self, num_nodes: int, k: int, include_negatives: bool = False,
@@ -573,21 +578,32 @@ class PadBatchHook(Hook):
         return batch
 
 
-def stage_batch(batch: Batch, device=None) -> Batch:
+def stage_batch(batch: Batch, device=None, pool=None) -> Batch:
     """Ship every host numpy attribute of ``batch`` to ``device`` (int64
     narrowed to int32 for the jitted models); arrays already on device pass
     through. Shared by ``DeviceTransferHook`` and ``PrefetchLoader`` so the
-    transfer/narrowing policy lives in one place."""
+    transfer/narrowing policy lives in one place.
+
+    ``pool`` (a ``core.loader._HostStagingPool``) routes each array through
+    a reusable host staging buffer first, and — off CPU only — issues the
+    transfer with ``donate=True`` so the runtime may recycle the staged
+    source immediately (on CPU, donation zero-copy aliases the source, so a
+    reused buffer must never be donated)."""
     import jax
-    import jax.numpy as jnp
 
     dev = device or jax.devices()[0]
+    donate = pool is not None and jax.default_backend() != "cpu"
     for key in list(batch.keys()):
         v = batch[key]
         if isinstance(v, np.ndarray):
-            if v.dtype == np.int64:
+            if pool is not None:
+                v = pool.stage(key, v)
+            elif v.dtype == np.int64:
                 v = v.astype(np.int32)
-            batch[key] = jax.device_put(jnp.asarray(v), dev)
+            batch[key] = jax.device_put(v, dev, donate=donate)
+            if pool is not None:
+                # Let the slot's next rewrite wait for this transfer.
+                pool.note(key, batch[key])
     return batch
 
 

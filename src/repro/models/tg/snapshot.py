@@ -12,7 +12,7 @@ Every model exposes the same ``lax.scan``-compatible contract through the
 state is a pytree carry (``()`` for the stateless GCN) and
 ``apply(params, src, dst, mask, state) -> (z, state)`` is pure, so a whole
 epoch of snapshots runs as **one** scanned jitted call in
-``train.tg_trainer.SnapshotLinkTrainer`` instead of one dispatch per
+``train.loop.DTDGLinkPipeline`` instead of one dispatch per
 snapshot. Neighbor aggregation inside every model routes through the
 ``kernels/segment_reduce`` op (``nn.graph_conv``). See ``docs/dtdg.md``.
 """

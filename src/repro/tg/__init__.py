@@ -1,0 +1,17 @@
+"""``repro.tg`` — the declarative experiment API (one front door).
+
+Compose typed, serializable specs into a :class:`~repro.tg.Experiment`:
+``DataSpec`` (dataset + splits + the ``TimeDelta`` discretization axis),
+``SamplerSpec`` (recency/uniform × host/device × hops × checkpoint
+policy), ``ModelSpec`` and ``TrainSpec``. ``Experiment.compile()``
+inspects the axis and task to assemble the matching pipeline —
+event-stream CTDG or scan-compiled DTDG, for link and node tasks — and
+``Experiment.run()`` drives it through the shared ``TrainLoop`` engine.
+Every spec round-trips through ``to_dict``/``from_dict``, so experiments
+reproduce from a single JSON blob. See ``docs/experiment.md``.
+"""
+
+from repro.tg.experiment import Experiment
+from repro.tg.specs import DataSpec, ModelSpec, SamplerSpec, TrainSpec
+
+__all__ = ["DataSpec", "Experiment", "ModelSpec", "SamplerSpec", "TrainSpec"]

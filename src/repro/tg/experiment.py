@@ -1,0 +1,202 @@
+"""``tg.Experiment`` — the declarative front door to every TG pipeline.
+
+One object composes the four specs (:class:`~repro.tg.specs.DataSpec`,
+:class:`~repro.tg.specs.SamplerSpec`, :class:`~repro.tg.specs.ModelSpec`,
+:class:`~repro.tg.specs.TrainSpec`) with a task, and ``compile()`` inspects
+the ``TimeDelta`` discretization axis and the task to assemble the right
+pipeline — covering all four quadrants with one entry point:
+
+  =========  =======================  ========================================
+  task       discretization           pipeline
+  =========  =======================  ========================================
+  ``link``   ``None`` (event stream)  ``CTDGLinkPipeline`` (hooks + prefetch
+                                      loader + jitted steps)
+  ``link``   a ``TimeDelta``          ``DTDGLinkPipeline`` (``SnapshotTensor``
+                                      + ``lax.scan``)
+  ``node``   a ``TimeDelta``          ``DTDGNodePipeline`` for snapshot models
+                                      (scan-compiled); ``EventNodePipeline``
+                                      for ``pf``/``tgn`` (event windows)
+  =========  =======================  ========================================
+
+``run()`` drives the compiled pipeline through the shared
+``repro.train.loop.TrainLoop`` engine (epochs, eval cadence, checkpoint
+cadence from ``TrainSpec``) and returns the history plus final metrics.
+Experiments round-trip through ``to_dict``/``from_dict`` (and
+``to_json``/``from_json``) with plain-JSON leaves, so a run is reproducible
+from a single blob. See ``docs/experiment.md``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+from repro.tg.specs import DataSpec, ModelSpec, SamplerSpec, TrainSpec
+
+CTDG_LINK_MODELS = ("tgat", "tgn", "graphmixer", "dygformer", "tpnet")
+DTDG_MODELS = ("gcn", "gclstm", "tgcn")
+EVENT_NODE_MODELS = ("pf", "tgn")
+
+TASKS = ("link", "node")
+
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """A fully-specified, serializable TG experiment.
+
+    ``data``/``model``/``train`` are always meaningful; ``sampler`` only
+    drives event-stream (CTDG link) pipelines — snapshot pipelines consume
+    whole padded snapshots and ignore it. ``task`` selects link vs node
+    property prediction. The object is immutable; derive variants with
+    ``dataclasses.replace``.
+    """
+
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    train: TrainSpec = dataclasses.field(default_factory=TrainSpec)
+    sampler: SamplerSpec = dataclasses.field(default_factory=SamplerSpec)
+    task: str = "link"
+
+    def __post_init__(self):
+        if self.task not in TASKS:
+            raise ValueError(f"unknown task {self.task!r}; have {TASKS}")
+
+    # -- serialization ---------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-JSON dict capturing the whole experiment."""
+        return {
+            "task": self.task,
+            "data": self.data.to_dict(),
+            "model": self.model.to_dict(),
+            "train": self.train.to_dict(),
+            "sampler": self.sampler.to_dict(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "Experiment":
+        """Rebuild an experiment from ``to_dict`` output."""
+        return cls(
+            task=d.get("task", "link"),
+            data=DataSpec.from_dict(d.get("data", {})),
+            model=ModelSpec.from_dict(d.get("model", {})),
+            train=TrainSpec.from_dict(d.get("train", {})),
+            sampler=SamplerSpec.from_dict(d.get("sampler", {})),
+        )
+
+    def to_json(self, **kwargs) -> str:
+        """The experiment as a JSON blob (``json.dumps`` kwargs forwarded)."""
+        return json.dumps(self.to_dict(), **kwargs)
+
+    @classmethod
+    def from_json(cls, blob: str) -> "Experiment":
+        """Rebuild an experiment from ``to_json`` output."""
+        return cls.from_dict(json.loads(blob))
+
+    # -- compilation -----------------------------------------------------
+    def _dataset(self, data=None):
+        """The concrete ``DGData``: the given one, else ``DataSpec``'s."""
+        if data is not None:
+            return data
+        from repro.data import generate
+
+        return generate(self.data.dataset, scale=self.data.scale)
+
+    def compile(self, data=None):
+        """Assemble the pipeline this experiment describes.
+
+        Inspects the ``TimeDelta`` discretization axis and the task (see
+        the module table) and returns a pipeline exposing the shared
+        surface (``train_epoch`` / ``evaluate`` / ``save_checkpoint`` /
+        ``restore_checkpoint``). ``data`` overrides ``DataSpec``'s
+        generated dataset with a pre-built ``DGData`` (splits and the axis
+        still come from the specs).
+        """
+        d, m, t = self.data, self.model, self.train
+        stream = self._dataset(data)
+
+        if self.task == "link":
+            if d.discretization is None:
+                if m.name not in CTDG_LINK_MODELS:
+                    raise ValueError(
+                        f"model {m.name!r} is not an event-stream (CTDG) link "
+                        f"model; have {CTDG_LINK_MODELS} — or set "
+                        f"DataSpec.discretization for the snapshot pipeline"
+                    )
+                from repro.train.loop import CTDGLinkPipeline
+
+                return CTDGLinkPipeline(
+                    m.name, stream,
+                    batch_size=t.batch_size, lr=t.lr,
+                    eval_negatives=t.eval_negatives, seed=t.seed,
+                    model_kwargs=dict(m.kwargs), sampler_spec=self.sampler,
+                    val_ratio=d.val_ratio, test_ratio=d.test_ratio,
+                )
+            if m.name not in DTDG_MODELS:
+                raise ValueError(
+                    f"model {m.name!r} is not a snapshot (DTDG) model; have "
+                    f"{DTDG_MODELS} — or drop DataSpec.discretization for the "
+                    f"event-stream pipeline"
+                )
+            from repro.train.loop import DTDGLinkPipeline
+
+            return DTDGLinkPipeline(
+                m.name, stream,
+                snapshot_unit=d.discretization,
+                edge_capacity=d.capacity,
+                lr=t.lr, num_negatives=t.num_negatives,
+                eval_negatives=t.eval_negatives, seed=t.seed,
+                val_ratio=d.val_ratio, test_ratio=d.test_ratio,
+                compiled=t.compiled, chunk_size=t.chunk_size,
+                **dict(m.kwargs),
+            )
+
+        # task == "node": the TimeDelta axis is the label-window unit.
+        if d.discretization is None:
+            raise ValueError(
+                "task='node' needs DataSpec.discretization — it is the "
+                "prediction-window axis for both pipeline families"
+            )
+        from repro.train.nodeprop import DTDGNodePipeline, EventNodePipeline
+
+        if m.name in DTDG_MODELS:
+            return DTDGNodePipeline(
+                m.name, stream, unit=d.discretization,
+                lr=t.lr, seed=t.seed, capacity=d.capacity,
+                val_ratio=d.val_ratio, test_ratio=d.test_ratio,
+                compiled=t.compiled, **dict(m.kwargs),
+            )
+        if m.name in EVENT_NODE_MODELS:
+            return EventNodePipeline(
+                m.name, stream, unit=d.discretization,
+                lr=t.lr, seed=t.seed,
+                val_ratio=d.val_ratio, test_ratio=d.test_ratio,
+                **dict(m.kwargs),
+            )
+        raise ValueError(
+            f"model {m.name!r} is not a node-task model; have "
+            f"{DTDG_MODELS + EVENT_NODE_MODELS}"
+        )
+
+    # -- execution -------------------------------------------------------
+    def run(self, data=None, splits: Tuple[str, ...] = ("test",),
+            log=None) -> Dict[str, Any]:
+        """Compile, fit, and evaluate in one call.
+
+        Runs ``TrainSpec.epochs`` epochs through the shared ``TrainLoop``
+        engine (eval cadence ``eval_every`` on ``eval_split``, checkpoint
+        cadence ``ckpt_every`` into ``ckpt_dir``), then evaluates each of
+        ``splits``. Returns ``{"pipeline", "history", "metrics"}`` —
+        ``metrics`` maps split name to the task metric (link: MRR, node:
+        NDCG@10).
+        """
+        from repro.train.loop import TrainLoop
+
+        pipeline = self.compile(data)
+        t = self.train
+        history = TrainLoop(pipeline).fit(
+            epochs=t.epochs, eval_every=t.eval_every, eval_split=t.eval_split,
+            ckpt_dir=t.ckpt_dir, ckpt_every=t.ckpt_every, log=log,
+        )
+        metrics = {s: pipeline.evaluate(s)[0] for s in splits}
+        return {"pipeline": pipeline, "history": history, "metrics": metrics}

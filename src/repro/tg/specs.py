@@ -1,0 +1,191 @@
+"""Typed, serializable experiment specs — the declarative half of
+``repro.tg`` (paper §4: "a single library that unifies CTDG and DTDG
+methods with native link-, node-, and graph-level task support").
+
+Each spec is a frozen dataclass answering one question:
+
+  ``DataSpec``    — *what stream*: dataset + chronological splits + the
+                    optional ``TimeDelta`` discretization axis. The axis is
+                    the CTDG/DTDG switch: ``None`` keeps the event stream
+                    (event-iterated pipelines), a granularity tensorizes it
+                    into snapshots (scan-compiled pipelines).
+  ``SamplerSpec`` — *what neighborhoods*: recency/uniform × host/device ×
+                    hops × checkpoint policy. Replaces the kwarg sprawl
+                    that used to ride the trainers and recipe factories
+                    (``device_sampling=``, ``sampler=``, ``expose_buffer=``,
+                    ``checkpoint_adjacency=`` …).
+  ``ModelSpec``   — *what model*: a zoo name plus its config kwargs.
+  ``TrainSpec``   — *how to train*: optimizer, epochs, eval cadence,
+                    checkpoint cadence, scan-vs-loop mode.
+
+Every spec round-trips through ``to_dict``/``from_dict`` with plain-JSON
+leaves, so a whole experiment is reproducible from a single JSON blob
+(``tg.Experiment.to_json``). See ``docs/experiment.md`` for the full
+reference and the migration table from legacy trainer kwargs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional
+
+from repro.core.granularity import TimeDelta
+
+
+def timedelta_to_dict(td: Optional[TimeDelta]) -> Optional[Dict[str, Any]]:
+    """JSON-serializable form of a ``TimeDelta`` (``None`` passes through)."""
+    if td is None:
+        return None
+    return {"unit": td.unit, "value": td.value}
+
+
+def timedelta_from_dict(d) -> Optional[TimeDelta]:
+    """Inverse of ``timedelta_to_dict``; also accepts unit strings like
+    ``"h"`` (the ``TimeDelta.coerce`` shorthand) and ``TimeDelta`` values."""
+    if d is None or isinstance(d, TimeDelta):
+        return d
+    if isinstance(d, str):
+        return TimeDelta.coerce(d)
+    return TimeDelta(d["unit"], int(d.get("value", 1)))
+
+
+class _SpecBase:
+    """Shared ``to_dict``/``from_dict`` plumbing for flat spec dataclasses
+    (fields with plain-JSON values; subclasses override for special
+    fields)."""
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-JSON dict of this spec's fields."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]):
+        """Rebuild a spec from ``to_dict`` output (unknown keys rejected)."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - names
+        if unknown:
+            raise ValueError(f"{cls.__name__}: unknown spec keys {sorted(unknown)}")
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec(_SpecBase):
+    """Dataset + chronological splits + the discretization axis.
+
+    ``dataset``/``scale`` name a ``repro.data.generate`` stream (ignored
+    when a pre-built ``DGData`` is passed to ``Experiment.compile``).
+    ``discretization`` is the CTDG/DTDG switch: ``None`` keeps the native
+    event stream; a ``TimeDelta`` (or unit string like ``"h"``) tensorizes
+    it into fixed-capacity snapshots (``capacity`` overrides the automatic
+    max-row power-of-two sizing). ``val_ratio``/``test_ratio`` are the
+    ``DGData.split`` chronological boundaries shared by every task.
+    """
+
+    dataset: str = "wikipedia"
+    scale: float = 1.0
+    val_ratio: float = 0.15
+    test_ratio: float = 0.15
+    discretization: Optional[TimeDelta] = None
+    capacity: Optional[int] = None
+
+    def __post_init__(self):
+        if self.discretization is not None and not isinstance(
+            self.discretization, TimeDelta
+        ):
+            object.__setattr__(
+                self, "discretization", TimeDelta.coerce(self.discretization)
+            )
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-JSON dict (the ``TimeDelta`` axis as ``{unit, value}``)."""
+        d = dataclasses.asdict(self)
+        d["discretization"] = timedelta_to_dict(self.discretization)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "DataSpec":
+        """Rebuild from ``to_dict`` output (axis dict/str/None accepted)."""
+        d = dict(d)
+        d["discretization"] = timedelta_from_dict(d.get("discretization"))
+        return super().from_dict(d)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec(_SpecBase):
+    """Temporal-neighbor sampling strategy for event-stream pipelines.
+
+    ``kind``: ``"recency"`` (K most recent, circular buffers) or
+    ``"uniform"`` (K uniform draws from the strict past, CSR-by-time).
+    ``device=True`` selects the device-resident twin of either sampler
+    (state on the accelerator, jitted update/sample — same outputs and
+    checkpoint contract). ``num_hops=None`` lets the pipeline derive the
+    hop count from the model depth. ``checkpoint_adjacency=False`` keeps
+    the uniform samplers' O(E) CSR out of checkpoints (counter-only;
+    rebuilt from storage on restore). ``expose_buffer`` forwards to
+    ``DeviceRecencyNeighborHook`` (``None`` = backend auto) and
+    ``prefetch`` is the ``PrefetchLoader`` queue depth used when
+    ``device=True``. DTDG scan pipelines need no sampler — snapshots are
+    consumed whole — so link/node snapshot experiments ignore this spec.
+    """
+
+    kind: str = "recency"
+    k: int = 20
+    num_hops: Optional[int] = None
+    device: bool = False
+    checkpoint_adjacency: bool = True
+    expose_buffer: Optional[bool] = None
+    prefetch: int = 2
+
+    def __post_init__(self):
+        if self.kind not in ("recency", "uniform"):
+            raise ValueError(
+                f"unknown sampler kind {self.kind!r}; use 'recency' or 'uniform'"
+            )
+        if self.num_hops not in (None, 1, 2):
+            raise ValueError("num_hops must be None (auto), 1 or 2")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec(_SpecBase):
+    """A model-zoo name plus its config kwargs.
+
+    CTDG link models: ``tgat``, ``tgn``, ``graphmixer``, ``dygformer``,
+    ``tpnet``. DTDG snapshot models: ``gcn``, ``gclstm``, ``tgcn``. Node
+    task adds the host baselines ``pf`` (persistent forecast) and the
+    windowed ``tgn``. ``kwargs`` feed the model config (e.g.
+    ``{"num_layers": 1}`` for TGAT, ``{"d_embed": 64}`` for snapshot
+    models) and must stay JSON-serializable.
+    """
+
+    name: str = "tgat"
+    kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-JSON dict (kwargs copied, not aliased)."""
+        return {"name": self.name, "kwargs": dict(self.kwargs)}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec(_SpecBase):
+    """Optimizer, epochs, eval cadence, and checkpoint policy.
+
+    ``lr=None`` keeps each pipeline's historical default (1e-4 for CTDG
+    link, 1e-3 for snapshot pipelines). ``eval_every=N`` evaluates
+    ``eval_split`` every N epochs during ``fit`` (0 = only on demand);
+    ``ckpt_every=N`` with ``ckpt_dir`` writes a checkpoint every N epochs.
+    ``compiled``/``chunk_size`` control the DTDG scan (``compiled=False``
+    is the per-snapshot jitted loop, the bit-parity oracle).
+    """
+
+    lr: Optional[float] = None
+    epochs: int = 1
+    batch_size: int = 200
+    num_negatives: int = 1
+    eval_negatives: int = 20
+    seed: int = 0
+    eval_every: int = 0
+    eval_split: str = "val"
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    compiled: bool = True
+    chunk_size: Optional[int] = None

@@ -1,10 +1,26 @@
+from repro.train.loop import (
+    CTDGLinkPipeline,
+    DTDGLinkPipeline,
+    TrainLoop,
+)
 from repro.train.metrics import auc, mrr, ndcg_at_k
+from repro.train.nodeprop import (
+    DTDGNodePipeline,
+    EventNodePipeline,
+    NodePropertyTrainer,
+)
 from repro.train.tg_trainer import LinkPredictionTrainer, SnapshotLinkTrainer
 
 __all__ = [
     "auc",
     "mrr",
     "ndcg_at_k",
+    "CTDGLinkPipeline",
+    "DTDGLinkPipeline",
+    "DTDGNodePipeline",
+    "EventNodePipeline",
+    "NodePropertyTrainer",
+    "TrainLoop",
     "LinkPredictionTrainer",
     "SnapshotLinkTrainer",
 ]

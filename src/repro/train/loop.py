@@ -1,0 +1,841 @@
+"""The shared training engine behind every TG task quadrant.
+
+This module owns the machinery that used to be duplicated (or hand-rolled
+per example) across ``LinkPredictionTrainer`` and ``SnapshotLinkTrainer``:
+
+  * ``CTDGLinkPipeline``  — event-stream link prediction (TGB link recipe,
+    optional device-resident sampling + ``PrefetchLoader``, jitted steps);
+  * ``DTDGLinkPipeline``  — scan-compiled snapshot link prediction
+    (``SnapshotTensor`` + ``lax.scan``; ``compiled=False`` keeps the
+    per-snapshot jitted loop as the bit-parity oracle);
+  * ``TrainLoop``         — the epoch engine: runs ``train_epoch`` /
+    ``evaluate`` / ``save_checkpoint`` on any pipeline with the standard
+    surface, applying eval and checkpoint cadences and recording history;
+  * the checkpoint bundle helpers (``save_bundle`` / ``restore_bundle`` /
+    ``restore_with_saved_hooks``) and ``weighted_mrr`` shared by all
+    pipelines.
+
+``repro.tg.Experiment`` is the declarative front door that assembles these
+pipelines from specs; ``repro.train.tg_trainer`` keeps the legacy trainer
+names as thin deprecated shims over the same classes. The node-property
+pipelines live in ``repro.train.nodeprop`` and run through the same
+``TrainLoop`` surface. See ``docs/experiment.md``.
+
+Pipeline surface (duck-typed, consumed by ``TrainLoop``):
+
+  ``train_epoch() -> (mean_loss, seconds)``
+  ``evaluate(split) -> (metric, seconds)``      # split in {train,val,test}
+  ``save_checkpoint(ckpt_dir, step) -> path``
+  ``restore_checkpoint(ckpt_dir, step=None) -> step``
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import (
+    DGData,
+    DGraph,
+    DGDataLoader,
+    PrefetchLoader,
+    RECIPE_DTDG_SNAPSHOT,
+    RECIPE_TGB_LINK,
+    RecipeRegistry,
+    TimeDelta,
+    TRAIN_KEY,
+    EVAL_KEY,
+    snapshot_tensor,
+)
+from repro.distributed import checkpoint as ckpt
+from repro.models.tg import dygformer, graphmixer, snapshot, tgat, tgn, tpnet
+from repro.models.tg.common import bce_link_loss, link_decoder
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.tg.specs import SamplerSpec
+from repro.train.metrics import mrr
+
+CTDG_STATELESS = {"tgat", "graphmixer", "dygformer"}
+CTDG_STATEFUL = {"tgn", "tpnet"}
+CTDG_LINK_MODELS = CTDG_STATELESS | CTDG_STATEFUL
+
+
+# ----------------------------------------------------------------------
+# Shared checkpoint machinery
+# ----------------------------------------------------------------------
+def restore_with_saved_hooks(ckpt_dir, step, target):
+    """Two-phase checkpoint restore with a checkpoint-shaped hooks subtree.
+
+    The hooks state is checkpoint-dependent (e.g. the uniform samplers'
+    counter-only mode drops the CSR leaves), so a target prototype built
+    from the *current* hook state can demand leaves the checkpoint never
+    saved. Read the flat checkpoint once, reassemble the hooks subtree
+    that was actually written (``<group>/<idx>/<state_key>`` keys with flat
+    array leaves — the shared contract), and assemble the rest structurally
+    from the already-loaded leaves; the samplers' ``load_state_dict``
+    accepts either form.
+    """
+    flat, step, meta = ckpt.restore(ckpt_dir, step, target=None)
+    hooks: Dict[str, Dict] = {}
+    for k, v in flat.items():
+        if k.startswith("hooks/"):
+            group, leaf = k[len("hooks/"):].rsplit("/", 1)
+            hooks.setdefault(group, {})[leaf] = v
+    target = dict(target)
+    target["hooks"] = hooks
+    return ckpt.assemble(flat, target), step, meta
+
+
+def save_bundle(ckpt_dir: str, step: int, tree: Dict[str, Any],
+                model_name: str, **extra_meta) -> str:
+    """Write a pipeline checkpoint bundle (atomic step directory).
+
+    ``tree`` is the composable ``{params, opt_state[, model_state],
+    hooks[, pipeline]}`` contract every pipeline shares; ``model_name``
+    (plus any ``extra_meta``) rides the sidecar metadata so restores can
+    refuse mismatched models. Returns the written path.
+    """
+    return ckpt.save(ckpt_dir, step, tree,
+                     extra_meta={"model_name": model_name, **extra_meta})
+
+
+def restore_bundle(ckpt_dir: str, step: Optional[int], target: Dict[str, Any],
+                   model_name: str):
+    """Restore a bundle written by ``save_bundle`` into ``target``'s
+    structure (hooks subtree checkpoint-shaped; see
+    ``restore_with_saved_hooks``), validating the model name. Returns
+    ``(tree, step)``.
+    """
+    tree, step, meta = restore_with_saved_hooks(ckpt_dir, step, target)
+    if meta.get("model_name") not in (None, model_name):
+        raise ValueError(
+            f"checkpoint is for model {meta['model_name']!r}, "
+            f"pipeline is {model_name!r}"
+        )
+    return tree, step
+
+
+def weighted_mrr(pos_rows, neg_rows, mask_rows) -> float:
+    """Per-row MRR weighted by valid predictions — shared by the scanned
+    and loop DTDG paths so their aggregation is bit-identical."""
+    out, wsum = 0.0, 0.0
+    for pos, neg, m in zip(pos_rows, neg_rows, mask_rows):
+        w = float(np.asarray(m).sum())
+        if w:
+            out += mrr(pos, neg, m) * w
+            wsum += w
+    return float(out / max(wsum, 1.0))
+
+
+# ----------------------------------------------------------------------
+# The epoch engine
+# ----------------------------------------------------------------------
+class TrainLoop:
+    """Multi-epoch driver over any pipeline with the standard surface.
+
+    ``fit`` runs ``epochs`` training epochs, evaluating ``eval_split``
+    every ``eval_every`` epochs (0 = never) and writing a checkpoint to
+    ``ckpt_dir`` every ``ckpt_every`` epochs (0 = never), and returns a
+    history dict::
+
+        {"loss": [...], "train_secs": [...],
+         "eval": [(epoch, metric), ...], "ckpts": [path, ...]}
+
+    The loop is deliberately dumb — all task/pipeline intelligence lives in
+    the pipeline object — which is what lets the CTDG/DTDG × link/node
+    quadrants share one engine.
+    """
+
+    def __init__(self, pipeline):
+        self.pipeline = pipeline
+
+    def fit(self, epochs: int = 1, eval_every: int = 0,
+            eval_split: str = "val", ckpt_dir: Optional[str] = None,
+            ckpt_every: int = 0, log=None) -> Dict[str, Any]:
+        """Run the epoch loop; see the class docstring for the contract."""
+        history: Dict[str, Any] = {"loss": [], "train_secs": [], "eval": [],
+                                   "ckpts": []}
+        for epoch in range(epochs):
+            loss, secs = self.pipeline.train_epoch()
+            history["loss"].append(loss)
+            history["train_secs"].append(secs)
+            if log is not None:
+                log(f"epoch {epoch}: loss={loss:.4f} ({secs:.1f}s)")
+            if eval_every and (epoch + 1) % eval_every == 0:
+                metric, _ = self.pipeline.evaluate(eval_split)
+                history["eval"].append((epoch, metric))
+                if log is not None:
+                    log(f"epoch {epoch}: {eval_split} metric={metric:.4f}")
+            if ckpt_dir and ckpt_every and (epoch + 1) % ckpt_every == 0:
+                history["ckpts"].append(
+                    self.pipeline.save_checkpoint(ckpt_dir, epoch)
+                )
+        return history
+
+
+# ----------------------------------------------------------------------
+# CTDG link prediction: event-stream pipeline
+# ----------------------------------------------------------------------
+class CTDGLinkPipeline:
+    """CTDG link-prediction over the TGB link recipe.
+
+    Event-iterated batches feed jitted train/eval steps for the CTDG model
+    zoo (TGAT, TGN, GraphMixer, DyGFormer, TPNet): random train negatives,
+    one-vs-many eval negatives, recency/uniform temporal neighbors,
+    padding, device transfer.
+
+    The sampling strategy comes from a ``repro.tg.SamplerSpec``:
+    ``device=True`` switches to the device-resident pipeline (accelerator-
+    resident sampler state with jit-compiled update/sample inside the
+    hooks, and the loader wrapped in a ``PrefetchLoader`` that stages the
+    *next* batch while the current jitted step runs). The host-numpy
+    default doubles as the parity oracle in tests.
+    """
+
+    def __init__(
+        self,
+        model_name: str,
+        data: DGData,
+        batch_size: int = 200,
+        k: int = 20,
+        lr: Optional[float] = None,
+        eval_negatives: int = 20,
+        seed: int = 0,
+        model_kwargs: Optional[Dict[str, Any]] = None,
+        device_sampling: bool = False,
+        prefetch: int = 2,
+        sampler: str = "recency",
+        uniform_checkpoint_adjacency: bool = True,
+        sampler_spec: Optional[SamplerSpec] = None,
+        val_ratio: float = 0.15,
+        test_ratio: float = 0.15,
+    ):
+        if model_name not in CTDG_LINK_MODELS:
+            raise ValueError(f"unknown CTDG model {model_name!r}")
+        spec = sampler_spec or SamplerSpec(
+            kind=sampler, k=k, device=device_sampling, prefetch=prefetch,
+            checkpoint_adjacency=uniform_checkpoint_adjacency,
+        )
+        self.model_name = model_name
+        self.data = data
+        self.batch_size = batch_size
+        self.sampler_spec = spec
+        self.device_sampling = spec.device
+        self.prefetch = spec.prefetch
+        self.train_data, self.val_data, self.test_data = data.split(
+            val_ratio, test_ratio
+        )
+        kwargs = dict(model_kwargs or {})
+        k = spec.k
+
+        d_edge = data.edge_feat_dim
+        n = data.num_nodes
+        key = jax.random.PRNGKey(seed)
+
+        num_hops = 1
+        if model_name == "tgat":
+            self.cfg = tgat.TGATConfig(num_nodes=n, d_edge=d_edge, k=k, **kwargs)
+            num_hops = min(2, self.cfg.num_layers)
+            self.params = tgat.init(key, self.cfg)
+            self._scores = partial(tgat.link_scores, cfg=self.cfg)
+        elif model_name == "graphmixer":
+            self.cfg = graphmixer.GraphMixerConfig(num_nodes=n, d_edge=d_edge, k=k, **kwargs)
+            self.params = graphmixer.init(key, self.cfg)
+            self._scores = partial(graphmixer.link_scores, cfg=self.cfg)
+        elif model_name == "dygformer":
+            self.cfg = dygformer.DyGFormerConfig(num_nodes=n, d_edge=d_edge, k=k, **kwargs)
+            self.params = dygformer.init(key, self.cfg)
+            self._scores = partial(dygformer.link_scores, cfg=self.cfg)
+        elif model_name == "tgn":
+            self.cfg = tgn.TGNConfig(num_nodes=n, d_edge=d_edge, k=k, **kwargs)
+            self.params = tgn.init(key, self.cfg)
+            self.model_state = tgn.init_state(self.cfg)
+        elif model_name == "tpnet":
+            self.cfg = tpnet.TPNetConfig(num_nodes=n, **kwargs)
+            self.params = tpnet.init(key, self.cfg)
+            self.model_state = tpnet.init_state(self.params, self.cfg)
+        if spec.num_hops is not None:
+            num_hops = spec.num_hops
+
+        needs_nbrs = model_name != "tpnet"
+        # Only TGAT/TGN have a fused attention path consuming the exposed
+        # packed buffer; other models skip the snapshot so the device
+        # sampler's buffer update can donate in place.
+        expose = spec.expose_buffer
+        if expose is None and model_name not in ("tgat", "tgn"):
+            expose = False
+        self.manager = RecipeRegistry.build(
+            RECIPE_TGB_LINK,
+            num_nodes=n,
+            spec=SamplerSpec(
+                kind=spec.kind, k=self.cfg.k if needs_nbrs else 1,
+                num_hops=num_hops, device=spec.device,
+                checkpoint_adjacency=spec.checkpoint_adjacency,
+                expose_buffer=expose, prefetch=spec.prefetch,
+            ),
+            batch_size=batch_size,
+            eval_negatives=eval_negatives,
+            # Full-stream features: sampled nbr_eids are global event
+            # indices (the loader offsets sliced splits by their
+            # ``eid_offset``), so the lookup table must cover val/test
+            # warm-up too (the train rows are the identical prefix).
+            edge_feats=data.edge_feats if d_edge else None,
+            edge_feat_dim=d_edge,
+            seed=seed,
+        )
+        if spec.kind == "uniform":
+            # The uniform samplers draw from a static CSR-by-time adjacency;
+            # build it once over the full stream — the strict t < query_t
+            # filter at sample time keeps it leak-free.
+            from repro.core.tg_hooks import (
+                DeviceUniformNeighborHook,
+                UniformNeighborHook,
+            )
+
+            for hook in self.manager.hooks():
+                if isinstance(hook, (UniformNeighborHook,
+                                     DeviceUniformNeighborHook)):
+                    hook.build(data.src, data.dst, data.edge_t,
+                               np.arange(len(data.src), dtype=np.int64))
+
+        self.opt_cfg = AdamWConfig(lr=1e-4 if lr is None else lr)
+        self.opt_state = adamw_init(self.params)
+        self._build_steps()
+
+    # ------------------------------------------------------------------
+    def _build_steps(self):
+        name, B = self.model_name, self.batch_size
+
+        if name in CTDG_STATELESS:
+
+            def loss_fn(params, batch):
+                pos, neg = self._scores(params, batch=batch, batch_size=B)
+                return bce_link_loss(pos, neg, batch["batch_mask"])
+
+            @jax.jit
+            def train_step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+                params, opt_state = adamw_update(params, grads, opt_state, self.opt_cfg)
+                return params, opt_state, loss
+
+            @jax.jit
+            def eval_step(params, batch):
+                return self._scores(params, batch=batch, batch_size=B)
+
+            self._train_step, self._eval_step = train_step, eval_step
+
+        else:
+            score_fn = tgn.link_scores if name == "tgn" else tpnet.link_scores
+            cfg = self.cfg
+
+            def loss_fn(params, state, batch):
+                (pos, neg), new_state = score_fn(params, cfg, state, batch, B)
+                return bce_link_loss(pos, neg, batch["batch_mask"]), new_state
+
+            @jax.jit
+            def train_step(params, opt_state, state, batch):
+                (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, state, batch
+                )
+                params, opt_state = adamw_update(params, grads, opt_state, self.opt_cfg)
+                return params, opt_state, new_state, loss
+
+            @jax.jit
+            def eval_step(params, state, batch):
+                return score_fn(params, cfg, state, batch, B)
+
+            self._train_step, self._eval_step = train_step, eval_step
+
+    # ------------------------------------------------------------------
+    def _loader(self, data: DGData):
+        loader = DGDataLoader(DGraph(data), self.manager, batch_size=self.batch_size)
+        if self.device_sampling:
+            # Overlap hook pipeline + host->device staging of batch i+1 with
+            # the jitted step on batch i (double-buffered by default).
+            return PrefetchLoader(loader, prefetch=self.prefetch)
+        return loader
+
+    def _batch_tensors(self, batch) -> Dict[str, Any]:
+        return {k: batch[k] for k in batch.keys()}
+
+    def reset_epoch_state(self):
+        """Clear hook/sampler state (+ recurrent model state) for an epoch."""
+        self.manager.reset_state()
+        if self.model_name == "tgn":
+            self.model_state = tgn.init_state(self.cfg)
+        elif self.model_name == "tpnet":
+            self.model_state = tpnet.init_state(self.params, self.cfg)
+
+    # -- checkpointing ---------------------------------------------------
+    # The hook/sampler buffers (host numpy or device JAX pytree — both
+    # expose the same state_dict contract) ride along with params/optimizer
+    # state, so a restored run resumes mid-stream with warm neighbor state.
+    def save_checkpoint(self, ckpt_dir: str, step: int) -> str:
+        """Write a checkpoint (atomic step directory). Returns its path."""
+        tree = {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "hooks": self.manager.state_dict(),
+        }
+        if self.model_name in CTDG_STATEFUL:
+            tree["model_state"] = self.model_state
+        return save_bundle(ckpt_dir, step, tree, self.model_name)
+
+    def restore_checkpoint(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        """Restore params/opt/hook (+ model) state; returns the step."""
+        target = {
+            "params": self.params,
+            "opt_state": self.opt_state,
+        }
+        if self.model_name in CTDG_STATEFUL:
+            target["model_state"] = self.model_state
+        tree, step = restore_bundle(ckpt_dir, step, target, self.model_name)
+        self.params = tree["params"]
+        self.opt_state = tree["opt_state"]
+        self.manager.load_state_dict(tree["hooks"])
+        if self.model_name in CTDG_STATEFUL:
+            self.model_state = tree["model_state"]
+        return step
+
+    def train_epoch(self) -> Tuple[float, float]:
+        """One epoch over the train split. Returns (mean loss, seconds)."""
+        self.reset_epoch_state()
+        t0 = time.perf_counter()
+        losses = []
+        with self.manager.activate(TRAIN_KEY):
+            for batch in self._loader(self.train_data):
+                bt = self._batch_tensors(batch)
+                if self.model_name in CTDG_STATELESS:
+                    self.params, self.opt_state, loss = self._train_step(
+                        self.params, self.opt_state, bt
+                    )
+                else:
+                    self.params, self.opt_state, self.model_state, loss = self._train_step(
+                        self.params, self.opt_state, self.model_state, bt
+                    )
+                losses.append(loss)
+        losses = [float(l) for l in losses]
+        return float(np.mean(losses)), time.perf_counter() - t0
+
+    def evaluate(self, split: str = "val") -> Tuple[float, float]:
+        """One-vs-many MRR on val/test (warm state from train[, val])."""
+        self.reset_epoch_state()
+        # Warm the samplers/state through earlier splits without predicting.
+        with self.manager.activate(TRAIN_KEY):
+            warm = [self.train_data] + ([self.val_data] if split == "test" else [])
+            for d in warm:
+                for batch in self._loader(d):
+                    bt = self._batch_tensors(batch)
+                    if self.model_name in CTDG_STATEFUL:
+                        _, self.model_state = self._eval_step(
+                            self.params, self.model_state, bt
+                        )
+        data = self.val_data if split == "val" else self.test_data
+        t0 = time.perf_counter()
+        rrs, masks = [], []
+        with self.manager.activate(EVAL_KEY):
+            for batch in self._loader(data):
+                bt = self._batch_tensors(batch)
+                if self.model_name in CTDG_STATELESS:
+                    pos, neg = self._eval_step(self.params, bt)
+                else:
+                    (pos, neg), self.model_state = self._eval_step(
+                        self.params, self.model_state, bt
+                    )
+                rrs.append(mrr(pos, neg, bt["batch_mask"]) * float(bt["batch_mask"].sum()))
+                masks.append(float(bt["batch_mask"].sum()))
+        return float(np.sum(rrs) / max(np.sum(masks), 1.0)), time.perf_counter() - t0
+
+
+# ----------------------------------------------------------------------
+# Shared snapshot-pair plumbing (DTDG link + node pipelines)
+# ----------------------------------------------------------------------
+class SnapshotPairPipeline:
+    """Shared base of the scan-compiled snapshot pipelines.
+
+    Owns the plumbing every snapshot-pair task repeats: tensorizing the
+    stream into a ``SnapshotTensor``, mapping chronological ``DGData.split``
+    boundaries onto snapshot rows (a prediction pair ``p -> p+1`` belongs
+    to the split containing its *predicted* snapshot ``p+1``), the
+    ``_split_pairs`` ranges, and the FIFO-bounded scan-input cache.
+    Subclasses (``DTDGLinkPipeline``, ``train.nodeprop.DTDGNodePipeline``)
+    add their task's extra scan inputs and bodies on top.
+    """
+
+    # Scan inputs are pure functions of (snapshot tensor, task inputs);
+    # cache the few ranges an epoch reuses, FIFO-evicting beyond this bound
+    # so long-lived pipelines don't accumulate per-chunk device copies.
+    _XS_CACHE_MAX = 8
+
+    def _init_snapshots(self, data: DGData, unit, capacity, device,
+                        val_ratio: float, test_ratio: float) -> None:
+        """Tensorize ``data`` once and map split times to snapshot rows."""
+        self.snapshots = snapshot_tensor(data, unit, capacity=capacity,
+                                         device=device)
+        self.capacity = self.snapshots.capacity
+        T = self.snapshots.num_snapshots
+        train_d, val_d, test_d = data.split(val_ratio, test_ratio)
+        test_row = (
+            self.snapshots.row_of_time(int(test_d.edge_t[0]))
+            if test_d.num_edge_events else T
+        )
+        # An empty val split collapses onto the test boundary (val pairs
+        # empty, test pairs intact) rather than swallowing the test split.
+        val_row = (
+            self.snapshots.row_of_time(int(val_d.edge_t[0]))
+            if val_d.num_edge_events else test_row
+        )
+        self.set_split_rows(val_row, test_row)
+        self._xs_cache: Dict[Tuple, Dict[str, Any]] = {}
+
+    def set_split_rows(self, val_row: int, test_row: int) -> None:
+        """Install (clamped) snapshot-row split boundaries — the first val
+        row and the first test row. ``val_row == test_row`` means no val
+        pairs (e.g. the legacy ``train_frac`` mapping)."""
+        T = self.snapshots.num_snapshots
+        self._val_row = min(max(val_row, 1), T)
+        self._test_row = min(max(test_row, self._val_row), T)
+
+    def _split_pairs(self, split: str) -> Tuple[int, int]:
+        """Prediction-pair range ``[lo, hi)`` for a split."""
+        T = self.snapshots.num_snapshots
+        if split == "train":
+            return 0, max(self._val_row - 1, 0)
+        if split == "val":
+            return max(self._val_row - 1, 0), max(self._test_row - 1, 0)
+        if split == "test":
+            return max(self._test_row - 1, 0), max(T - 1, 0)
+        raise ValueError(f"unknown split {split!r}")
+
+    def _pair_slices(self, lo: int, hi: int) -> Dict[str, Any]:
+        """The stacked current/predicted snapshot arrays for pairs
+        ``[lo, hi)`` (pair p = snapshot p -> p+1) — the scan inputs every
+        snapshot-pair task shares."""
+        st = self.snapshots
+        return {
+            "src": st.src[lo:hi], "dst": st.dst[lo:hi],
+            "mask": st.mask[lo:hi],
+            "nsrc": st.src[lo + 1:hi + 1], "ndst": st.dst[lo + 1:hi + 1],
+            "nmask": st.mask[lo + 1:hi + 1],
+        }
+
+    def _xs_cached(self, key: Tuple, build) -> Dict[str, Any]:
+        """FIFO-bounded memoization of a scan-input dict keyed by ``key``."""
+        if key not in self._xs_cache:
+            if len(self._xs_cache) >= self._XS_CACHE_MAX:
+                self._xs_cache.pop(next(iter(self._xs_cache)))
+            self._xs_cache[key] = build()
+        return self._xs_cache[key]
+
+
+# ----------------------------------------------------------------------
+# DTDG link prediction: scan-compiled snapshot pipeline
+# ----------------------------------------------------------------------
+class DTDGLinkPipeline(SnapshotPairPipeline):
+    """DTDG link prediction over the scan-compiled snapshot pipeline.
+
+    Snapshot t's embeddings predict the edges of snapshot t+1. The stream is
+    tensorized once into a device-resident ``SnapshotTensor``; with
+    ``compiled=True`` (default) each split's epoch is one scanned jitted
+    call (optionally chunked via ``chunk_size``), with ``compiled=False``
+    the same body runs as a per-snapshot jitted loop through the
+    ``RECIPE_DTDG_SNAPSHOT`` hook pipeline — the scan-vs-loop parity oracle.
+
+    Splits are chronological ``DGData.split`` boundaries mapped to snapshot
+    rows; a prediction pair belongs to the split that contains its
+    *predicted* snapshot, and the recurrent state is carried across split
+    boundaries by advance-only scans. Checkpoints bundle
+    ``{params, opt_state[, model_state], hooks, pipeline}`` where
+    ``pipeline`` holds the mid-epoch snapshot-pair cursor. See
+    ``docs/dtdg.md`` for the full pipeline.
+    """
+
+    def __init__(
+        self,
+        model_name: str,
+        data: DGData,
+        snapshot_unit: TimeDelta | str = "h",
+        d_embed: int = 128,
+        lr: Optional[float] = None,
+        num_negatives: int = 1,
+        eval_negatives: int = 20,
+        edge_capacity: Optional[int] = None,
+        seed: int = 0,
+        val_ratio: float = 0.15,
+        test_ratio: float = 0.15,
+        compiled: bool = True,
+        chunk_size: Optional[int] = None,
+        device=None,
+    ):
+        if model_name not in snapshot.SNAPSHOT_MODELS:
+            raise ValueError(f"unknown DTDG model {model_name!r}")
+        self.model_name = model_name
+        self.data = data
+        self.unit = TimeDelta.coerce(snapshot_unit)
+        self.num_negatives = num_negatives
+        self.eval_negatives = eval_negatives
+        self._seed = seed
+        self.compiled = compiled
+        self.chunk_size = chunk_size
+
+        # Tensorize once (jitted discretize + scatter; core/loader.py) and
+        # map the chronological split boundaries to snapshot rows.
+        self._init_snapshots(data, self.unit, edge_capacity, device,
+                             val_ratio, test_ratio)
+
+        self.cfg = snapshot.SnapshotConfig(num_nodes=data.num_nodes, d_embed=d_embed)
+        self.params = snapshot.init_params(
+            model_name, jax.random.PRNGKey(seed), self.cfg
+        )
+        self._apply = snapshot.make_apply(model_name, self.cfg)
+        self._has_state = model_name != "gcn"
+        self.model_state = snapshot.init_state(model_name, self.cfg)
+
+        self.manager = RecipeRegistry.build(
+            RECIPE_DTDG_SNAPSHOT,
+            num_nodes=data.num_nodes,
+            capacity=self.capacity,
+            num_negatives=num_negatives,
+            eval_negatives=eval_negatives,
+            seed=seed,
+            device=device,
+        )
+
+        self.opt_cfg = AdamWConfig(lr=1e-3 if lr is None else lr)
+        self.opt_state = adamw_init(self.params)
+        self._cursor = 0  # next train pair (mid-epoch checkpoint resume)
+        self._build_steps()
+
+    # ------------------------------------------------------------------
+    def _build_steps(self):
+        apply = self._apply
+        opt_cfg = self.opt_cfg
+
+        def loss_fn(params, state, x):
+            z, new_state = apply(params, x["src"], x["dst"], x["mask"], state)
+            h_src = z[x["nsrc"]]
+            pos = link_decoder(params["decoder"], h_src, z[x["ndst"]])
+            neg = link_decoder(params["decoder"], h_src, z[x["neg"]])
+            return bce_link_loss(pos, neg, x["nmask"]), new_state
+
+        def train_body(carry, x):
+            params, opt_state, state = carry
+            (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, state, x
+            )
+            params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+            return (params, opt_state, new_state), loss
+
+        def eval_body(params, state, x):
+            z, new_state = apply(params, x["src"], x["dst"], x["mask"], state)
+            h_src = z[x["nsrc"]]
+            pos = link_decoder(params["decoder"], h_src, z[x["ndst"]])
+            neg = link_decoder(params["decoder"], h_src, z[x["neg"]])
+            return new_state, (pos, neg)
+
+        def advance_body(params, state, x):
+            _, new_state = apply(params, x["src"], x["dst"], x["mask"], state)
+            return new_state
+
+        # One jitted scan per split chunk (the compiled pipeline) and the
+        # same bodies as standalone jitted per-snapshot steps (loop mode).
+        self._train_scan = jax.jit(
+            lambda p, o, s, xs: jax.lax.scan(train_body, (p, o, s), xs)
+        )
+        self._train_step = jax.jit(lambda p, o, s, x: train_body((p, o, s), x))
+        self._eval_scan = jax.jit(
+            lambda p, s, xs: jax.lax.scan(
+                lambda st, x: eval_body(p, st, x), s, xs
+            )
+        )
+        self._eval_step = jax.jit(eval_body)
+        self._advance_scan = jax.jit(
+            lambda p, s, xs: jax.lax.scan(
+                lambda st, x: (advance_body(p, st, x), None), s, xs
+            )[0]
+        )
+        self._advance_step = jax.jit(advance_body)
+
+    # ------------------------------------------------------------------
+    def _pair_xs(self, lo: int, hi: int, m: int) -> Dict[str, Any]:
+        """Stacked scan inputs for prediction pairs ``[lo, hi)`` (pair p =
+        snapshot p -> p+1) with ``m`` negatives per predicted edge."""
+        def build():
+            rows = np.arange(lo + 1, hi + 1)
+            return {**self._pair_slices(lo, hi),
+                    "neg": self.snapshots.negatives(self._seed, m, rows)}
+
+        return self._xs_cached((lo, hi, m), build)
+
+    def _pair_x(self, p: int, neg) -> Dict[str, Any]:
+        """One pair's arrays (loop mode), with hook-produced negatives."""
+        st = self.snapshots
+        return {
+            "src": st.src[p], "dst": st.dst[p], "mask": st.mask[p],
+            "nsrc": st.src[p + 1], "ndst": st.dst[p + 1],
+            "nmask": st.mask[p + 1], "neg": neg,
+        }
+
+    def _hook_negatives(self, p: int):
+        """Run the predicted snapshot through the active hook pipeline and
+        return its ``neg`` draws (identical to the scan path's bulk draw)."""
+        from repro.core.batch import Batch
+
+        st = self.snapshots
+        batch = Batch(
+            {"src": st.src[p + 1], "dst": st.dst[p + 1],
+             "time": np.full(st.capacity, (st.t0 + p + 1) * st.ticks,
+                             dtype=np.int64),
+             "snap_mask": st.mask[p + 1]},
+            meta={"snapshot_row": p + 1},
+        )
+        return self.manager.execute(batch)["neg"]
+
+    def _chunks(self, lo: int, hi: int):
+        step = self.chunk_size or max(hi - lo, 1)
+        for start in range(lo, hi, step):
+            yield start, min(start + step, hi)
+
+    def reset_epoch_state(self):
+        """Reset hook cursors and the recurrent state (start of an epoch)."""
+        self.manager.reset_state()
+        self.model_state = snapshot.init_state(self.model_name, self.cfg)
+
+    # ------------------------------------------------------------------
+    def train_epoch(self) -> Tuple[float, float]:
+        """One epoch over the train split. Returns (mean loss, seconds).
+
+        ``compiled=True``: one scanned jitted call per chunk (default: the
+        whole split in one call). A restored mid-epoch snapshot cursor
+        resumes from where the checkpoint left off.
+        """
+        lo, hi = self._split_pairs("train")
+        if self._cursor == 0:
+            self.reset_epoch_state()
+        start = max(self._cursor, lo)
+        t0 = time.perf_counter()
+        losses = []
+        if self.compiled:
+            for clo, chi in self._chunks(start, hi):
+                xs = self._pair_xs(clo, chi, self.num_negatives)
+                (self.params, self.opt_state, self.model_state), ls = \
+                    self._train_scan(self.params, self.opt_state,
+                                     self.model_state, xs)
+                losses.extend(float(l) for l in np.asarray(ls))
+                self._cursor = chi
+        else:
+            with self.manager.activate(TRAIN_KEY):
+                for p in range(start, hi):
+                    x = self._pair_x(p, self._hook_negatives(p))
+                    (self.params, self.opt_state, self.model_state), loss = \
+                        self._train_step(self.params, self.opt_state,
+                                         self.model_state, x)
+                    losses.append(float(loss))
+                    self._cursor = p + 1
+        self._cursor = 0
+        secs = time.perf_counter() - t0
+        return float(np.mean(losses)) if losses else 0.0, secs
+
+    def evaluate(self, split: str = "val") -> Tuple[float, float]:
+        """One-vs-many MRR on val/test. Returns (MRR, seconds).
+
+        The recurrent state is warmed through all earlier snapshots with an
+        advance-only scan (carried across the split boundary), then the
+        split's pairs are scored in one scanned call per chunk.
+        """
+        lo, hi = self._split_pairs(split)
+        self.manager.reset_state()
+        t0 = time.perf_counter()
+        # Local state: evaluation re-warms from scratch and must not clobber
+        # a mid-epoch training state (checkpoint-resume safety).
+        state = snapshot.init_state(self.model_name, self.cfg)
+        if self._has_state and lo > 0:
+            if self.compiled:
+                st = self.snapshots
+                warm = {"src": st.src[:lo], "dst": st.dst[:lo],
+                        "mask": st.mask[:lo]}
+                state = self._advance_scan(self.params, state, warm)
+            else:
+                st = self.snapshots
+                for p in range(lo):
+                    state = self._advance_step(
+                        self.params, state,
+                        {"src": st.src[p], "dst": st.dst[p],
+                         "mask": st.mask[p]},
+                    )
+        pos_rows, neg_rows, mask_rows = [], [], []
+        if self.compiled:
+            for clo, chi in self._chunks(lo, hi):
+                xs = self._pair_xs(clo, chi, self.eval_negatives)
+                state, (pos, neg) = self._eval_scan(self.params, state, xs)
+                pos_rows.extend(np.asarray(pos))
+                neg_rows.extend(np.asarray(neg))
+                mask_rows.extend(np.asarray(xs["nmask"]))
+        else:
+            with self.manager.activate(EVAL_KEY):
+                for p in range(lo, hi):
+                    x = self._pair_x(p, self._hook_negatives(p))
+                    state, (pos, neg) = self._eval_step(self.params, state, x)
+                    pos_rows.append(np.asarray(pos))
+                    neg_rows.append(np.asarray(neg))
+                    mask_rows.append(np.asarray(x["nmask"]))
+        out = weighted_mrr(pos_rows, neg_rows, mask_rows)
+        return out, time.perf_counter() - t0
+
+    # -- checkpointing ---------------------------------------------------
+    # Same composable contract as CTDGLinkPipeline: params + optimizer
+    # state + recurrent model state + hook cursors + the snapshot-pair
+    # cursor, so a restored run resumes mid-epoch at the right snapshot
+    # with the right negative draws.
+    def _ckpt_tree(self) -> Dict[str, Any]:
+        tree = {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "hooks": self.manager.state_dict(),
+            "pipeline": {"snapshot_cursor": np.int64(self._cursor)},
+        }
+        if self._has_state:
+            tree["model_state"] = self.model_state
+        return tree
+
+    def save_checkpoint(self, ckpt_dir: str, step: int) -> str:
+        """Write a checkpoint (atomic step directory). Returns its path."""
+        return save_bundle(ckpt_dir, step, self._ckpt_tree(), self.model_name,
+                           trainer="snapshot")
+
+    def restore_checkpoint(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        """Restore params/opt/model state, hook cursors and the snapshot
+        cursor; returns the checkpoint step."""
+        target = {k: v for k, v in self._ckpt_tree().items() if k != "hooks"}
+        tree, step = restore_bundle(ckpt_dir, step, target, self.model_name)
+        self.params = tree["params"]
+        self.opt_state = tree["opt_state"]
+        self.manager.load_state_dict(tree["hooks"])
+        self._cursor = int(np.asarray(tree["pipeline"]["snapshot_cursor"]))
+        if self._has_state:
+            self.model_state = tree["model_state"]
+        return step
+
+    def run_epoch(self, train_frac: Optional[float] = None,
+                  train: bool = True) -> Tuple[float, float]:
+        """Legacy shim: ``train=True`` -> ``train_epoch()``; otherwise
+        ``evaluate('val')``. ``train_frac`` is ignored — splits now come
+        from ``DGData.split`` (chronological val/test ratios) — so an
+        explicitly passed value warns loudly instead of silently changing
+        which snapshots are scored."""
+        if train_frac is not None:
+            import warnings
+
+            warnings.warn(
+                "run_epoch(train_frac=...) is ignored; splits come from "
+                "DGData.split — pass val_ratio/test_ratio to the pipeline "
+                "and use train_epoch()/evaluate() instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        if train:
+            return self.train_epoch()
+        return self.evaluate("val")

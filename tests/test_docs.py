@@ -16,6 +16,7 @@ def test_readme_and_docs_exist():
     assert (ROOT / "docs" / "architecture.md").exists()
     assert (ROOT / "docs" / "kernels.md").exists()
     assert (ROOT / "docs" / "dtdg.md").exists()
+    assert (ROOT / "docs" / "experiment.md").exists()
 
 
 def test_relative_doc_links_resolve():
@@ -50,6 +51,10 @@ DOCUMENTED_MODULES = [
     "repro.models.tg.common",
     "repro.models.tg.snapshot",
     "repro.train.tg_trainer",
+    "repro.train.loop",
+    "repro.train.nodeprop",
+    "repro.tg.specs",
+    "repro.tg.experiment",
 ]
 
 

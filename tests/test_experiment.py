@@ -1,0 +1,310 @@
+"""The declarative ``tg.Experiment`` front door: spec round-trips, pipeline
+dispatch across the four quadrants, bit-parity of new-API runs against the
+legacy trainers, checkpoint interchange old<->new, the node task's
+scan-vs-loop parity, the TrainLoop engine, and recipe legacy-kwarg
+deprecation mapping."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import RECIPE_TGB_LINK, RecipeRegistry, TimeDelta
+from repro.tg import DataSpec, Experiment, ModelSpec, SamplerSpec, TrainSpec
+from repro.train import (
+    CTDGLinkPipeline,
+    DTDGLinkPipeline,
+    DTDGNodePipeline,
+    EventNodePipeline,
+    LinkPredictionTrainer,
+    NodePropertyTrainer,
+    SnapshotLinkTrainer,
+    TrainLoop,
+)
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+CTDG_EXP = Experiment(
+    data=DataSpec("tiny", scale=1.0),
+    model=ModelSpec("tgat", {"num_layers": 1}),
+    sampler=SamplerSpec(k=4),
+    train=TrainSpec(batch_size=48, eval_negatives=5, seed=0),
+)
+DTDG_EXP = Experiment(
+    data=DataSpec("tiny", discretization="h"),
+    model=ModelSpec("gcn", {"d_embed": 16}),
+    train=TrainSpec(seed=3),
+)
+
+
+# ----------------------------------------------------------------------
+# Spec round-trips
+# ----------------------------------------------------------------------
+def test_spec_roundtrip_dict_and_json():
+    """Experiment.from_dict(exp.to_dict()) and the JSON path reproduce the
+    exact spec objects, including the TimeDelta axis."""
+    for exp in (
+        CTDG_EXP,
+        DTDG_EXP,
+        Experiment(task="node",
+                   data=DataSpec("genre", scale=0.5, discretization=TimeDelta("m", 30)),
+                   model=ModelSpec("tgcn", {"d_embed": 8}),
+                   sampler=SamplerSpec(kind="uniform", device=True,
+                                       checkpoint_adjacency=False, num_hops=2),
+                   train=TrainSpec(lr=5e-4, epochs=3, eval_every=2,
+                                   chunk_size=7, compiled=False)),
+    ):
+        assert Experiment.from_dict(exp.to_dict()) == exp
+        assert Experiment.from_json(exp.to_json()) == exp
+    # the blob is plain JSON (no repr round-trips)
+    import json
+
+    json.loads(DTDG_EXP.to_json())
+
+
+def test_spec_unit_string_coercion_and_validation():
+    """DataSpec coerces unit strings; bad spec fields fail fast."""
+    assert DataSpec(discretization="h").discretization == TimeDelta("h")
+    with pytest.raises(ValueError):
+        SamplerSpec(kind="nope")
+    with pytest.raises(ValueError):
+        SamplerSpec(num_hops=3)
+    with pytest.raises(ValueError):
+        Experiment(task="graph")
+    with pytest.raises(ValueError):
+        DataSpec.from_dict({"datasett": "x"})
+
+
+def test_compile_dispatch_and_validation(small_stream):
+    """The TimeDelta axis + task select the right pipeline; mismatched
+    model/axis combinations fail with a precise error."""
+    assert isinstance(CTDG_EXP.compile(small_stream), CTDGLinkPipeline)
+    assert isinstance(DTDG_EXP.compile(small_stream), DTDGLinkPipeline)
+    node = dataclasses.replace(DTDG_EXP, task="node")
+    assert isinstance(node.compile(small_stream), DTDGNodePipeline)
+    pf = Experiment(task="node", data=DataSpec(discretization="h"),
+                    model=ModelSpec("pf"))
+    assert isinstance(pf.compile(small_stream), EventNodePipeline)
+    with pytest.raises(ValueError):  # snapshot model without an axis
+        Experiment(model=ModelSpec("gcn")).compile(small_stream)
+    with pytest.raises(ValueError):  # CTDG model with an axis
+        Experiment(data=DataSpec(discretization="h"),
+                   model=ModelSpec("tgat")).compile(small_stream)
+    with pytest.raises(ValueError):  # node task needs the axis
+        Experiment(task="node", model=ModelSpec("gcn")).compile(small_stream)
+
+
+# ----------------------------------------------------------------------
+# Legacy parity: new API == legacy trainers, bit for bit
+# ----------------------------------------------------------------------
+def test_ctdg_experiment_matches_legacy_trainer(small_stream):
+    """An Experiment-compiled CTDG pipeline reproduces the legacy
+    LinkPredictionTrainer run exactly: losses, params, val MRR."""
+    new = CTDG_EXP.compile(small_stream)
+    legacy = LinkPredictionTrainer("tgat", small_stream, batch_size=48, k=4,
+                                   eval_negatives=5, seed=0,
+                                   model_kwargs={"num_layers": 1})
+    l_new, _ = new.train_epoch()
+    l_old, _ = legacy.train_epoch()
+    assert l_new == l_old
+    assert _tree_equal(new.params, legacy.params)
+    assert _tree_equal(new.opt_state, legacy.opt_state)
+    assert new.evaluate("val")[0] == legacy.evaluate("val")[0]
+
+
+def test_dtdg_experiment_matches_legacy_trainer(small_stream):
+    """Experiment-compiled DTDG pipeline == legacy SnapshotLinkTrainer."""
+    new = DTDG_EXP.compile(small_stream)
+    legacy = SnapshotLinkTrainer("gcn", small_stream, snapshot_unit="h",
+                                 d_embed=16, seed=3)
+    l_new, _ = new.train_epoch()
+    l_old, _ = legacy.train_epoch()
+    assert l_new == l_old
+    assert _tree_equal(new.params, legacy.params)
+    assert new.evaluate("val")[0] == legacy.evaluate("val")[0]
+    assert new.evaluate("test")[0] == legacy.evaluate("test")[0]
+
+
+def test_experiment_roundtrip_reproduces_pipeline(small_stream):
+    """A round-tripped Experiment compiles to an identical pipeline: same
+    trained params after an epoch."""
+    a = CTDG_EXP.compile(small_stream)
+    b = Experiment.from_json(CTDG_EXP.to_json()).compile(small_stream)
+    a.train_epoch()
+    b.train_epoch()
+    assert _tree_equal(a.params, b.params)
+    assert _tree_equal(a.opt_state, b.opt_state)
+
+
+def test_checkpoint_interchange_legacy_and_new(small_stream, tmp_path):
+    """Checkpoints interchange old<->new: a legacy trainer's checkpoint
+    restores into an Experiment pipeline (and back) and continues to the
+    same result as an uninterrupted run."""
+    # legacy -> new (CTDG)
+    legacy = LinkPredictionTrainer("tgat", small_stream, batch_size=48, k=4,
+                                   eval_negatives=5, seed=0,
+                                   model_kwargs={"num_layers": 1})
+    legacy.train_epoch()
+    legacy.save_checkpoint(str(tmp_path / "ctdg"), 0)
+    new = CTDG_EXP.compile(small_stream)
+    assert new.restore_checkpoint(str(tmp_path / "ctdg")) == 0
+    assert _tree_equal(new.params, legacy.params)
+    l_new, _ = new.train_epoch()
+    l_old, _ = legacy.train_epoch()
+    assert l_new == l_old
+    assert _tree_equal(new.params, legacy.params)
+
+    # new -> legacy (DTDG)
+    new_d = DTDG_EXP.compile(small_stream)
+    new_d.train_epoch()
+    new_d.save_checkpoint(str(tmp_path / "dtdg"), 0)
+    legacy_d = SnapshotLinkTrainer("gcn", small_stream, snapshot_unit="h",
+                                   d_embed=16, seed=3)
+    assert legacy_d.restore_checkpoint(str(tmp_path / "dtdg")) == 0
+    assert _tree_equal(legacy_d.params, new_d.params)
+    l_a, _ = legacy_d.train_epoch()
+    l_b, _ = new_d.train_epoch()
+    assert l_a == l_b
+
+
+# ----------------------------------------------------------------------
+# Node task: scan-vs-loop parity + checkpointing
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("model", ["gcn", "tgcn"])
+def test_node_scan_vs_loop_parity(model, small_stream):
+    """The scanned node-property epoch == the per-snapshot jitted loop,
+    bit-for-bit: losses, trained params, and NDCG@10."""
+    base = Experiment(
+        task="node",
+        data=DataSpec(discretization="h"),
+        model=ModelSpec(model, {"d_embed": 8, "num_cats": 6}),
+        train=TrainSpec(seed=1),
+    )
+    scan = base.compile(small_stream)
+    loop = dataclasses.replace(
+        base, train=dataclasses.replace(base.train, compiled=False)
+    ).compile(small_stream)
+    assert scan.compiled and not loop.compiled
+    l_s, _ = scan.train_epoch()
+    l_l, _ = loop.train_epoch()
+    assert l_s == l_l
+    assert _tree_equal(scan.params, loop.params)
+    assert _tree_equal(scan.opt_state, loop.opt_state)
+    assert scan.evaluate("test")[0] == loop.evaluate("test")[0]
+    assert scan.evaluate("val")[0] == loop.evaluate("val")[0]
+
+
+def test_node_pipeline_checkpoint_roundtrip(small_stream, tmp_path):
+    """Node pipeline checkpoints restore params/opt/recurrent state."""
+    exp = Experiment(task="node", data=DataSpec(discretization="h"),
+                     model=ModelSpec("tgcn", {"d_embed": 8, "num_cats": 6}))
+    a = exp.compile(small_stream)
+    a.train_epoch()
+    a.save_checkpoint(str(tmp_path / "node"), 0)
+    b = exp.compile(small_stream)
+    assert b.restore_checkpoint(str(tmp_path / "node")) == 0
+    assert _tree_equal(a.params, b.params)
+    la, _ = a.train_epoch()
+    lb, _ = b.train_epoch()
+    assert la == lb
+
+
+def test_event_node_pipeline_checkpoints_through_trainloop(small_stream, tmp_path):
+    """The event-window node pipeline honors the full pipeline surface:
+    TrainLoop can checkpoint it mid-fit and a fresh pipeline restores."""
+    exp = Experiment(task="node", data=DataSpec(discretization="h"),
+                     model=ModelSpec("tgn", {"num_cats": 6, "d_embed": 8}),
+                     train=TrainSpec(epochs=1, ckpt_dir=str(tmp_path / "en"),
+                                     ckpt_every=1))
+    out = exp.run(data=small_stream, splits=("test",))
+    assert len(out["history"]["ckpts"]) == 1
+    fresh = exp.compile(small_stream)
+    assert fresh.restore_checkpoint(str(tmp_path / "en")) == 0
+    assert _tree_equal(fresh.params, out["pipeline"].params)
+    # pf writes a marker bundle and restores as a no-op
+    pf = Experiment(task="node", data=DataSpec(discretization="h"),
+                    model=ModelSpec("pf", {"num_cats": 6})).compile(small_stream)
+    pf.save_checkpoint(str(tmp_path / "pf"), 3)
+    assert pf.restore_checkpoint(str(tmp_path / "pf")) == 3
+
+
+def test_legacy_nodeprop_trainer_shim(small_stream):
+    """NodePropertyTrainer keeps the one-shot run() API; its snapshot
+    models now run the scanned pipeline under the hood."""
+    tr = NodePropertyTrainer("gcn", small_stream, unit="h", num_cats=6,
+                             d_embed=8)
+    assert isinstance(tr.pipeline, DTDGNodePipeline)
+    ndcg, secs = tr.run(train_frac=0.7)
+    assert 0.0 <= ndcg <= 1.0
+    pf = NodePropertyTrainer("pf", small_stream, unit="h", num_cats=6)
+    assert isinstance(pf.pipeline, EventNodePipeline)
+    assert 0.0 <= pf.run()[0] <= 1.0
+
+
+# ----------------------------------------------------------------------
+# TrainLoop engine + Experiment.run
+# ----------------------------------------------------------------------
+def test_trainloop_cadences(small_stream, tmp_path):
+    """fit() applies eval and checkpoint cadences and records history."""
+    pipeline = DTDG_EXP.compile(small_stream)
+    history = TrainLoop(pipeline).fit(
+        epochs=2, eval_every=1, eval_split="val",
+        ckpt_dir=str(tmp_path / "loop"), ckpt_every=2,
+    )
+    assert len(history["loss"]) == 2 == len(history["train_secs"])
+    assert [e for e, _ in history["eval"]] == [0, 1]
+    assert len(history["ckpts"]) == 1
+    restored = DTDG_EXP.compile(small_stream)
+    assert restored.restore_checkpoint(str(tmp_path / "loop")) == 1
+
+
+def test_experiment_run_end_to_end(small_stream):
+    """run() = compile + fit + final metrics, for the link task."""
+    exp = dataclasses.replace(
+        DTDG_EXP, train=dataclasses.replace(DTDG_EXP.train, epochs=2))
+    out = exp.run(data=small_stream, splits=("val", "test"))
+    assert len(out["history"]["loss"]) == 2
+    assert set(out["metrics"]) == {"val", "test"}
+    assert isinstance(out["pipeline"], DTDGLinkPipeline)
+
+
+# ----------------------------------------------------------------------
+# Recipe builders: spec-driven, legacy kwargs deprecated
+# ----------------------------------------------------------------------
+def test_recipe_spec_build_is_warning_free(recwarn):
+    """Spec-driven recipe building emits no DeprecationWarning."""
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        m = RecipeRegistry.build(
+            RECIPE_TGB_LINK, num_nodes=10,
+            spec=SamplerSpec(kind="recency", k=2), batch_size=8,
+        )
+    assert m.hooks()
+
+
+def test_recipe_legacy_kwargs_warn_and_map():
+    """Legacy sampler kwargs still work but emit a DeprecationWarning and
+    map onto the same hooks as the equivalent SamplerSpec."""
+    from repro.core.tg_hooks import UniformNeighborHook
+
+    with pytest.warns(DeprecationWarning, match="SamplerSpec"):
+        m = RecipeRegistry.build(
+            RECIPE_TGB_LINK, num_nodes=10, k=2, batch_size=8,
+            sampler="uniform", checkpoint_adjacency=False,
+        )
+    hooks = [h for h in m.hooks() if isinstance(h, UniformNeighborHook)]
+    assert len(hooks) == 1
+    assert hooks[0].sampler.checkpoint_adjacency is False
+    with pytest.raises(ValueError):  # spec and legacy kwargs are exclusive
+        RecipeRegistry.build(RECIPE_TGB_LINK, num_nodes=10,
+                             spec=SamplerSpec(), device_sampling=True)

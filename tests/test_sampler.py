@@ -368,3 +368,49 @@ def test_uniform_sampler_global_searchsorted_matches_per_seed_loop():
     for i in range(B):
         if blk.mask[i].any():
             assert (blk.nbr_times[i][blk.mask[i]] < query_t[i]).all()
+
+
+def test_uniform_sample_dedups_duplicate_query_keys():
+    """Batch-level dedup of duplicate (seed, query_t) pairs — the hop-2
+    frontier / one-vs-many shape — is bit-identical to the direct search:
+    valid counts match the per-seed loop, and duplicated rows keep
+    independent (per-row) draws."""
+    rng = np.random.default_rng(7)
+    N, E = 30, 400
+    src = rng.integers(0, N, E)
+    dst = rng.integers(0, N, E)
+    t = np.sort(rng.integers(0, 80, E))
+    s = UniformSampler(N, k=6, seed=2)
+    s.build(src, dst, t)
+
+    # Heavily duplicated batch: every (seed, t) pair appears many times.
+    base_seeds = rng.integers(0, N, 8)
+    base_t = rng.integers(1, 90, 8)
+    seeds = np.repeat(base_seeds, 16)
+    query_t = np.repeat(base_t, 16)
+
+    blk = s.sample(seeds, query_t)
+
+    # Valid-candidate sets match a per-seed binary search exactly.
+    starts, ends = s._indptr[seeds], s._indptr[seeds + 1]
+    for i in range(len(seeds)):
+        n_valid = int(np.searchsorted(s._adj_t[starts[i]:ends[i]],
+                                      query_t[i], side="left"))
+        assert blk.mask[i].all() == (n_valid > 0) and blk.mask[i].any() == (n_valid > 0)
+        if n_valid:
+            assert (blk.nbr_times[i][blk.mask[i]] < query_t[i]).all()
+
+    # Draws are per-row (duplicates are NOT forced to share neighbors):
+    # with 6 draws from a multi-candidate past, 16 duplicate rows almost
+    # surely differ somewhere.
+    s2 = UniformSampler(N, k=6, seed=2)
+    s2.build(src, dst, t)
+    blk2 = s2.sample(seeds, query_t)
+    _assert_same_np(blk, blk2)  # deterministic per (seed, counter)
+    rich = [i for i in range(0, len(seeds), 16)
+            if (s._indptr[seeds[i] + 1] - s._indptr[seeds[i]]) > 4
+            and blk.mask[i].any()]
+    if rich:
+        i = rich[0]
+        rows = blk.nbr_eids[i:i + 16]
+        assert not (rows == rows[0]).all()
