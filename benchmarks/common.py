@@ -2,9 +2,12 @@
 ``name,us_per_call,derived`` (derived = speedup / metric / note).
 
 Set ``BENCH_JSON=/path/to/bench.jsonl`` to additionally append one JSON
-object per ``emit`` call (name, us, derived, unix timestamp, git revision).
-Appending keeps a trajectory across runs, so regressions show up as a time
-series rather than a single stale number.
+object per ``emit`` call (name, us, derived, unix timestamp, git revision,
+JAX backend + device count). Appending keeps a trajectory across runs, so
+regressions show up as a time series rather than a single stale number —
+and the backend/device metadata keeps single- and multi-device trajectory
+points distinguishable (``scripts/check_bench_regression.py`` gates on the
+per-name medians).
 """
 
 from __future__ import annotations
@@ -40,6 +43,18 @@ def _git_rev() -> Optional[str]:
         return None
 
 
+def _device_meta() -> dict:
+    """JAX backend + visible device count (benchmarks always run under an
+    initialized JAX; import is deferred so ``common`` stays import-light)."""
+    try:
+        import jax
+
+        return {"backend": jax.default_backend(),
+                "device_count": jax.device_count()}
+    except Exception:  # pragma: no cover - jax always present in benches
+        return {"backend": None, "device_count": None}
+
+
 def emit(name: str, seconds: float, derived: str = "") -> None:
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
     path = os.environ.get("BENCH_JSON")
@@ -50,6 +65,7 @@ def emit(name: str, seconds: float, derived: str = "") -> None:
             "derived": derived,
             "ts": round(time.time(), 3),
             "rev": _git_rev(),
+            **_device_meta(),
         }
         with open(path, "a") as f:
             f.write(json.dumps(record) + "\n")

@@ -11,6 +11,7 @@ for CI; table selection via ``--only table5,table9``.
   table9  one-vs-many validation latency (batch dedup on/off)
   dtdg    scan-compiled DTDG epoch vs per-snapshot loop + jitted discretize
   kernels kernel reference-path microbenchmarks
+  sharded mesh-sharded sampler scaling curve (per visible shard count)
   roofline per-cell roofline terms (reads results/dryrun.json)
 """
 
@@ -33,6 +34,7 @@ def main() -> None:
         dtdg_bench,
         kernels_bench,
         roofline,
+        sharded_bench,
         table3_linkpred,
         table4_nodeprop,
         table5_discretize,
@@ -55,6 +57,8 @@ def main() -> None:
             dtdg_bench.bench_discretize_jit(scale=0.01 if fast else 0.02),
         )),
         ("kernels", kernels_bench.run),
+        ("sharded", lambda: sharded_bench.bench_sharded_sampler(
+            num_batches=10 if fast else 20)),
         ("roofline", roofline.run),
     ]
 

@@ -1,0 +1,91 @@
+"""Mesh-sharded sampler scaling curve (docs/sharding.md).
+
+``bench_sharded_sampler`` times the device-resident recency update+sample
+round-trip and the device uniform sample at every shard count that fits the
+visible device set (1, 2, 4, 8, ...), emitting one BENCH_JSON point per
+(sampler, shards) pair — a scaling curve over the trajectory, not a single
+number. On the CPU CI host (``--xla_force_host_platform_device_count=8``)
+the curve measures shard_map/collective *overhead* (all "devices" share the
+same cores, so there is no real HBM win to see); on real multi-chip
+hardware the same curve is the scaling measurement. Records carry
+``backend``/``device_count`` metadata (``benchmarks/common.py``) so the
+regression gate never confuses the two regimes.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.device_sampler import DeviceRecencySampler
+from repro.core.device_uniform import DeviceUniformSampler
+from repro.distributed.sharding import make_node_mesh
+
+from benchmarks.common import emit, timeit
+
+
+def _shard_counts() -> list:
+    out, s = [], 1
+    while s <= jax.device_count():
+        out.append(s)
+        s *= 2
+    return out
+
+
+def bench_sharded_sampler(B: int = 200, K: int = 20, N: int = 20_000,
+                          num_batches: int = 20, E: int = 50_000) -> None:
+    """Per-batch wall time of the sharded samplers vs shard count.
+
+    Recency: ``num_batches`` update+sample rounds (train shape, S = 3B
+    seeds). Uniform: ``num_batches`` sample calls over a pre-built E-edge
+    CSR. ``shards=0`` rows are the unsharded (no-``shard_map``) baselines
+    the shards=1 rows should sit close to — the gap is pure shard_map
+    dispatch overhead.
+    """
+    rng = np.random.default_rng(0)
+    S = 3 * B
+    src = rng.integers(0, N, (num_batches, B))
+    dst = rng.integers(0, N, (num_batches, B))
+    t = np.sort(rng.integers(0, 100, (num_batches, B)), axis=1)
+    t += np.arange(num_batches)[:, None] * 100
+    seeds = rng.integers(0, N, (num_batches, S))
+
+    esrc = rng.integers(0, N, E)
+    edst = rng.integers(0, N, E)
+    et = np.sort(rng.integers(0, 10_000, E))
+    qt = rng.integers(0, 12_000, (num_batches, S))
+
+    def run_recency(sampler):
+        for i in range(num_batches):
+            sampler.sample(seeds[i])
+            sampler.update(src[i], dst[i], t[i])
+        jax.block_until_ready(sampler.state)
+
+    def run_uniform(sampler):
+        out = None
+        for i in range(num_batches):
+            sampler.reset_state()  # fixed draw counter: same work per rep
+            out = sampler.sample(seeds[i], qt[i])
+        jax.block_until_ready(out.nbr_ids)
+
+    for shards in [0] + _shard_counts():
+        mesh = make_node_mesh(shards) if shards else None
+        tag = f"s{shards}" if shards else "unsharded"
+
+        rec = DeviceRecencySampler(N, K, mesh=mesh)
+        run_recency(rec)  # compile
+        rec.reset_state()
+        t_rec = timeit(lambda: run_recency(rec), repeats=5) / num_batches
+        emit(f"sharded/recency_update_sample_{tag}", t_rec,
+             f"B{B} K{K} N{N} S{S} shards={shards}")
+
+        uni = DeviceUniformSampler(N, K, mesh=mesh)
+        uni.build(esrc, edst, et)
+        run_uniform(uni)  # compile
+        t_uni = timeit(lambda: run_uniform(uni), repeats=5) / num_batches
+        emit(f"sharded/uniform_sample_{tag}", t_uni,
+             f"K{K} N{N} E{E} S{S} shards={shards}")
+
+
+if __name__ == "__main__":
+    bench_sharded_sampler()

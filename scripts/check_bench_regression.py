@@ -1,0 +1,204 @@
+#!/usr/bin/env python
+"""Bench-regression gate: compare a CI ``bench.jsonl`` trajectory against
+the committed ``benchmarks/baseline_cpu.json``.
+
+For every benchmark name present in both files, the current per-name median
+``us`` is compared to the baseline median; a ratio above the tolerance
+fails the gate (exit 1). Comparisons are regime-aware: points are grouped
+by the (backend, device_count) metadata every BENCH_JSON record carries,
+and a current point is only gated against a baseline entry measured under
+the *same* regime — an 8-emulated-device median vs a 1-device baseline is
+reported as skipped, never as a pass or regression. Benchmarks only in the
+current run are reported as "new" (no gate — add them to the baseline when
+they stabilize); baseline entries missing from the current run are skipped
+(the tier-1 and multi-device jobs each run different subsets against one
+shared baseline).
+
+A markdown trajectory table is printed to stdout and, when the
+``GITHUB_STEP_SUMMARY`` env var is set (GitHub Actions), appended to the
+job's step summary.
+
+Tolerance resolution (first match wins): per-bench ``tolerance`` in the
+baseline file, then ``--tolerance`` (default 1.5x). CI passes an explicit
+wider tolerance while the committed baseline comes from a different
+machine class than the runners; tighten it once the baseline is refreshed
+from a runner-produced artifact.
+
+Usage:
+    python scripts/check_bench_regression.py \
+        [--bench bench.jsonl] [--baseline benchmarks/baseline_cpu.json] \
+        [--tolerance 1.5]
+
+Refreshing the baseline:
+    python scripts/check_bench_regression.py --write-baseline bench.jsonl
+rewrites ``--baseline`` from a bench.jsonl's per-name medians.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+from typing import Dict, List
+
+
+def read_bench(path: str) -> Dict[str, List[dict]]:
+    """Aggregate a bench.jsonl into per-name regime entries.
+
+    Points are grouped by (name, backend, device_count) — the metadata
+    ``benchmarks/common.py`` stamps on every record — so a trajectory file
+    spanning device regimes (e.g. a 1-device and an 8-device run of the
+    same bench) is never pooled into one meaningless median.
+    """
+    by_key: Dict[tuple, List[float]] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            key = (rec["name"], rec.get("backend"), rec.get("device_count"))
+            by_key.setdefault(key, []).append(float(rec["us"]))
+    out: Dict[str, List[dict]] = {}
+    for (name, backend, devices), vals in by_key.items():
+        out.setdefault(name, []).append({
+            "us": statistics.median(vals), "runs": len(vals),
+            "backend": backend, "device_count": devices,
+        })
+    return out
+
+
+def _regime(entry: dict) -> tuple:
+    return entry.get("backend"), entry.get("device_count")
+
+
+def _regime_label(entry: dict) -> str:
+    return f"{entry.get('backend') or '?'}x{entry.get('device_count') or '?'}"
+
+
+def compare(current: Dict[str, List[dict]], baseline: Dict[str, dict],
+            tolerance: float):
+    """Per-name comparison rows + the list of regressions.
+
+    Only current entries whose (backend, device_count) regime matches the
+    baseline entry's recorded regime are gated; same-named points from a
+    different regime are reported but never compared (a 1-device median vs
+    an 8-device baseline is not a regression signal).
+    """
+    rows, regressions = [], []
+    for name in sorted(set(current) | set(baseline)):
+        curs, base = current.get(name, []), baseline.get(name)
+        if base is None:
+            for c in curs:
+                rows.append((name, None, c["us"], None, "new (no baseline)"))
+            continue
+        if not curs:
+            rows.append((name, base["us"], None, None, "not run"))
+            continue
+        for c in curs:
+            if _regime(c) != _regime(base):
+                rows.append((name, base["us"], c["us"], None,
+                             f"skipped (regime {_regime_label(c)} != "
+                             f"baseline {_regime_label(base)})"))
+                continue
+            tol = float(base.get("tolerance") or tolerance)
+            ratio = c["us"] / base["us"] if base["us"] else float("inf")
+            if ratio > tol:
+                status = f"REGRESSION (> {tol:.2f}x)"
+                regressions.append((name, ratio, tol))
+            else:
+                status = "ok"
+            rows.append((name, base["us"], c["us"], ratio, status))
+    return rows, regressions
+
+
+def format_table(rows) -> str:
+    """Markdown trajectory table for stdout / the GitHub step summary."""
+    out = ["| benchmark | baseline us | current us | ratio | status |",
+           "|---|---:|---:|---:|---|"]
+    for name, base, cur, ratio, status in rows:
+        base_s = "-" if base is None else f"{base:.1f}"
+        cur_s = "-" if cur is None else f"{cur:.1f}"
+        ratio_s = "-" if ratio is None else f"{ratio:.2f}x"
+        out.append(f"| {name} | {base_s} | {cur_s} | {ratio_s} | {status} |")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the process exit code."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default="bench.jsonl",
+                    help="bench.jsonl produced by the CI bench steps")
+    ap.add_argument("--baseline", default="benchmarks/baseline_cpu.json")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="max allowed current/baseline ratio (default 1.5)")
+    ap.add_argument("--write-baseline", metavar="BENCH_JSONL",
+                    help="rewrite --baseline from this bench.jsonl and exit")
+    args = ap.parse_args(argv)
+
+    if args.write_baseline:
+        benches = read_bench(args.write_baseline)
+        multi = sorted(n for n, entries in benches.items()
+                       if len(entries) > 1)
+        if multi:
+            print(f"refusing to write baseline: {args.write_baseline} has "
+                  f"multiple device regimes for {multi}; the baseline keys "
+                  f"one regime per bench name — refresh from single-regime "
+                  f"files", file=sys.stderr)
+            return 1
+        # Carry per-bench tolerance overrides through a refresh — they are
+        # the first-priority tolerance source and must survive rewrites.
+        old_tol = {}
+        if os.path.exists(args.baseline):
+            with open(args.baseline) as f:
+                old = json.load(f).get("benches", {})
+            old_tol = {n: v["tolerance"] for n, v in old.items()
+                       if v.get("tolerance")}
+        payload = {
+            "note": "per-bench median us (one device regime per name); "
+                    "refresh via scripts/check_bench_regression.py "
+                    "--write-baseline",
+            "benches": {n: {"us": round(e[0]["us"], 1), "runs": e[0]["runs"],
+                            "backend": e[0]["backend"],
+                            "device_count": e[0]["device_count"],
+                            **({"tolerance": old_tol[n]} if n in old_tol
+                               else {})}
+                        for n, e in sorted(benches.items())},
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(benches)} baseline entries to {args.baseline}")
+        return 0
+
+    current = read_bench(args.bench)
+    with open(args.baseline) as f:
+        baseline = json.load(f)["benches"]
+    rows, regressions = compare(current, baseline, args.tolerance)
+    table = format_table(rows)
+    print(table)
+
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write("## Bench trajectory vs committed baseline\n\n")
+            f.write(table + "\n")
+
+    if regressions:
+        print("\nFAIL: bench regressions detected:", file=sys.stderr)
+        for name, ratio, tol in regressions:
+            print(f"  {name}: {ratio:.2f}x baseline (tolerance {tol:.2f}x)",
+                  file=sys.stderr)
+        return 1
+    print(f"\nOK: {sum(1 for r in rows if r[4] == 'ok')} benches within "
+          f"tolerance, {sum(1 for r in rows if r[4].startswith('new'))} new, "
+          f"{sum(1 for r in rows if r[4] == 'not run')} not run, "
+          f"{sum(1 for r in rows if r[4].startswith('skipped'))} skipped "
+          f"(regime mismatch)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,6 +35,20 @@ segment-cumsum scheme (fixed shapes, one XLA compilation per batch shape):
 Outputs are bit-identical to ``SequentialRecencySampler`` (see
 ``tests/test_sampler.py`` property tests), including cursor wraparound when
 one batch carries more than K events for a node, and duplicate timestamps.
+
+**Multi-device sharding** (``mesh=`` + ``docs/sharding.md``): the buffer is
+partitioned row-wise by node id over a 1-D ``jax.sharding.Mesh`` — shard
+``s`` owns nodes ``[s*per, (s+1)*per)`` with ``per = ceil(N/shards)`` plus
+its *own local sink row*, so the packed global layout is
+``(shards*(per+1), K, 3)``. ``update`` and ``sample`` run through
+``shard_map``: updates stay shard-local (each shard scatters only the
+events of nodes it owns; everything else lands in its local sink), and
+``sample`` combines per-shard masked gathers with a single ``psum`` —
+exactly one shard owns each seed, so the sum is the owner's value and the
+results are bit-identical to the single-device path (property-tested under
+``--xla_force_host_platform_device_count=8``). ``state_dict`` always emits
+the canonical host layout (sinks and padding stripped), so checkpoints
+reshard transparently across mesh sizes in both directions.
 """
 
 from __future__ import annotations
@@ -68,24 +82,35 @@ def as_int32(a, name: str):
     return jnp.asarray(a, jnp.int32)
 
 
-def _update_impl(state, src, dst, t, eids, valid, *, k: int, directed: bool):
-    """Insert a time-ordered batch into the circular buffers. Pure/jit."""
-    sink = state["cc"].shape[0] - 1  # row N: write target for dropped events
+def _event_stream(src, dst, t, eids, valid, *, directed: bool):
+    """Flatten a batch into the (nodes, ok, vals) insertion stream.
 
+    Directed: one stream position per event (src gets dst). Undirected:
+    interleaved src/dst copies (event i -> stream positions 2i, 2i+1) so
+    the flattened stream preserves exact sequential insertion order.
+    """
     if directed:
-        nodes, ok = src, valid
-        vals = jnp.stack([dst, t, eids], axis=-1)  # (m, 3)
-    else:
-        # Interleave src/dst copies (event i -> stream positions 2i, 2i+1) so
-        # the flattened stream preserves exact sequential insertion order.
-        nodes = jnp.stack([src, dst], 1).reshape(-1)
-        ok = jnp.stack([valid, valid], 1).reshape(-1)
-        vals = jnp.stack([
-            jnp.stack([dst, src], 1).reshape(-1),
-            jnp.stack([t, t], 1).reshape(-1),
-            jnp.stack([eids, eids], 1).reshape(-1),
-        ], axis=-1)
+        return src, valid, jnp.stack([dst, t, eids], axis=-1)  # (m, 3)
+    nodes = jnp.stack([src, dst], 1).reshape(-1)
+    ok = jnp.stack([valid, valid], 1).reshape(-1)
+    vals = jnp.stack([
+        jnp.stack([dst, src], 1).reshape(-1),
+        jnp.stack([t, t], 1).reshape(-1),
+        jnp.stack([eids, eids], 1).reshape(-1),
+    ], axis=-1)
+    return nodes, ok, vals
 
+
+def _insert_stream(state, nodes, ok, vals, *, k: int):
+    """Scatter an insertion stream into the circular buffers. Pure/jit.
+
+    ``state``'s last row is the write sink for dropped events (``ok`` False
+    or routed off-shard by the sharded caller); results per surviving row
+    match sequential insertion exactly. Shared by the single-device update
+    (sink = global row N) and the per-shard ``shard_map`` body (sink = the
+    shard's local sink row).
+    """
+    sink = state["cc"].shape[0] - 1  # last row: write target for drops
     m = nodes.shape[0]
     nodes = jnp.where(ok, nodes, sink)
     idx = jnp.arange(m, dtype=jnp.int32)
@@ -137,6 +162,13 @@ def _update_impl(state, src, dst, t, eids, valid, *, k: int, directed: bool):
     return {"buf": buf, "cc": cc}
 
 
+def _update_impl(state, src, dst, t, eids, valid, *, k: int, directed: bool):
+    """Insert a time-ordered batch into the circular buffers. Pure/jit."""
+    nodes, ok, vals = _event_stream(src, dst, t, eids, valid,
+                                    directed=directed)
+    return _insert_stream(state, nodes, ok, vals, k=k)
+
+
 @partial(jax.jit, static_argnames=("k", "directed"), donate_argnums=(0,))
 def _update_donated(state, src, dst, t, eids, valid, *, k, directed):
     return _update_impl(state, src, dst, t, eids, valid, k=k, directed=directed)
@@ -162,19 +194,29 @@ def _update(state, src, dst, t, eids, valid, *, k: int, directed: bool,
     return fn(state, src, dst, t, eids, valid, k=k, directed=directed)
 
 
-@partial(jax.jit, static_argnames=("k",))
-def _sample(state, seeds, *, k: int):
-    """Gather the K most recent neighbors per seed, most-recent-first."""
-    cc = state["cc"][seeds]  # (B, 2) — one gather for cursor and count
+def _gather_rows(state, rows_idx, *, k: int):
+    """Per-row circular-buffer gather: (rows (B, K, 3), cc (B, 2))."""
+    cc = state["cc"][rows_idx]  # (B, 2) — one gather for cursor and count
     offs = jnp.arange(1, k + 1, dtype=jnp.int32)[None, :]
     raw = cc[:, :1] - offs  # in [-k, k-1]: cheap wrap instead of generic mod
     slots = jnp.where(raw < 0, raw + k, raw)
-    rows = state["buf"][seeds[:, None], slots]  # (B, K, 3) — one gather
+    return state["buf"][rows_idx[:, None], slots], cc
+
+
+def _finish_sample(rows, cc, *, k: int):
+    """Mask gathered rows by per-seed count -> (ids, times, eids, mask)."""
     mask = jnp.arange(k, dtype=jnp.int32)[None, :] < cc[:, 1:]
     ids = jnp.where(mask, rows[..., 0], -1)
     times = jnp.where(mask, rows[..., 1], 0)
     eids = jnp.where(mask, rows[..., 2], -1)
     return ids, times, eids, mask
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _sample(state, seeds, *, k: int):
+    """Gather the K most recent neighbors per seed, most-recent-first."""
+    rows, cc = _gather_rows(state, seeds, k=k)
+    return _finish_sample(rows, cc, k=k)
 
 
 class DeviceRecencySampler:
@@ -184,37 +226,184 @@ class DeviceRecencySampler:
     first JAX device) and ``update``/``sample`` run jit-compiled. ``update``
     accepts an optional ``valid`` mask so padded fixed-shape batches compile
     exactly once.
+
+    With ``mesh`` (a 1-D ``jax.sharding.Mesh``; see
+    ``repro.distributed.sharding.make_node_mesh``) the buffers are
+    partitioned row-wise by node id over ``mesh_axis`` and both paths run
+    through ``shard_map`` — shard-local scatters for ``update``, a
+    psum-combined masked gather for ``sample`` — with outputs bit-identical
+    to the single-device path. See the module docstring and
+    ``docs/sharding.md`` for the layout and the per-shard sink-row policy.
     """
 
     def __init__(self, num_nodes: int, k: int, directed: bool = False,
-                 device=None, retain_state: bool = False):
+                 device=None, retain_state: bool = False, mesh=None,
+                 mesh_axis: str = "data"):
         if k <= 0:
             raise ValueError("k must be positive")
         self.num_nodes = int(num_nodes)
         self.k = int(k)
         self.directed = directed
         self.retain_state = retain_state
-        self._device = device or jax.devices()[0]
+        self._mesh = mesh
+        self._mesh_axis = mesh_axis
+        if mesh is not None:
+            from repro.distributed.sharding import (
+                node_rows_per_shard,
+                replicated_sharding,
+                row_sharding,
+            )
+
+            if device is not None:
+                raise ValueError(
+                    "pass either device= or mesh=, not both — a sharded "
+                    "sampler's state is placed by the mesh's row sharding "
+                    "(docs/sharding.md)"
+                )
+            if mesh_axis not in mesh.axis_names:
+                raise ValueError(
+                    f"mesh has no axis {mesh_axis!r}; axes are "
+                    f"{mesh.axis_names}"
+                )
+            self._shards = int(mesh.shape[mesh_axis])
+            self._per = node_rows_per_shard(self.num_nodes, self._shards)
+            self._row_sharding = row_sharding(mesh, mesh_axis)
+            self._replicated = replicated_sharding(mesh)
+            self._make_sharded_fns()
+            self._device = None
+        else:
+            self._device = device or jax.devices()[0]
         self.reset_state()
 
-    def reset_state(self) -> None:
-        """Reallocate empty buffers on the target device: ids/eids -1,
-        times 0, cursor/count 0 (the packed ``(N+1, K, 3)`` + ``(N+1, 2)``
-        layout described in the module docstring)."""
+    # -- sharded-path machinery ------------------------------------------
+    def _make_sharded_fns(self) -> None:
+        """Build the per-instance jitted ``shard_map`` update/sample.
+
+        Each shard owns node rows ``[s*per, (s+1)*per)`` plus a local sink
+        at local row ``per``; the replicated batch is remapped so owned
+        events scatter locally and everything else drops into the local
+        sink. ``sample`` gathers per shard, zeroes non-owned rows, and
+        psum-combines — exactly one shard owns each seed.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import SHARD_MAP_KW, shard_map
+
+        mesh, axis = self._mesh, self._mesh_axis
+        per, k, directed = self._per, self.k, self.directed
+        state_specs = {"buf": P(axis), "cc": P(axis)}
+        rep = P()
+
+        def update_body(state, src, dst, t, eids, valid):
+            lo = jax.lax.axis_index(axis).astype(jnp.int32) * per
+            nodes, ok, vals = _event_stream(src, dst, t, eids, valid,
+                                            directed=directed)
+            owned = ok & (nodes >= lo) & (nodes < lo + per)
+            local = jnp.where(owned, nodes - lo, per)
+            return _insert_stream(state, local, owned, vals, k=k)
+
+        def sample_body(state, seeds):
+            lo = jax.lax.axis_index(axis).astype(jnp.int32) * per
+            owned = (seeds >= lo) & (seeds < lo + per)
+            rows, cc = _gather_rows(
+                state, jnp.where(owned, seeds - lo, per), k=k)
+            rows = jnp.where(owned[:, None, None], rows, 0)
+            cc = jnp.where(owned[:, None], cc, 0)
+            return (jax.lax.psum(rows, axis), jax.lax.psum(cc, axis))
+
+        upd = shard_map(update_body, mesh=mesh,
+                        in_specs=(state_specs, rep, rep, rep, rep, rep),
+                        out_specs=state_specs, **SHARD_MAP_KW)
+        smp = shard_map(sample_body, mesh=mesh,
+                        in_specs=(state_specs, rep), out_specs=(rep, rep),
+                        **SHARD_MAP_KW)
+        self._sharded_update_donated = jax.jit(upd, donate_argnums=(0,))
+        self._sharded_update_copying = jax.jit(upd)
+        self._sharded_sample = jax.jit(
+            lambda state, seeds: _finish_sample(*smp(state, seeds), k=k))
+
+    def _install_canonical(self, buf: Optional[np.ndarray],
+                           cc: Optional[np.ndarray]) -> None:
+        """Place canonical ``(N, K, 3)``/``(N, 2)`` host state onto the
+        target device(s) (``None`` = empty buffers, sharded mode only —
+        the single-device reset builds its empty state directly on device
+        and never calls this with ``None``): single-device appends the
+        global sink row N; sharded mode materializes each shard's block —
+        its node rows plus its local sink row — directly on its device via
+        ``jax.make_array_from_callback``, so peak host memory beyond the
+        given canonical arrays is one shard's block, never the padded
+        global layout (the buffer may not fit one host by design)."""
         n, k = self.num_nodes, self.k
-        empty = jnp.stack([
-            jnp.full((n + 1, k), -1, jnp.int32),   # neighbor ids
-            jnp.zeros((n + 1, k), jnp.int32),      # times
-            jnp.full((n + 1, k), -1, jnp.int32),   # edge ids
-        ], axis=-1)
-        self.state = jax.device_put(
-            {"buf": empty, "cc": jnp.zeros((n + 1, 2), jnp.int32)},
-            self._device,
-        )
+        if self._mesh is None:
+            sink_buf = np.zeros((1, k, 3), np.int32)
+            sink_buf[..., 0] = -1
+            sink_buf[..., 2] = -1
+            full_buf = np.concatenate([buf, sink_buf])
+            full_cc = np.concatenate([cc, np.zeros((1, 2), np.int32)])
+            self.state = jax.device_put(
+                {"buf": jnp.asarray(full_buf), "cc": jnp.asarray(full_cc)},
+                self._device,
+            )
+            return
+        s, per = self._shards, self._per
+        rows_local = per + 1
+
+        def _shard_rows(index):
+            """Global row slice -> (shard's first global node id, its
+            owned-node count)."""
+            shard = (index[0].start or 0) // rows_local
+            lo = shard * per
+            return lo, max(min(lo + per, n) - lo, 0)
+
+        def cb_buf(index):
+            lo, owned = _shard_rows(index)
+            out = np.zeros((rows_local, k, 3), np.int32)
+            out[..., 0] = -1
+            out[..., 2] = -1
+            if buf is not None:
+                out[:owned] = buf[lo:lo + owned]
+            return out
+
+        def cb_cc(index):
+            lo, owned = _shard_rows(index)
+            out = np.zeros((rows_local, 2), np.int32)
+            if cc is not None:
+                out[:owned] = cc[lo:lo + owned]
+            return out
+
+        self.state = {
+            "buf": jax.make_array_from_callback(
+                (s * rows_local, k, 3), self._row_sharding, cb_buf),
+            "cc": jax.make_array_from_callback(
+                (s * rows_local, 2), self._row_sharding, cb_cc),
+        }
+
+    def reset_state(self) -> None:
+        """Reallocate empty buffers on the target device(s): ids/eids -1,
+        times 0, cursor/count 0 (the packed ``(N+1, K, 3)`` + ``(N+1, 2)``
+        layout described in the module docstring; sharded mode uses the
+        ``(shards*(per+1), ...)`` per-shard-sink layout)."""
+        n, k = self.num_nodes, self.k
+        if self._mesh is None:
+            # Build on device directly — no host-RAM copy of the buffer.
+            empty = jnp.stack([
+                jnp.full((n + 1, k), -1, jnp.int32),   # neighbor ids
+                jnp.zeros((n + 1, k), jnp.int32),      # times
+                jnp.full((n + 1, k), -1, jnp.int32),   # edge ids
+            ], axis=-1)
+            self.state = jax.device_put(
+                {"buf": empty, "cc": jnp.zeros((n + 1, 2), jnp.int32)},
+                self._device,
+            )
+            return
+        # Sharded: per-shard empty blocks, no full-size host allocation.
+        self._install_canonical(None, None)
 
     @property
     def buffer_ids(self):
-        """(N+1, K) neighbor-id rows — the fused attention kernel's input."""
+        """(N+1, K) neighbor-id rows — the fused attention kernel's input.
+        Unavailable in sharded mode (the fused path is single-device)."""
+        self._require_unsharded("buffer_ids")
         return self.state["buf"][..., 0]
 
     @property
@@ -222,8 +411,20 @@ class DeviceRecencySampler:
         """(N+1, K, 3) packed rows (id, time, edge id) — what
         ``fused_temporal_layer`` consumes. Construct the sampler with
         ``retain_state=True`` if you hold on to this across ``update`` calls
-        on a donating (non-CPU) backend."""
+        on a donating (non-CPU) backend. Unavailable in sharded mode: the
+        sharded layout interleaves per-shard sink rows, so node ids are not
+        direct row indices there."""
+        self._require_unsharded("packed_buffer")
         return self.state["buf"]
+
+    def _require_unsharded(self, what: str) -> None:
+        if self._mesh is not None:
+            raise RuntimeError(
+                f"{what} is not available on a mesh-sharded sampler — the "
+                f"sharded layout interleaves per-shard sink rows (see "
+                f"docs/sharding.md); the fused buffer-consuming model path "
+                f"is single-device"
+            )
 
     # ------------------------------------------------------------------
     _as_i32 = staticmethod(as_int32)
@@ -245,11 +446,23 @@ class DeviceRecencySampler:
             eids = self._as_i32(eids, "eids")
         if valid is None:
             valid = jnp.ones(src.shape, bool)
+        dst = self._as_i32(dst, "dst")
+        t = self._as_i32(t, "t")
+        valid = jnp.asarray(valid, bool)
+        if self._mesh is not None:
+            # Replicate the batch over the mesh (host arrays and arrays
+            # committed to a single device alike), then run the shard_map
+            # update — scatters stay shard-local.
+            src, dst, t, eids, valid = jax.device_put(
+                (src, dst, t, eids, valid), self._replicated)
+            fn = (self._sharded_update_copying
+                  if self.retain_state or jax.default_backend() == "cpu"
+                  else self._sharded_update_donated)
+            self.state = fn(self.state, src, dst, t, eids, valid)
+            return
         self.state = _update(
-            self.state, src, self._as_i32(dst, "dst"),
-            self._as_i32(t, "t"), eids,
-            jnp.asarray(valid, bool), k=self.k, directed=self.directed,
-            retain=self.retain_state,
+            self.state, src, dst, t, eids, valid,
+            k=self.k, directed=self.directed, retain=self.retain_state,
         )
 
     def sample(self, seeds, query_t=None) -> NeighborBlock:
@@ -262,7 +475,11 @@ class DeviceRecencySampler:
         state only ever holds past events).
         """
         seeds = jnp.asarray(seeds, jnp.int32)
-        ids, times, eids, mask = _sample(self.state, seeds, k=self.k)
+        if self._mesh is not None:
+            seeds = jax.device_put(seeds, self._replicated)
+            ids, times, eids, mask = self._sharded_sample(self.state, seeds)
+        else:
+            ids, times, eids, mask = _sample(self.state, seeds, k=self.k)
         if query_t is not None:
             qt = jnp.asarray(query_t, jnp.int32)[:, None]
             keep = mask & (times <= qt)
@@ -275,9 +492,20 @@ class DeviceRecencySampler:
     # -- checkpoint contract (shared with RecencySampler) ----------------
     def state_dict(self) -> dict:
         """Canonical host-numpy state ``{ids, times, eids, cursor, count}``
-        (int64, sink row stripped) — loads into either recency sampler."""
+        (int64, sink row(s) and shard padding stripped) — loads into either
+        recency sampler, at any mesh size (resharding happens on load)."""
+        n, k = self.num_nodes, self.k
         host = jax.device_get(self.state)
-        buf, cc = host["buf"][:-1], host["cc"][:-1]
+        if self._mesh is None:
+            buf, cc = host["buf"][:-1], host["cc"][:-1]
+        else:
+            # Strip each shard's local sink row, re-concatenate the node
+            # rows in id order, and drop the last shard's padding rows.
+            s, per = self._shards, self._per
+            buf = host["buf"].reshape(s, per + 1, k, 3)[:, :per]
+            buf = buf.reshape(s * per, k, 3)[:n]
+            cc = host["cc"].reshape(s, per + 1, 2)[:, :per]
+            cc = cc.reshape(s * per, 2)[:n]
         return {
             "ids": buf[..., 0].astype(np.int64),
             "times": buf[..., 1].astype(np.int64),
@@ -287,20 +515,14 @@ class DeviceRecencySampler:
         }
 
     def load_state_dict(self, state: dict) -> None:
-        """Restore buffers saved by either recency sampler (the sink row is
-        re-appended and the packed layout rebuilt on device)."""
-        def _pad(a, fill):
-            a = np.asarray(a)
-            pad = np.full((1,) + a.shape[1:], fill, a.dtype)
-            return np.concatenate([a, pad]).astype(np.int32)
-
+        """Restore buffers saved by either recency sampler at any mesh
+        size (the canonical host layout is re-packed for this sampler's
+        sink/shard layout and placed on the target device(s))."""
         buf = np.stack([
-            _pad(state["ids"], -1),
-            _pad(state["times"], 0),
-            _pad(state["eids"], -1),
-        ], axis=-1)
-        cc = np.stack([_pad(state["cursor"], 0), _pad(state["count"], 0)],
-                      axis=-1)
-        self.state = jax.device_put(
-            {"buf": jnp.asarray(buf), "cc": jnp.asarray(cc)}, self._device
-        )
+            np.asarray(state["ids"]),
+            np.asarray(state["times"]),
+            np.asarray(state["eids"]),
+        ], axis=-1).astype(np.int32)
+        cc = np.stack([np.asarray(state["cursor"]),
+                       np.asarray(state["count"])], axis=-1).astype(np.int32)
+        self._install_canonical(buf, cc)

@@ -24,6 +24,21 @@ contract as the host sampler (``adj_nbr/adj_t/adj_e/indptr/counter``), so
 checkpoints are interchangeable between the two — mirroring the
 ``RecencySampler``/``DeviceRecencySampler`` pairing, which makes the two
 sampler families drop-in swappable inside ``RECIPE_TGB_LINK``.
+
+**Multi-device sharding** (``mesh=`` + ``docs/sharding.md``): the CSR is
+split on node boundaries over a 1-D mesh — shard ``s`` owns nodes
+``[s*per, (s+1)*per)`` and holds exactly their adjacency slice, padded to
+the max per-shard edge count with int32-max keys so the local
+``searchsorted`` stays correct. The sharded build runs host-side
+(``_host_csr``, a stable numpy sort bit-identical to the jitted build)
+and each shard's slice is materialized directly on its device, so the
+full adjacency never exists on any single device. ``sample`` runs through ``shard_map``:
+each shard counts/gathers only for the seeds it owns and two ``psum``s
+combine the results (valid-prefix lengths first — so the replicated
+uniform draws see the same bounds as the single-device path — then the
+gathered rows). Draws are bit-identical to the single-device sampler at
+any shard count; ``state_dict`` always reassembles the canonical host CSR,
+so checkpoints reshard across mesh sizes in both directions.
 """
 
 from __future__ import annotations
@@ -109,16 +124,43 @@ class DeviceUniformSampler:
     """
 
     def __init__(self, num_nodes: int, k: int, seed: int = 0, device=None,
-                 checkpoint_adjacency: bool = True):
+                 checkpoint_adjacency: bool = True, mesh=None,
+                 mesh_axis: str = "data"):
         if k <= 0:
             raise ValueError("k must be positive")
         self.num_nodes = int(num_nodes)
         self.k = int(k)
         self._seed = int(seed)
         self._counter = 0
-        self._device = device or jax.devices()[0]
         self._adj = None
         self.checkpoint_adjacency = bool(checkpoint_adjacency)
+        self._mesh = mesh
+        self._mesh_axis = mesh_axis
+        if mesh is not None:
+            from repro.distributed.sharding import (
+                node_rows_per_shard,
+                replicated_sharding,
+                row_sharding,
+            )
+
+            if device is not None:
+                raise ValueError(
+                    "pass either device= or mesh=, not both — a sharded "
+                    "sampler's state is placed by the mesh's row sharding "
+                    "(docs/sharding.md)"
+                )
+            if mesh_axis not in mesh.axis_names:
+                raise ValueError(
+                    f"mesh has no axis {mesh_axis!r}; axes are "
+                    f"{mesh.axis_names}"
+                )
+            self._shards = int(mesh.shape[mesh_axis])
+            self._per = node_rows_per_shard(self.num_nodes, self._shards)
+            self._row_sharding = row_sharding(mesh, mesh_axis)
+            self._replicated = replicated_sharding(mesh)
+            self._device = None
+        else:
+            self._device = device or jax.devices()[0]
 
     # ------------------------------------------------------------------
     _as_i32 = staticmethod(as_int32)
@@ -128,10 +170,22 @@ class DeviceUniformSampler:
 
         Each undirected event contributes both (src -> dst) and
         (dst -> src) entries. ``eids`` defaults to the event index, matching
-        the ``EdgeFeatureLookupHook`` convention.
+        the ``EdgeFeatureLookupHook`` convention. Sharded samplers build on
+        the host and place per-shard slices directly (``_host_csr`` +
+        ``_shard_adjacency``), so the global adjacency never materializes
+        on a single device — it may not fit one HBM by design.
         """
         if eids is None:
             eids = np.arange(len(np.asarray(src)), dtype=np.int64)
+        if self._mesh is not None:
+            src = self._host_i64(src, "src")
+            dst = self._host_i64(dst, "dst")
+            t2 = np.concatenate([self._host_i64(t, "t")] * 2)
+            es = np.concatenate([self._host_i64(eids, "eids")] * 2)
+            self._shard_adjacency(self._host_csr(
+                np.concatenate([src, dst]), np.concatenate([dst, src]),
+                t2, es))
+            return
         nodes = jnp.concatenate([self._as_i32(src, "src"),
                                  self._as_i32(dst, "dst")])
         nbrs = jnp.concatenate([self._as_i32(dst, "dst"),
@@ -148,6 +202,150 @@ class DeviceUniformSampler:
                 f"the host UniformSampler for this graph"
             )
         self._adj = jax.device_put(adj, self._device)
+
+    @staticmethod
+    def _host_i64(a, name: str) -> np.ndarray:
+        """Host int64 view of an input array with the same int32-range
+        guard as ``as_int32`` (the sharded arrays are narrowed to int32 at
+        placement time, so out-of-range values must fail loudly here)."""
+        a = np.asarray(jax.device_get(a)).astype(np.int64)
+        if a.size and (a.max() >= 2**31 or a.min() < -(2**31)):
+            raise ValueError(
+                f"{name} exceeds int32 range; rescale (e.g. coarser time "
+                f"granularity / epoch-relative timestamps) before "
+                f"device sampling"
+            )
+        return a
+
+    def _host_csr(self, nodes, nbrs, times, eids) -> dict:
+        """Canonical node-major/time-ascending CSR built host-side with
+        numpy — bit-identical layout to the jitted ``_build`` (both are
+        stable sorts on the same (node, time-rank) composite key; see
+        ``tests/test_sampler.py::test_device_uniform_adjacency_matches_host_csr``)
+        — used by the sharded path so no device ever holds the full
+        adjacency."""
+        order = np.lexsort((times, nodes))
+        nodes, nbrs = nodes[order], nbrs[order]
+        times, eids = times[order], eids[order]
+        counts = np.bincount(nodes, minlength=self.num_nodes)
+        indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        tvals = np.unique(times)
+        base = len(tvals) + 1
+        if self.num_nodes * base >= 2**31:
+            raise ValueError(
+                f"composite key range num_nodes*({base}) exceeds int32; use "
+                f"the host UniformSampler for this graph"
+            )
+        key = nodes * base + np.searchsorted(tvals, times)
+        return {"adj_nbr": nbrs, "adj_t": times, "adj_e": eids,
+                "adj_key": key, "indptr": indptr, "tvals": tvals,
+                "base": base}
+
+    def _shard_adjacency(self, host: dict) -> None:
+        """Split the host CSR on node boundaries and place it row-sharded.
+
+        Shard ``s`` owns nodes ``[s*per, (s+1)*per)``; its adjacency slice
+        (a contiguous, still globally-sorted run of the node-major arrays)
+        is padded to the max per-shard edge count ``L`` — keys with int32
+        max so a local ``searchsorted`` never lands in padding, values with
+        0 (never read: gathers are masked by ownership and prefix length).
+        Local ``indptr`` is rebased per shard with ``per + 1`` entries.
+        Each shard's padded slice is materialized directly on its device
+        via ``jax.make_array_from_callback`` — no device (and no extra
+        host copy) ever holds the padded global layout.
+        """
+        s, per, n = self._shards, self._per, self.num_nodes
+        indptr = np.asarray(host["indptr"], np.int64)
+        node_lo = np.minimum(np.arange(s, dtype=np.int64) * per, n)
+        node_hi = np.minimum(node_lo + per, n)
+        off = indptr[node_lo]
+        counts = indptr[node_hi] - off
+        L = max(int(counts.max()), 1)
+
+        def edge_cb(src, fill):
+            def cb(index):
+                i = (index[0].start or 0) // L
+                out = np.full((L,), fill, np.int32)
+                out[: counts[i]] = src[off[i]: off[i] + counts[i]]
+                return out
+
+            return jax.make_array_from_callback((s * L,),
+                                                self._row_sharding, cb)
+
+        def indptr_cb(index):
+            i = (index[0].start or 0) // (per + 1)
+            nodes = np.minimum(node_lo[i] + np.arange(per + 1), node_hi[i])
+            return (indptr[nodes] - off[i]).astype(np.int32)
+
+        self._adj = {
+            "adj_nbr": edge_cb(np.asarray(host["adj_nbr"]), 0),
+            "adj_t": edge_cb(np.asarray(host["adj_t"]), 0),
+            "adj_e": edge_cb(np.asarray(host["adj_e"]), 0),
+            "adj_key": edge_cb(np.asarray(host["adj_key"]), _I32_MAX),
+            "indptr": jax.make_array_from_callback(
+                (s * (per + 1),), self._row_sharding, indptr_cb),
+            "tvals": jax.device_put(jnp.asarray(host["tvals"], jnp.int32),
+                                    self._replicated),
+            "base": jax.device_put(jnp.asarray(host["base"], jnp.int32),
+                                   self._replicated),
+        }
+        self._host_indptr = indptr
+        self._shard_counts = counts
+        self._L = L
+        self._make_sharded_sample()
+
+    def _make_sharded_sample(self) -> None:
+        """Build the per-instance jitted ``shard_map`` sample (see the
+        module docstring for the two-psum combine)."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import SHARD_MAP_KW, shard_map
+
+        mesh, axis = self._mesh, self._mesh_axis
+        per, k, L = self._per, self.k, self._L
+        adj_specs = {"adj_nbr": P(axis), "adj_t": P(axis), "adj_e": P(axis),
+                     "adj_key": P(axis), "indptr": P(axis), "tvals": P(),
+                     "base": P()}
+        rep = P()
+
+        def sample_body(adj, seeds, query_t, rng_key):
+            lo = jax.lax.axis_index(axis).astype(jnp.int32) * per
+            owned = (seeds >= lo) & (seeds < lo + per)
+            qranks = jnp.searchsorted(adj["tvals"], query_t,
+                                      side="left").astype(jnp.int32)
+            starts = adj["indptr"][jnp.where(owned, seeds - lo, 0)]
+            ends = jnp.searchsorted(
+                adj["adj_key"], seeds * adj["base"] + qranks,
+                side="left").astype(jnp.int32)
+            # psum 1: every seed's valid-prefix length (owner's count).
+            n_valid = jax.lax.psum(jnp.where(owned, ends - starts, 0), axis)
+            # Replicated draws: same key/shape/bounds as the single-device
+            # path, so the drawn offsets are bit-identical.
+            draw = jax.random.randint(rng_key, (seeds.shape[0], k), 0,
+                                      jnp.maximum(n_valid, 1)[:, None],
+                                      jnp.int32)
+            idx = jnp.minimum(starts[:, None] + draw, L - 1)
+            rows = jnp.stack([adj["adj_nbr"][idx], adj["adj_t"][idx],
+                              adj["adj_e"][idx]], axis=-1)
+            # psum 2: the owner's gathered (id, time, eid) rows.
+            rows = jax.lax.psum(
+                jnp.where(owned[:, None, None], rows, 0), axis)
+            return rows, n_valid
+
+        smp = shard_map(sample_body, mesh=mesh,
+                        in_specs=(adj_specs, rep, rep, rep),
+                        out_specs=(rep, rep), **SHARD_MAP_KW)
+
+        def sample(adj, seeds, query_t, rng_key):
+            rows, n_valid = smp(adj, seeds, query_t, rng_key)
+            has = n_valid > 0
+            ids = jnp.where(has[:, None], rows[..., 0], -1)
+            times = jnp.where(has[:, None], rows[..., 1], 0)
+            eids = jnp.where(has[:, None], rows[..., 2], -1)
+            mask = jnp.broadcast_to(has[:, None], (seeds.shape[0], k))
+            return ids, times, eids, mask
+
+        self._sharded_sample = jax.jit(sample)
 
     @property
     def _built(self) -> bool:
@@ -168,35 +366,65 @@ class DeviceUniformSampler:
         rng_key = jax.random.fold_in(jax.random.PRNGKey(self._seed),
                                      self._counter)
         self._counter += 1
-        ids, times, eids, mask = _sample(self._adj, seeds, query_t, rng_key,
-                                         k=self.k)
+        if self._mesh is not None:
+            seeds, query_t, rng_key = jax.device_put(
+                (seeds, query_t, rng_key), self._replicated)
+            ids, times, eids, mask = self._sharded_sample(
+                self._adj, seeds, query_t, rng_key)
+        else:
+            ids, times, eids, mask = _sample(self._adj, seeds, query_t,
+                                             rng_key, k=self.k)
         return NeighborBlock(ids, times, eids, mask)
 
     # -- checkpoint contract (shared with UniformSampler) ----------------
     def state_dict(self) -> dict:
         """Canonical host-numpy state: the CSR arrays plus the draw counter.
-        Loads into either uniform sampler (self-contained restore at an
-        O(E) checkpoint cost — see ``UniformSampler.state_dict``). With
+        Loads into either uniform sampler, at any mesh size (sharded
+        samplers reassemble the canonical node-major CSR first; resharding
+        happens on load). Self-contained restore at an O(E) checkpoint cost
+        — see ``UniformSampler.state_dict``. With
         ``checkpoint_adjacency=False``, counter-only: the restoring side
         rebuilds the CSR from storage via ``build(...)``."""
         if not self._built or not self.checkpoint_adjacency:
             return {"counter": np.int64(self._counter)}
-        host = jax.device_get(self._adj)
+        if self._mesh is None:
+            host = jax.device_get(self._adj)
+            nbr, t, e = host["adj_nbr"], host["adj_t"], host["adj_e"]
+            indptr = host["indptr"]
+        else:
+            # Strip each shard's padding tail and re-concatenate the
+            # node-major runs; the global indptr was kept at shard time.
+            host = jax.device_get(
+                {k: self._adj[k] for k in ("adj_nbr", "adj_t", "adj_e")})
+            s, L, counts = self._shards, self._L, self._shard_counts
+            nbr, t, e = (
+                np.concatenate(
+                    [host[k].reshape(s, L)[i, : counts[i]] for i in range(s)])
+                for k in ("adj_nbr", "adj_t", "adj_e"))
+            indptr = self._host_indptr
         return {
-            "adj_nbr": host["adj_nbr"].astype(np.int64),
-            "adj_t": host["adj_t"].astype(np.int64),
-            "adj_e": host["adj_e"].astype(np.int64),
-            "indptr": host["indptr"].astype(np.int64),
+            "adj_nbr": nbr.astype(np.int64),
+            "adj_t": t.astype(np.int64),
+            "adj_e": e.astype(np.int64),
+            "indptr": indptr.astype(np.int64),
             "counter": np.int64(self._counter),
         }
 
     def load_state_dict(self, state: dict) -> None:
-        """Restore from either sampler's ``state_dict``; the derived
-        composite-key/time-rank arrays are rebuilt on device."""
+        """Restore from either sampler's ``state_dict`` at any mesh size;
+        the derived composite-key/time-rank arrays are rebuilt on device
+        and re-split over this sampler's mesh (if any)."""
         self._counter = int(state["counter"])
         if "adj_nbr" not in state:
             return
         nodes, nbrs, times, eids = csr_from_state(state, self.num_nodes)
+        if self._mesh is not None:
+            self._shard_adjacency(self._host_csr(
+                self._host_i64(nodes, "nodes"),
+                self._host_i64(nbrs, "adj_nbr"),
+                self._host_i64(times, "adj_t"),
+                self._host_i64(eids, "adj_e")))
+            return
         adj = _build(
             self._as_i32(nodes, "nodes"),
             self._as_i32(nbrs, "adj_nbr"),

@@ -347,6 +347,11 @@ class PrefetchLoader:
     ``DeviceTransferHook``). Arrays already on device pass through untouched,
     so it composes with device-resident hooks.
 
+    ``device`` may also be a ``jax.sharding.Sharding`` — the mesh-sharded
+    sampling pipeline passes the mesh-replicated ``NamedSharding`` here so
+    prefetched batches land on the same device set as the ``shard_map``
+    sampler state and the replicated model step (see ``docs/sharding.md``).
+
     ``staging`` enables the reusable host staging buffers
     (``_HostStagingPool``) so the H2D transfer reads from stable,
     re-registered addresses and can donate them; ``None`` (default)

@@ -131,6 +131,8 @@ def _tgb_link(
     seed: int = 0,
     device=None,
     spec=None,
+    mesh=None,
+    mesh_axis: str = "data",
     device_sampling=_UNSET,
     sampler=_UNSET,
     expose_buffer=_UNSET,
@@ -158,6 +160,12 @@ def _tgb_link(
     ``sampler=``, ``expose_buffer=``, ``checkpoint_adjacency=``) are still
     accepted without a spec; the strategy ones are deprecated and mapped
     onto a ``SamplerSpec`` with a ``DeprecationWarning``.
+
+    ``mesh`` (or ``spec.shards``, which resolves to a mesh here) shards
+    the device samplers' state row-wise by node id over a 1-D mesh and
+    routes the device transfer through a mesh-replicated placement so
+    batch tensors and sharded sampler state live on the same device set —
+    see ``docs/sharding.md``. Requires ``spec.device=True``.
     """
     if spec is None:
         spec = _legacy_sampler_spec(
@@ -176,6 +184,31 @@ def _tgb_link(
     k = spec.k
     num_hops = spec.num_hops if spec.num_hops is not None else 1
     device_sampling = spec.device
+    if mesh is None and getattr(spec, "shards", None):
+        from repro.distributed.sharding import make_node_mesh
+
+        # Spec-driven construction: the spec names the axis too, so a
+        # JSON-round-tripped spec behaves identically here and through
+        # CTDGLinkPipeline (an explicitly passed mesh keeps the kwarg).
+        mesh_axis = spec.mesh_axis
+        mesh = make_node_mesh(spec.shards, mesh_axis)
+    if mesh is not None:
+        if not device_sampling:
+            raise ValueError(
+                "mesh-sharded sampling requires SamplerSpec(device=True)"
+            )
+        if device is not None:
+            raise ValueError(
+                "pass either device= or a sampler mesh (mesh=/spec.shards), "
+                "not both — with a mesh, batch tensors are placed "
+                "mesh-replicated so they share the sharded state's device "
+                "set (docs/sharding.md)"
+            )
+        from repro.distributed.sharding import replicated_sharding
+
+        # Batch tensors must land replicated on the mesh's device set so
+        # the sharded sampler jits and the model step see one placement.
+        device = replicated_sharding(mesh)
     m = HookManager()
     # Padding runs FIRST so negatives/neighbor tensors come out fixed-shape;
     # stateful hooks exclude padded events via batch_mask.
@@ -196,9 +229,11 @@ def _tgb_link(
     if spec.kind == "uniform":
         if device_sampling:
             m.register(DeviceUniformNeighborHook(
-                num_nodes, k, include_negatives=True, seed=seed, device=device,
+                num_nodes, k, include_negatives=True, seed=seed,
+                device=None if mesh is not None else device,
                 num_hops=num_hops,
-                checkpoint_adjacency=spec.checkpoint_adjacency))
+                checkpoint_adjacency=spec.checkpoint_adjacency,
+                mesh=mesh, mesh_axis=mesh_axis))
         else:
             m.register(UniformNeighborHook(
                 num_nodes, k, include_negatives=True, seed=seed,
@@ -206,9 +241,11 @@ def _tgb_link(
                 checkpoint_adjacency=spec.checkpoint_adjacency))
     elif device_sampling:
         m.register(DeviceRecencyNeighborHook(num_nodes, k, num_hops=num_hops,
-                                             device=device,
+                                             device=None if mesh is not None
+                                             else device,
                                              expose_buffer=spec.expose_buffer,
-                                             edge_feats=edge_feats))
+                                             edge_feats=edge_feats,
+                                             mesh=mesh, mesh_axis=mesh_axis))
     else:
         m.register(RecencyNeighborHook(num_nodes, k, num_hops=num_hops, dedup=True))
     m.register(EdgeFeatureLookupHook(edge_feats, edge_feat_dim))

@@ -238,14 +238,31 @@ class DeviceRecencyNeighborHook(Hook):
         shapes fixed (one XLA compilation per activation key);
       * buffer updates consume the full padded batch plus ``batch_mask`` as
         a validity mask instead of slicing, again for fixed shapes.
+
+    With ``mesh`` (a 1-D ``jax.sharding.Mesh``) the sampler state is
+    partitioned row-wise by node id and update/sample run through
+    ``shard_map`` — same outputs, state scales past one device's HBM.
+    ``expose_buffer`` is forced off there (the fused ``nbr_buf`` model path
+    is single-device); see ``docs/sharding.md``.
     """
 
     def __init__(self, num_nodes: int, k: int, num_hops: int = 1,
                  include_negatives: bool = True, update_buffer: bool = True,
                  device=None, expose_buffer: Optional[bool] = None,
-                 edge_feats=None):
+                 edge_feats=None, mesh=None, mesh_axis: str = "data"):
         if num_hops not in (1, 2):
             raise ValueError("num_hops must be 1 or 2")
+        if mesh is not None:
+            # The fused buffer-consuming model path is single-device: the
+            # sharded layout interleaves per-shard sink rows, so node ids
+            # are not direct rows of the packed buffer there.
+            if expose_buffer:
+                raise ValueError(
+                    "expose_buffer=True is incompatible with a mesh-sharded "
+                    "sampler (the fused nbr_buf path is single-device; see "
+                    "docs/sharding.md)"
+                )
+            expose_buffer = False
         if expose_buffer is None:
             # Auto: expose wherever a consumer can exist. The fused model
             # path engages on TPU (and in CPU parity tests, where the
@@ -273,7 +290,8 @@ class DeviceRecencyNeighborHook(Hook):
         super().__init__(requires=requires, produces=produces,
                          state_key="RecencyNeighborHook")
         self.sampler = DeviceRecencySampler(num_nodes, k, device=device,
-                                            retain_state=expose_buffer)
+                                            retain_state=expose_buffer,
+                                            mesh=mesh, mesh_axis=mesh_axis)
         self.k = k
         self.num_hops = num_hops
         self.include_negatives = include_negatives
@@ -443,19 +461,23 @@ class DeviceUniformNeighborHook(UniformNeighborHook):
     ``DeviceUniformSampler``: the CSR-by-time adjacency lives on the
     accelerator and sampling is one jitted composite-key ``searchsorted``
     over the whole seed batch — the produced neighbor tensors are born
-    device-resident, mirroring ``DeviceRecencyNeighborHook``.
+    device-resident, mirroring ``DeviceRecencyNeighborHook``. With
+    ``mesh`` the CSR is split on node boundaries over the mesh and
+    sampling runs through ``shard_map`` (see ``docs/sharding.md``).
     """
 
     def __init__(self, num_nodes: int, k: int, include_negatives: bool = False,
                  seed: int = 0, device=None, num_hops: int = 1,
-                 checkpoint_adjacency: bool = True):
+                 checkpoint_adjacency: bool = True, mesh=None,
+                 mesh_axis: str = "data"):
         from repro.core.device_uniform import DeviceUniformSampler
 
         super().__init__(num_nodes, k, include_negatives=include_negatives,
                          seed=seed, num_hops=num_hops)
         self.sampler = DeviceUniformSampler(
             num_nodes, k, seed=seed, device=device,
-            checkpoint_adjacency=checkpoint_adjacency)
+            checkpoint_adjacency=checkpoint_adjacency, mesh=mesh,
+            mesh_axis=mesh_axis)
         # Shared checkpoint key with the host twin (see
         # DeviceRecencyNeighborHook): state_dicts are interchangeable.
         self.state_key = "UniformNeighborHook"
@@ -581,8 +603,11 @@ class PadBatchHook(Hook):
 def stage_batch(batch: Batch, device=None, pool=None) -> Batch:
     """Ship every host numpy attribute of ``batch`` to ``device`` (int64
     narrowed to int32 for the jitted models); arrays already on device pass
-    through. Shared by ``DeviceTransferHook`` and ``PrefetchLoader`` so the
-    transfer/narrowing policy lives in one place.
+    through. ``device`` may be a concrete device or any
+    ``jax.sharding.Sharding`` (the sharded sampling pipeline passes the
+    mesh-replicated ``NamedSharding``). Shared by ``DeviceTransferHook``
+    and ``PrefetchLoader`` so the transfer/narrowing policy lives in one
+    place.
 
     ``pool`` (a ``core.loader._HostStagingPool``) routes each array through
     a reusable host staging buffer first, and — off CPU only — issues the

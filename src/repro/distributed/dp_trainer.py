@@ -33,15 +33,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.distributed import compression as comp
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
-# shard_map moved to the jax namespace (and check_rep became check_vma)
-# across JAX releases; resolve whichever the installed version exposes.
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-    _SHARD_MAP_KW = {"check_vma": False}
-else:  # pragma: no cover - older JAX
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    _SHARD_MAP_KW = {"check_rep": False}
+# The version-compat shard_map shim is shared with the sharded samplers
+# and lives with the other mesh helpers in distributed/sharding.py.
+from repro.distributed.sharding import SHARD_MAP_KW as _SHARD_MAP_KW
+from repro.distributed.sharding import shard_map as _shard_map
 
 
 class DataParallelTrainer:

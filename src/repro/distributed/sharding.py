@@ -1,4 +1,4 @@
-"""Logical-axis sharding (MaxText-style rules).
+"""Logical-axis sharding (MaxText-style rules) and mesh helpers.
 
 Every parameter and key activation is annotated with *logical* axis names
 ("batch", "embed", "heads", ...). A rule table maps logical names to mesh
@@ -8,6 +8,18 @@ axes; GSPMD derives the collectives. Rules differ per parallelism profile
 The active (mesh, rules) pair is process-global context set by the launcher;
 model code calls ``shard(x, "batch", "seq", "embed")`` which is a no-op when
 no mesh is active (CPU tests).
+
+This module is also the home of the *node-partitioned sampler state* layout
+shared by the device-resident temporal samplers (see ``docs/sharding.md``):
+
+  * ``shard_map`` — the version-compat resolved ``jax.shard_map`` (used by
+    both the DP trainer and the sharded samplers);
+  * ``make_node_mesh`` — a 1-D mesh over the first N devices, axis "data";
+  * ``node_rows_per_shard`` / ``row_sharding`` / ``replicated_sharding`` —
+    the row-wise node-id partition arithmetic and the ``NamedSharding``s
+    the samplers, hooks, and ``PrefetchLoader`` all agree on. The logical
+    axis name for node-partitioned state is ``"nodes"`` (see
+    ``DEFAULT_RULES``).
 """
 
 from __future__ import annotations
@@ -18,6 +30,18 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# shard_map moved to the jax namespace (and check_rep became check_vma)
+# across JAX releases; resolve whichever the installed version exposes once,
+# here, for every shard_map consumer in the repo (DP trainer, sharded
+# samplers).
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+    SHARD_MAP_KW = {"check_vma": False}
+else:  # pragma: no cover - older JAX
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+    SHARD_MAP_KW = {"check_rep": False}
 
 AxisVal = Union[None, str, Tuple[str, ...]]
 Rules = Dict[str, AxisVal]
@@ -45,6 +69,7 @@ DEFAULT_RULES: Rules = {
     "patches": None,
     "cache_seq": None,
     "seq_shard": ("pod", "data"),  # sequence parallelism for long-context
+    "nodes": "data",  # node-id row partition of device sampler state
 }
 
 
@@ -58,15 +83,18 @@ _CTX = _Ctx()
 
 
 def set_sharding_context(mesh: Optional[Mesh], rules: Optional[Rules] = None) -> None:
+    """Install the process-global (mesh, rules) pair used by ``shard``."""
     _CTX.mesh = mesh
     _CTX.rules = dict(DEFAULT_RULES if rules is None else rules)
 
 
 def get_mesh() -> Optional[Mesh]:
+    """The active mesh set by ``set_sharding_context`` (None = no mesh)."""
     return _CTX.mesh
 
 
 def get_rules() -> Rules:
+    """The active logical-axis rule table."""
     return _CTX.rules
 
 
@@ -127,6 +155,8 @@ def logical_spec(logical: Sequence[Optional[str]],
                  rules: Optional[Rules] = None,
                  mesh: Optional[Mesh] = None,
                  shape: Optional[Sequence[int]] = None) -> P:
+    """``PartitionSpec`` for logical axis names under (rules, mesh);
+    divisibility-reduced against ``shape`` when given."""
     mesh = mesh or _CTX.mesh
     rules = rules or _CTX.rules
     if mesh is None:
@@ -138,6 +168,7 @@ def logical_sharding(logical: Sequence[Optional[str]],
                      rules: Optional[Rules] = None,
                      mesh: Optional[Mesh] = None,
                      shape: Optional[Sequence[int]] = None) -> Optional[NamedSharding]:
+    """``NamedSharding`` for logical axis names (None without a mesh)."""
     mesh = mesh or _CTX.mesh
     if mesh is None:
         return None
@@ -153,3 +184,45 @@ def shard(x, *logical: Optional[str]):
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, logical_spec(logical, shape=x.shape))
     )
+
+
+# ----------------------------------------------------------------------
+# Node-partitioned sampler state (the ``docs/sharding.md`` layout)
+# ----------------------------------------------------------------------
+def make_node_mesh(shards: int, axis: str = "data",
+                   devices: Optional[Sequence] = None) -> Mesh:
+    """A 1-D mesh over the first ``shards`` devices.
+
+    This is the mesh the device-resident samplers shard their node-row
+    state over (``SamplerSpec.shards`` resolves through here). ``axis``
+    defaults to ``"data"`` — the same axis the DP trainer shards event
+    batches over, so sampler state and batch shards can share one mesh.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    if shards < 1:
+        raise ValueError("shards must be >= 1")
+    if shards > len(devices):
+        raise ValueError(
+            f"requested {shards} sampler shards but only {len(devices)} "
+            f"devices are visible (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N to emulate more)"
+        )
+    return Mesh(np.asarray(devices[:shards]), (axis,))
+
+
+def node_rows_per_shard(num_nodes: int, shards: int) -> int:
+    """Node rows owned by each shard under the row-wise node-id partition:
+    ``ceil(num_nodes / shards)`` (the last shard may own padding rows)."""
+    return max(-(-int(num_nodes) // int(shards)), 1)
+
+
+def row_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
+    """``NamedSharding`` splitting an array's leading (row) dimension over
+    ``axis`` — the placement of node-partitioned sampler state."""
+    return NamedSharding(mesh, P(axis))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated ``NamedSharding`` over ``mesh`` — the placement of
+    per-batch tensors feeding sharded sampler computations."""
+    return NamedSharding(mesh, P())

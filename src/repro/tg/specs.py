@@ -126,6 +126,14 @@ class SamplerSpec(_SpecBase):
     ``prefetch`` is the ``PrefetchLoader`` queue depth used when
     ``device=True``. DTDG scan pipelines need no sampler — snapshots are
     consumed whole — so link/node snapshot experiments ignore this spec.
+
+    ``shards`` is the multi-device axis (``docs/sharding.md``): ``None``
+    keeps today's single-device state; an integer N shards the device
+    samplers' state row-wise by node id over a 1-D mesh of the first N
+    devices (axis ``mesh_axis``), with batches placed mesh-replicated and
+    update/sample routed through ``shard_map`` — same outputs, state
+    scales past one device's HBM. Requires ``device=True``; checkpoints
+    stay canonical, so runs reshard freely across different ``shards``.
     """
 
     kind: str = "recency"
@@ -135,6 +143,8 @@ class SamplerSpec(_SpecBase):
     checkpoint_adjacency: bool = True
     expose_buffer: Optional[bool] = None
     prefetch: int = 2
+    shards: Optional[int] = None
+    mesh_axis: str = "data"
 
     def __post_init__(self):
         if self.kind not in ("recency", "uniform"):
@@ -143,6 +153,19 @@ class SamplerSpec(_SpecBase):
             )
         if self.num_hops not in (None, 1, 2):
             raise ValueError("num_hops must be None (auto), 1 or 2")
+        if self.shards is not None:
+            if self.shards < 1:
+                raise ValueError("shards must be a positive integer or None")
+            if not self.device:
+                raise ValueError(
+                    "shards requires device=True (only the device-resident "
+                    "samplers have mesh-sharded state)"
+                )
+            if self.expose_buffer:
+                raise ValueError(
+                    "expose_buffer=True is incompatible with shards (the "
+                    "fused nbr_buf model path is single-device)"
+                )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -193,6 +193,11 @@ class CTDGLinkPipeline:
     hooks, and the loader wrapped in a ``PrefetchLoader`` that stages the
     *next* batch while the current jitted step runs). The host-numpy
     default doubles as the parity oracle in tests.
+
+    ``SamplerSpec.shards`` additionally shards the device sampler state
+    row-wise by node id over a 1-D mesh (``shard_map`` update/sample;
+    bit-identical outputs), stages batches mesh-replicated, and runs the
+    jitted steps replicated over the same mesh — see ``docs/sharding.md``.
     """
 
     def __init__(
@@ -225,6 +230,19 @@ class CTDGLinkPipeline:
         self.sampler_spec = spec
         self.device_sampling = spec.device
         self.prefetch = spec.prefetch
+        # Multi-device sampler sharding (SamplerSpec.shards): one 1-D mesh
+        # shared by sampler state (row-sharded), batch staging (replicated)
+        # and the replicated jitted steps. See docs/sharding.md.
+        self._mesh = None
+        self._replicated = None
+        if spec.shards:
+            from repro.distributed.sharding import (
+                make_node_mesh,
+                replicated_sharding,
+            )
+
+            self._mesh = make_node_mesh(spec.shards, spec.mesh_axis)
+            self._replicated = replicated_sharding(self._mesh)
         self.train_data, self.val_data, self.test_data = data.split(
             val_ratio, test_ratio
         )
@@ -275,7 +293,10 @@ class CTDGLinkPipeline:
                 num_hops=num_hops, device=spec.device,
                 checkpoint_adjacency=spec.checkpoint_adjacency,
                 expose_buffer=expose, prefetch=spec.prefetch,
+                shards=spec.shards, mesh_axis=spec.mesh_axis,
             ),
+            mesh=self._mesh,
+            mesh_axis=spec.mesh_axis,
             batch_size=batch_size,
             eval_negatives=eval_negatives,
             # Full-stream features: sampled nbr_eids are global event
@@ -303,9 +324,22 @@ class CTDGLinkPipeline:
 
         self.opt_cfg = AdamWConfig(lr=1e-4 if lr is None else lr)
         self.opt_state = adamw_init(self.params)
+        self._place_replicated()
         self._build_steps()
 
     # ------------------------------------------------------------------
+    def _place_replicated(self):
+        """Commit params/optimizer (and recurrent model) state replicated
+        onto the sampler mesh, so the jitted steps see one device set
+        (sharded-sampling pipelines only; no-op without a mesh)."""
+        if self._mesh is None:
+            return
+        self.params = jax.device_put(self.params, self._replicated)
+        self.opt_state = jax.device_put(self.opt_state, self._replicated)
+        if self.model_name in CTDG_STATEFUL:
+            self.model_state = jax.device_put(self.model_state,
+                                              self._replicated)
+
     def _build_steps(self):
         name, B = self.model_name, self.batch_size
 
@@ -354,8 +388,11 @@ class CTDGLinkPipeline:
         loader = DGDataLoader(DGraph(data), self.manager, batch_size=self.batch_size)
         if self.device_sampling:
             # Overlap hook pipeline + host->device staging of batch i+1 with
-            # the jitted step on batch i (double-buffered by default).
-            return PrefetchLoader(loader, prefetch=self.prefetch)
+            # the jitted step on batch i (double-buffered by default). With
+            # a sampler mesh, batches are staged with the mesh-replicated
+            # NamedSharding so they land on the sharded state's device set.
+            return PrefetchLoader(loader, device=self._replicated,
+                                  prefetch=self.prefetch)
         return loader
 
     def _batch_tensors(self, batch) -> Dict[str, Any]:
@@ -368,6 +405,9 @@ class CTDGLinkPipeline:
             self.model_state = tgn.init_state(self.cfg)
         elif self.model_name == "tpnet":
             self.model_state = tpnet.init_state(self.params, self.cfg)
+        if self._mesh is not None and self.model_name in CTDG_STATEFUL:
+            self.model_state = jax.device_put(self.model_state,
+                                              self._replicated)
 
     # -- checkpointing ---------------------------------------------------
     # The hook/sampler buffers (host numpy or device JAX pytree — both
@@ -398,6 +438,10 @@ class CTDGLinkPipeline:
         self.manager.load_state_dict(tree["hooks"])
         if self.model_name in CTDG_STATEFUL:
             self.model_state = tree["model_state"]
+        # Checkpoints are mesh-agnostic (canonical host layouts); re-commit
+        # the restored trees onto this pipeline's mesh, whatever mesh (or
+        # none) wrote them.
+        self._place_replicated()
         return step
 
     def train_epoch(self) -> Tuple[float, float]:

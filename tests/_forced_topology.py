@@ -1,0 +1,30 @@
+"""Shared launcher for tests that need a forced multi-device CPU topology.
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` must be set before
+jax initializes, so these tests run their snippets in a subprocess with the
+flag injected first. Used by ``tests/test_distributed.py`` and
+``tests/test_sharded_sampler.py``.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_forced(snippet: str, devices: int = 8, timeout: int = 520) -> str:
+    """Run ``snippet`` in a fresh interpreter with ``devices`` emulated CPU
+    devices and ``PYTHONPATH=src``; assert success and return stdout."""
+    code = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={devices}'\n"
+        + textwrap.dedent(snippet)
+    )
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env, cwd=REPO)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    return out.stdout

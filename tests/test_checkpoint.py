@@ -60,3 +60,35 @@ def test_dtype_preserved(tmp_path):
     ckpt.save(str(tmp_path), 0, tree)
     restored, _, _ = ckpt.restore(str(tmp_path), target=tree)
     assert restored["params"]["b"].dtype == np.dtype(jnp.bfloat16)
+
+
+def test_sharded_sampler_bundle_is_canonical_and_reshards(tmp_path):
+    """Checkpoint bundles carry the samplers' canonical host layout, so a
+    bundle written by a mesh-sharded sampler restores into an unsharded
+    one (and back) with bit-identical draws — the single-device half of
+    the 1<->8 resharding story (the 8-device half runs in
+    tests/test_distributed.py)."""
+    from repro.core import DeviceRecencySampler
+    from repro.distributed.sharding import make_node_mesh
+
+    rng = np.random.default_rng(8)
+    N, k = 17, 3
+    sharded = DeviceRecencySampler(N, k, mesh=make_node_mesh(1))
+    for i in range(3):
+        src, dst = rng.integers(0, N, 12), rng.integers(0, N, 12)
+        t = np.sort(rng.integers(i * 30, (i + 1) * 30, 12))
+        sharded.update(src, dst, t)
+    ckpt.save(str(tmp_path), 0, {"sampler": sharded.state_dict()})
+
+    flat, _, _ = ckpt.restore(str(tmp_path), target=None)
+    state = {kk.split("/", 1)[1]: v for kk, v in flat.items()}
+    assert state["ids"].shape == (N, k)  # canonical: no sink, no padding
+
+    plain = DeviceRecencySampler(N, k)
+    plain.load_state_dict(state)
+    back = DeviceRecencySampler(N, k, mesh=make_node_mesh(1))
+    back.load_state_dict(plain.state_dict())
+    a, b = plain.sample(np.arange(N)), back.sample(np.arange(N))
+    np.testing.assert_array_equal(np.asarray(a.nbr_ids), np.asarray(b.nbr_ids))
+    np.testing.assert_array_equal(np.asarray(a.nbr_eids), np.asarray(b.nbr_eids))
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))

@@ -17,6 +17,7 @@ def test_readme_and_docs_exist():
     assert (ROOT / "docs" / "kernels.md").exists()
     assert (ROOT / "docs" / "dtdg.md").exists()
     assert (ROOT / "docs" / "experiment.md").exists()
+    assert (ROOT / "docs" / "sharding.md").exists()
 
 
 def test_relative_doc_links_resolve():
@@ -32,10 +33,11 @@ def test_relative_doc_links_resolve():
 
 # Modules whose public surface must stay documented (the device-resident
 # sampling pipeline: PR-1 additions + the fused-attention layer + the
-# scan-compiled DTDG pipeline).
+# scan-compiled DTDG pipeline + the mesh-sharded sampler layer).
 DOCUMENTED_MODULES = [
     "repro.core.device_sampler",
     "repro.core.device_uniform",
+    "repro.distributed.sharding",
     "repro.core.discretize",
     "repro.core.graph",
     "repro.core.loader",
