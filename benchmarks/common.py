@@ -56,12 +56,20 @@ def _device_meta() -> dict:
 
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
-    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    emit_value(name, seconds * 1e6, derived)
+
+
+def emit_value(name: str, value: float, derived: str = "") -> None:
+    """Emit a raw gated value into the ``us`` field (used by rate-style
+    benches — e.g. requests/s — where the gated number is not a time; the
+    baseline entry's ``direction: "higher"`` tells the regression gate
+    which way is better)."""
+    print(f"{name},{value:.1f},{derived}", flush=True)
     path = os.environ.get("BENCH_JSON")
     if path:
         record = {
             "name": name,
-            "us": round(seconds * 1e6, 1),
+            "us": round(value, 1),
             "derived": derived,
             "ts": round(time.time(), 3),
             "rev": _git_rev(),

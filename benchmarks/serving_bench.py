@@ -1,0 +1,108 @@
+"""Online serving benchmark: request latency (p50/p99) and throughput vs
+microbatch size for ``OnlineGraphService``.
+
+For each batch size B the bench pre-warms a service with a synthetic event
+stream, then submits closed-loop waves of B concurrent ``predict_link``
+requests (``max_batch=B``, so flushes are size-triggered) and reports:
+
+  * ``serving_link_p50_b{B}`` / ``serving_link_p99_b{B}`` — per-request
+    enqueue-to-resolve latency percentiles (seconds -> us, lower-better);
+  * ``serving_link_qps_b{B}`` — completed requests per second
+    (higher-better: its baseline entry carries ``direction: "higher"``
+    for ``scripts/check_bench_regression.py``).
+
+``--fast`` shrinks the wave count for CI. All records land in BENCH_JSON
+via ``benchmarks.common`` and are gated against
+``benchmarks/baseline_cpu.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, emit_value
+
+from repro.serve import OnlineGraphService, Status
+
+
+def bench_serving(batch_sizes=(1, 8, 32), *, num_nodes: int = 500,
+                  n_events: int = 2000, waves: int = 30, k: int = 8) -> None:
+    """Latency/throughput sweep over microbatch sizes (see module doc)."""
+    rng = np.random.default_rng(0)
+    events = [(int(rng.integers(num_nodes)), int(rng.integers(num_nodes)),
+               100 + i, i) for i in range(n_events)]
+    queries = rng.integers(0, num_nodes, size=(max(batch_sizes) * waves, 2))
+
+    for B in batch_sizes:
+        svc = OnlineGraphService(num_nodes, k=k, max_batch=B,
+                                 flush_interval=0.05 if B > 1 else 0.001)
+        try:
+            svc.ingest_many(events)
+            svc.drain()
+            # warmup: trigger jit compilation for this batch shape
+            warm = [svc.submit_link(1, 2, 10 ** 6) for _ in range(B)]
+            for p in warm:
+                assert p.result(timeout=60).status is Status.OK
+            lats = []
+            t0 = time.perf_counter()
+            done = 0
+            for w in range(waves):
+                qs = queries[w * B:(w + 1) * B]
+                pend = [svc.submit_link(int(s), int(d), 10 ** 6)
+                        for s, d in qs]
+                for p in pend:
+                    r = p.result(timeout=60)
+                    assert r.status is Status.OK
+                    lats.append(r.latency_s)
+                    done += 1
+            wall = time.perf_counter() - t0
+            emit(f"serving_link_p50_b{B}", float(np.percentile(lats, 50)),
+                 f"n={done}")
+            emit(f"serving_link_p99_b{B}", float(np.percentile(lats, 99)),
+                 f"n={done}")
+            emit_value(f"serving_link_qps_b{B}", done / wall,
+                       "requests/s (higher is better)")
+        finally:
+            svc.stop()
+
+
+def bench_ingest(num_nodes: int = 500, n_events: int = 3000) -> None:
+    """Event-stream ingest rate (events/s through the bounded queue into
+    sampler + EdgeBank; higher-better)."""
+    rng = np.random.default_rng(1)
+    events = [(int(rng.integers(num_nodes)), int(rng.integers(num_nodes)),
+               100 + i, i) for i in range(n_events)]
+    svc = OnlineGraphService(num_nodes, k=8)
+    try:
+        svc.ingest(0, 1, 1, -1)  # warm the jitted sampler update
+        svc.drain()
+        t0 = time.perf_counter()
+        svc.ingest_many(events)
+        svc.drain()
+        wall = time.perf_counter() - t0
+        emit_value("serving_ingest_eps", n_events / wall,
+                   "events/s (higher is better)")
+    finally:
+        svc.stop()
+
+
+def main(argv=None) -> int:
+    """CLI entry point (``--fast`` = CI-sized run)."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-sized run (fewer waves/events)")
+    args = ap.parse_args(argv)
+    if args.fast:
+        bench_serving((1, 8), n_events=500, waves=10)
+        bench_ingest(n_events=1000)
+    else:
+        bench_serving()
+        bench_ingest()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

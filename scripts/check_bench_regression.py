@@ -18,6 +18,12 @@ A markdown trajectory table is printed to stdout and, when the
 ``GITHUB_STEP_SUMMARY`` env var is set (GitHub Actions), appended to the
 job's step summary.
 
+Direction: baseline entries default to lower-is-better (latencies). An
+entry with ``"direction": "higher"`` (rates, e.g. the serving bench's
+requests/s) inverts the gate — a regression is the current value falling
+below baseline/tolerance. Both ``direction`` and per-bench ``tolerance``
+survive ``--write-baseline`` refreshes.
+
 Tolerance resolution (first match wins): per-bench ``tolerance`` in the
 baseline file, then ``--tolerance`` (default 1.5x). CI passes an explicit
 wider tolerance while the committed baseline comes from a different
@@ -105,8 +111,17 @@ def compare(current: Dict[str, List[dict]], baseline: Dict[str, dict],
                 continue
             tol = float(base.get("tolerance") or tolerance)
             ratio = c["us"] / base["us"] if base["us"] else float("inf")
-            if ratio > tol:
-                status = f"REGRESSION (> {tol:.2f}x)"
+            # direction "lower" (default: latencies) regresses when the
+            # ratio grows; "higher" (rates, e.g. requests/s) when it
+            # shrinks below 1/tolerance.
+            if base.get("direction") == "higher":
+                regressed = ratio < 1.0 / tol
+                limit = f"< {1.0 / tol:.2f}x"
+            else:
+                regressed = ratio > tol
+                limit = f"> {tol:.2f}x"
+            if regressed:
+                status = f"REGRESSION ({limit})"
                 regressions.append((name, ratio, tol))
             else:
                 status = "ok"
@@ -148,14 +163,17 @@ def main(argv=None) -> int:
                   f"one regime per bench name — refresh from single-regime "
                   f"files", file=sys.stderr)
             return 1
-        # Carry per-bench tolerance overrides through a refresh — they are
-        # the first-priority tolerance source and must survive rewrites.
-        old_tol = {}
+        # Carry per-bench tolerance and direction overrides through a
+        # refresh — they are first-priority gate inputs and must survive
+        # rewrites.
+        old_tol, old_dir = {}, {}
         if os.path.exists(args.baseline):
             with open(args.baseline) as f:
                 old = json.load(f).get("benches", {})
             old_tol = {n: v["tolerance"] for n, v in old.items()
                        if v.get("tolerance")}
+            old_dir = {n: v["direction"] for n, v in old.items()
+                       if v.get("direction")}
         payload = {
             "note": "per-bench median us (one device regime per name); "
                     "refresh via scripts/check_bench_regression.py "
@@ -164,6 +182,8 @@ def main(argv=None) -> int:
                             "backend": e[0]["backend"],
                             "device_count": e[0]["device_count"],
                             **({"tolerance": old_tol[n]} if n in old_tol
+                               else {}),
+                            **({"direction": old_dir[n]} if n in old_dir
                                else {})}
                         for n, e in sorted(benches.items())},
         }

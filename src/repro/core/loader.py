@@ -360,10 +360,16 @@ class PrefetchLoader:
     on CPU, where ``jax.device_put(..., donate=True)`` zero-copy *aliases*
     the source buffer and a reused slot would corrupt earlier batches.
 
-    Exceptions raised in the producer are re-raised in the consumer; the
-    producer thread exits promptly when the consumer stops iterating
-    (``close``) because the bounded queue blocks with a timeout and checks a
-    stop flag.
+    Exceptions raised in the producer are re-raised in the consumer **with
+    the original traceback** (the exception instance travels through the
+    queue, FIFO with the batches staged before it, so already-prepared
+    batches are still delivered first and the error surfaces within one
+    ``next()``). If the producer thread dies without delivering either the
+    end-of-stream sentinel or an exception, the consumer raises
+    ``RuntimeError`` instead of blocking forever. The producer thread exits
+    promptly when the consumer stops iterating (``close``, or abandoning
+    the iterator) because the bounded queue blocks with a timeout and
+    checks a stop flag.
     """
 
     _END = object()
@@ -375,6 +381,8 @@ class PrefetchLoader:
         self.inner = inner
         self._device = device
         self.prefetch = prefetch
+        self._active: list = []  # live (stop, thread) pairs, for close()
+        self._active_lock = threading.Lock()
         if staging is None:
             staging = jax.default_backend() == "gpu"
         self.staging = staging
@@ -416,14 +424,41 @@ class PrefetchLoader:
                 put_or_stop(e)
 
         thread = threading.Thread(target=produce, daemon=True)
+        with self._active_lock:
+            self._active.append((stop, thread))
         thread.start()
         try:
             while True:
-                item = q.get()
+                try:
+                    item = q.get(timeout=0.2)
+                except queue.Empty:
+                    if stop.is_set():  # close() mid-iteration: clean end
+                        return
+                    if not thread.is_alive():
+                        raise RuntimeError(
+                            "PrefetchLoader producer thread died without "
+                            "signalling end-of-stream or an error")
+                    continue
                 if item is self._END:
                     return
                 if isinstance(item, BaseException):
+                    # Re-raising the instance keeps the producer-side
+                    # traceback (it rode along on __traceback__).
                     raise item
                 yield item
         finally:
             stop.set()
+            with self._active_lock:
+                self._active = [a for a in self._active if a[0] is not stop]
+
+    def close(self) -> None:
+        """Stop all producer threads spawned by active iterations and join
+        them. Idempotent: safe to call repeatedly or with no iteration in
+        flight; consumers still blocked in ``next()`` observe a clean end
+        of iteration."""
+        with self._active_lock:
+            active = list(self._active)
+        for stop, thread in active:
+            stop.set()
+        for stop, thread in active:
+            thread.join(timeout=5)

@@ -49,6 +49,15 @@ def _axes_leaf(x) -> bool:
     )
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory so it survives a crash after rename."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(
     ckpt_dir: str,
     step: int,
@@ -58,7 +67,13 @@ def save(
     extra_meta: Optional[Dict[str, Any]] = None,
     keep: int = 3,
 ) -> str:
-    """Synchronous checkpoint write. Returns the checkpoint path."""
+    """Synchronous checkpoint write. Returns the checkpoint path.
+
+    Durability contract: every leaf + the manifest are fsynced inside the
+    tmp dir, the tmp dir itself is fsynced, then a single ``os.rename``
+    publishes it and the parent dir is fsynced — a crash at any point
+    leaves either the previous checkpoint or the new one, never a torn
+    directory that parses as valid."""
     path = os.path.join(ckpt_dir, f"ckpt_{step}")
     tmp = path + ".tmp"
     if os.path.exists(tmp):
@@ -81,20 +96,28 @@ def save(
             # store the raw bits; the true dtype lives in the manifest.
             arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
         fname = f"leaf_{i}.npy"
-        np.save(os.path.join(tmp, fname), arr)
+        fpath = os.path.join(tmp, fname)
+        np.save(fpath, arr)
+        _fsync_path(fpath)
         manifest["leaves"].append({
             "key": key,
             "file": fname,
             "shape": list(arr.shape),
             "dtype": dtype_str,
+            "bytes": os.path.getsize(fpath),  # torn-write detection
             "axes": axes_map.get(key),
         })
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_path(tmp)
 
     if os.path.exists(path):
         shutil.rmtree(path)
     os.rename(tmp, path)  # atomic publish
+    _fsync_path(ckpt_dir)
     _retain(ckpt_dir, keep)
     return path
 
@@ -105,21 +128,50 @@ def _retain(ckpt_dir: str, keep: int) -> None:
         shutil.rmtree(os.path.join(ckpt_dir, f"ckpt_{s}"), ignore_errors=True)
 
 
-def all_steps(ckpt_dir: str) -> List[int]:
+def is_intact(path: str) -> bool:
+    """True iff a checkpoint dir's manifest parses and every leaf file it
+    names exists with the recorded byte size (legacy manifests without a
+    recorded size fall back to an existence check). A dir failing this is
+    *torn* — e.g. a crash mid-write on a filesystem without atomic rename
+    semantics, or post-publish corruption — and is skipped by
+    :func:`latest_step` / default :func:`restore`."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError):
+        return False
+    for leaf in manifest.get("leaves", []):
+        fpath = os.path.join(path, leaf["file"])
+        try:
+            size = os.path.getsize(fpath)
+        except OSError:
+            return False
+        if leaf.get("bytes") is not None and size != leaf["bytes"]:
+            return False
+    return True
+
+
+def all_steps(ckpt_dir: str, intact_only: bool = False) -> List[int]:
+    """Step numbers of checkpoints under ``ckpt_dir`` (``intact_only``
+    filters through :func:`is_intact`)."""
     if not os.path.isdir(ckpt_dir):
         return []
     out = []
     for name in os.listdir(ckpt_dir):
         if name.startswith("ckpt_") and not name.endswith(".tmp"):
             try:
-                out.append(int(name.split("_", 1)[1]))
+                s = int(name.split("_", 1)[1])
             except ValueError:
-                pass
+                continue
+            if intact_only and not is_intact(os.path.join(ckpt_dir, name)):
+                continue
+            out.append(s)
     return out
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    steps = all_steps(ckpt_dir)
+    """Newest *intact* step (torn checkpoints never win the resume race)."""
+    steps = all_steps(ckpt_dir, intact_only=True)
     return max(steps) if steps else None
 
 
@@ -138,10 +190,15 @@ def restore(ckpt_dir: str, step: Optional[int] = None, *, target=None,
     from repro.distributed.sharding import logical_sharding
 
     if step is None:
-        step = latest_step(ckpt_dir)
+        step = latest_step(ckpt_dir)  # newest intact — skips torn dirs
         if step is None:
-            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+            raise FileNotFoundError(f"no intact checkpoints in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"ckpt_{step}")
+    if not is_intact(path):
+        raise RuntimeError(
+            f"checkpoint {path} is torn/corrupt (manifest or leaf files "
+            "missing/truncated); omit `step` to fall back to the newest "
+            "intact checkpoint")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
 
@@ -189,6 +246,7 @@ class AsyncCheckpointer:
         self.keep = keep
         self._q: "queue.Queue" = queue.Queue()
         self._err: Optional[BaseException] = None
+        self._closed = False
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
@@ -206,18 +264,31 @@ class AsyncCheckpointer:
             finally:
                 self._q.task_done()
 
-    def save(self, step: int, tree, *, logical_axes=None, extra_meta=None):
+    def _check_worker(self):
+        """Surface a buffered worker failure (or a dead worker thread) on
+        the *caller's* thread — errors are never silently dropped."""
         if self._err:
             raise RuntimeError("async checkpoint write failed") from self._err
+        if not self._thread.is_alive() and not self._closed:
+            raise RuntimeError("async checkpoint worker thread died")
+
+    def save(self, step: int, tree, *, logical_axes=None, extra_meta=None):
+        self._check_worker()
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
         self._q.put((step, host_tree, logical_axes, extra_meta))
 
     def wait(self):
-        self._q.join()
-        if self._err:
-            raise RuntimeError("async checkpoint write failed") from self._err
+        # A bare q.join() deadlocks forever if the worker dies hard (its
+        # task_done never comes), so poll with a liveness check instead.
+        with self._q.all_tasks_done:
+            while self._q.unfinished_tasks:
+                if not self._thread.is_alive():
+                    break
+                self._q.all_tasks_done.wait(timeout=0.1)
+        self._check_worker()
 
     def close(self):
         self.wait()
+        self._closed = True
         self._q.put(None)
         self._thread.join(timeout=10)

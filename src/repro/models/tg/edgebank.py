@@ -25,13 +25,19 @@ class EdgeBank:
         return src.astype(np.int64) * self.num_nodes + dst.astype(np.int64)
 
     def update(self, src: np.ndarray, dst: np.ndarray, t: np.ndarray) -> None:
+        src, dst, t = (np.atleast_1d(np.asarray(a)) for a in (src, dst, t))
         for k, tt in zip(self._key(src, dst).tolist(), t.tolist()):
             self._seen[k] = tt
         # undirected symmetrization (the standard protocol)
         for k, tt in zip(self._key(dst, src).tolist(), t.tolist()):
             self._seen[k] = tt
 
+    # openDG-style online aliases: a live service interleaves single-edge
+    # memory updates with link queries, so expose the streaming names too.
+    update_memory = update
+
     def predict(self, src: np.ndarray, dst: np.ndarray, t: np.ndarray) -> np.ndarray:
+        src, dst, t = (np.atleast_1d(np.asarray(a)) for a in (src, dst, t))
         keys = self._key(src, dst)
         out = np.zeros(len(keys), dtype=np.float32)
         for i, (k, tt) in enumerate(zip(keys.tolist(), t.tolist())):
@@ -42,9 +48,29 @@ class EdgeBank:
                 out[i] = 1.0
         return out
 
+    # Streaming alias of :meth:`predict` (openDG ``EdgeBankPredictor`` API).
+    predict_link = predict
+
     def predict_many(self, src: np.ndarray, dst_many: np.ndarray, t: np.ndarray) -> np.ndarray:
         """One-vs-many scoring: dst_many (B, M) -> (B, M)."""
         B, M = dst_many.shape
         flat_src = np.repeat(src, M)
         flat_t = np.repeat(t, M)
         return self.predict(flat_src, dst_many.reshape(-1), flat_t).reshape(B, M)
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Canonical checkpoint payload: sorted (key, last-seen-time) arrays.
+
+        Sorting by key makes the layout independent of insertion order, so
+        two banks holding the same memory serialize bit-identically.
+        """
+        keys = np.fromiter(self._seen.keys(), dtype=np.int64, count=len(self._seen))
+        times = np.fromiter(self._seen.values(), dtype=np.int64, count=len(self._seen))
+        order = np.argsort(keys, kind="stable")
+        return {"keys": keys[order], "times": times[order]}
+
+    def load_state_dict(self, state: dict[str, np.ndarray]) -> None:
+        """Inverse of :meth:`state_dict`; replaces the current memory."""
+        keys = np.asarray(state["keys"], dtype=np.int64)
+        times = np.asarray(state["times"], dtype=np.int64)
+        self._seen = dict(zip(keys.tolist(), times.tolist()))

@@ -1,3 +1,10 @@
 from repro.serve.decode import make_prefill_step, make_decode_step, generate
+from repro.serve.faults import FaultInjector, ModelFault, TransferFault
+from repro.serve.graph_service import (OnlineGraphService, PendingResponse,
+                                       Response, Status)
 
-__all__ = ["make_prefill_step", "make_decode_step", "generate"]
+__all__ = [
+    "make_prefill_step", "make_decode_step", "generate",
+    "FaultInjector", "ModelFault", "TransferFault",
+    "OnlineGraphService", "PendingResponse", "Response", "Status",
+]

@@ -1,0 +1,540 @@
+"""Fault-tolerant online serving for temporal graphs.
+
+:class:`OnlineGraphService` turns the training-side CTDG machinery into a
+live inference service:
+
+* **Event ingest** — live ``(src, dst, t, eid)`` edge events flow through a
+  bounded queue (the ``PrefetchLoader`` backpressure idiom: blocking put,
+  stop-aware worker) into the device-resident
+  :class:`~repro.core.device_sampler.DeviceRecencySampler` *and* an
+  :class:`~repro.models.tg.edgebank.EdgeBank` kept warm as the fallback
+  tier. Duplicate events (same eid) are dropped; out-of-order events are
+  applied and counted.
+* **Deadline-aware microbatching** — ``predict_link`` / ``embed`` requests
+  carry a deadline; a batcher thread flushes on size-or-timeout; requests
+  already past their deadline at flush time are shed with an explicit
+  :attr:`Status.REJECTED` (never silently dropped, never run).
+* **Graceful degradation** — a count-based circuit breaker plus an EWMA
+  latency estimate route traffic: healthy + under budget → learned model
+  (:attr:`Status.OK`); unhealthy or over budget → EdgeBank answers link
+  queries (:attr:`Status.DEGRADED`). Every ``probe_every``-th degraded
+  flush probes the model so the breaker can close again. Embeddings have
+  no non-parametric fallback and fail explicitly while degraded.
+* **Crash safety** — :meth:`OnlineGraphService.snapshot` drains in-flight
+  events and writes sampler buffers + EdgeBank memory + the event cursor
+  through :mod:`repro.distributed.checkpoint`; :meth:`restore` brings a
+  fresh process back bit-identical to an uninterrupted one.
+
+All chaos behavior is injectable via
+:class:`~repro.serve.faults.FaultInjector` so the failure paths are tested
+deterministically, not hoped for.
+"""
+
+from __future__ import annotations
+
+import enum
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_sampler import DeviceRecencySampler
+from repro.distributed import checkpoint as ckpt
+from repro.models.tg.common import link_decoder, link_decoder_init
+from repro.models.tg.edgebank import EdgeBank
+from repro.nn.linear import dense, dense_init
+from repro.nn.time_encode import time_encode, time_encode_init
+
+
+class Status(enum.Enum):
+    """Outcome of a serving request.
+
+    ``OK``: answered by the learned model. ``DEGRADED``: answered by the
+    EdgeBank fallback tier. ``REJECTED``: shed because its deadline passed
+    before execution. ``FAILED``: errored with no fallback (embedding while
+    degraded, fault with EdgeBank also unavailable, or service shutdown).
+    """
+
+    OK = "ok"
+    DEGRADED = "degraded"
+    REJECTED = "rejected"
+    FAILED = "failed"
+
+
+@dataclass
+class Response:
+    """Result of a serving request.
+
+    ``tier`` names who answered ("model" or "edgebank"); ``latency_s`` is
+    enqueue-to-resolve wall time; ``detail`` carries the error message for
+    REJECTED/FAILED responses.
+    """
+
+    status: Status
+    score: Optional[float] = None
+    embedding: Optional[np.ndarray] = None
+    tier: Optional[str] = None
+    latency_s: float = 0.0
+    detail: str = ""
+
+
+class PendingResponse:
+    """Handle for an in-flight request; resolved by the batcher thread."""
+
+    def __init__(self):
+        self._ev = threading.Event()
+        self._resp: Optional[Response] = None
+
+    def done(self) -> bool:
+        """True once a Response has been attached."""
+        return self._ev.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Response:
+        """Block until resolved (raises TimeoutError after ``timeout``)."""
+        if not self._ev.wait(timeout):
+            raise TimeoutError("serving request not resolved in time")
+        assert self._resp is not None
+        return self._resp
+
+    def _resolve(self, resp: Response) -> None:
+        self._resp = resp
+        self._ev.set()
+
+
+@dataclass
+class _Request:
+    kind: str  # "link" | "embed"
+    src: int
+    dst: int  # unused for embed
+    t: int
+    deadline: float  # absolute monotonic time; inf = no deadline
+    enqueue_t: float
+    pending: PendingResponse = field(default_factory=PendingResponse)
+
+
+def learned_link_params(key, num_nodes: int, d_model: int = 32,
+                        time_dim: int = 8) -> dict:
+    """Init params for the default learned tier: a node-embedding table, a
+    Time2Vec encoder, a neighbor-aggregation projection, and the shared
+    2-layer MLP link decoder."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": jax.random.normal(k1, (num_nodes + 1, d_model), jnp.float32) * 0.1,
+        "time": time_encode_init(k2, time_dim),
+        "proj": dense_init(k3, d_model + time_dim, d_model),
+        "dec": link_decoder_init(k4, d_model),
+    }
+
+
+def learned_embed(params, seeds, t, nbr_ids, nbr_times, mask):
+    """Embed seeds at query times from their recency neighbor block:
+    node embedding + tanh-projected mean of [neighbor embedding ; Time2Vec
+    of the time gap], masked to valid neighbors. Row-wise (batch-size
+    independent), which is what makes serving results reproducible across
+    different microbatch compositions."""
+    base = params["embed"][seeds]
+    ids = jnp.where(mask, nbr_ids, 0)
+    dt = jnp.where(mask, t[:, None] - nbr_times, 0)
+    nh = jnp.concatenate(
+        [params["embed"][ids], time_encode(params["time"], dt)], axis=-1)
+    nh = nh * mask[:, :, None].astype(nh.dtype)
+    agg = nh.sum(axis=1) / jnp.maximum(mask.sum(axis=1, keepdims=True), 1)
+    return base + jnp.tanh(dense(params["proj"], agg))
+
+
+@jax.jit
+def _link_scores(params, seeds, t, nbr_ids, nbr_times, mask):
+    h = learned_embed(params, seeds, t, nbr_ids, nbr_times, mask)
+    B = seeds.shape[0] // 2
+    logit = link_decoder(params["dec"], h[:B], h[B:])
+    return jax.nn.sigmoid(logit)
+
+
+_embed_jit = jax.jit(learned_embed)
+
+_STOP = object()
+
+
+class OnlineGraphService:
+    """Live temporal-graph inference with deadline-aware microbatching,
+    EdgeBank graceful degradation, and crash-safe snapshots.
+
+    Two daemon threads run per service: an ingest worker applying events
+    from a bounded queue to the sampler + EdgeBank, and a batcher flushing
+    the request queue on size-or-timeout. ``stop()`` (or exiting the
+    context manager) shuts both down and fails outstanding requests rather
+    than leaving callers blocked.
+    """
+
+    def __init__(self, num_nodes: int, k: int = 8, *,
+                 seed: int = 0,
+                 model_fn: Optional[Callable] = None,
+                 embed_fn: Optional[Callable] = None,
+                 max_batch: int = 32,
+                 flush_interval: float = 0.005,
+                 queue_depth: int = 256,
+                 latency_budget: Optional[float] = None,
+                 fail_threshold: int = 3,
+                 probe_every: int = 8,
+                 edgebank_window: Optional[int] = None,
+                 fault_injector=None):
+        """``model_fn``/``embed_fn`` override the learned tier (signature of
+        :func:`_link_scores` / :func:`learned_embed` minus ``params``);
+        ``latency_budget`` (seconds) bounds the EWMA model latency before
+        degrading; ``fail_threshold`` consecutive model faults open the
+        circuit breaker; every ``probe_every``-th degraded flush probes the
+        model to let it close."""
+        self.num_nodes = int(num_nodes)
+        self.k = int(k)
+        self.max_batch = int(max_batch)
+        self.flush_interval = float(flush_interval)
+        self.latency_budget = latency_budget
+        self.fail_threshold = int(fail_threshold)
+        self.probe_every = max(1, int(probe_every))
+
+        self.sampler = DeviceRecencySampler(self.num_nodes, self.k)
+        self.edgebank = EdgeBank(self.num_nodes, window=edgebank_window)
+        self.params = learned_link_params(jax.random.PRNGKey(seed),
+                                          self.num_nodes)
+        score = model_fn or (lambda *a: _link_scores(self.params, *a))
+        embed = embed_fn or (lambda *a: _embed_jit(self.params, *a))
+        transfer = lambda x: np.ascontiguousarray(x)  # noqa: E731
+        if fault_injector is not None:
+            score = fault_injector.wrap_model(score)
+            embed = fault_injector.wrap_model(embed)
+            transfer = fault_injector.wrap_transfer(transfer)
+        self._score_fn, self._embed_fn, self._transfer = score, embed, transfer
+
+        self._state_lock = threading.Lock()
+        self._applied: set[int] = set()
+        self._last_t = -(2 ** 62)
+        self._event_cursor = 0  # events applied (post-dedup)
+        self.stats = {"ok": 0, "degraded": 0, "rejected": 0, "failed": 0,
+                      "events_applied": 0, "events_deduped": 0,
+                      "events_out_of_order": 0, "model_errors": 0,
+                      "probes": 0}
+
+        self._lat_ewma: Optional[float] = None
+        self._failures = 0
+        self._degraded_flushes = 0
+
+        self._evq: queue.Queue = queue.Queue(maxsize=int(queue_depth))
+        self._reqq: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._ingest_thread = threading.Thread(
+            target=self._ingest_loop, daemon=True, name="ogs-ingest")
+        self._batch_thread = threading.Thread(
+            target=self._batch_loop, daemon=True, name="ogs-batch")
+        self._ingest_thread.start()
+        self._batch_thread.start()
+
+    # ------------------------------------------------------------- ingest
+
+    def ingest(self, src: int, dst: int, t: int, eid: int = -1) -> None:
+        """Enqueue one live edge event (blocking put = backpressure: a
+        producer outrunning the ingest worker stalls instead of ballooning
+        memory, mirroring ``PrefetchLoader``)."""
+        self._check_alive()
+        self._evq.put(("ev", (int(src), int(dst), int(t), int(eid))))
+
+    def ingest_many(self, events: Iterable[Sequence[int]]) -> None:
+        """Enqueue a sequence of ``(src, dst, t, eid)`` events in order."""
+        for ev in events:
+            self.ingest(*ev)
+
+    def drain(self) -> None:
+        """Block until every event enqueued so far has been applied.
+
+        The sequencing barrier for read-your-writes tests and for
+        :meth:`snapshot` (the event cursor must be quiescent to be
+        meaningful)."""
+        self._check_alive()
+        barrier = threading.Event()
+        self._evq.put(("barrier", barrier))
+        if not barrier.wait(timeout=60):
+            raise RuntimeError("ingest drain timed out")
+
+    def _ingest_loop(self) -> None:
+        while True:
+            item = self._evq.get()
+            if item is _STOP:
+                return
+            kind, payload = item
+            if kind == "barrier":
+                payload.set()
+                continue
+            src, dst, t, eid = payload
+            if eid >= 0 and eid in self._applied:
+                self.stats["events_deduped"] += 1
+                continue
+            if t < self._last_t:
+                self.stats["events_out_of_order"] += 1
+            self._last_t = max(self._last_t, t)
+            if eid >= 0:
+                self._applied.add(eid)
+            with self._state_lock:
+                self.sampler.update(np.array([src]), np.array([dst]),
+                                    np.array([t]), np.array([eid]))
+                self.edgebank.update_memory(src, dst, t)
+            self._event_cursor += 1
+            self.stats["events_applied"] += 1
+
+    # ------------------------------------------------------------ serving
+
+    def submit_link(self, src: int, dst: int, t: int,
+                    timeout: Optional[float] = None) -> PendingResponse:
+        """Queue a link prediction; ``timeout`` (seconds) sets the deadline
+        after which the request is shed as REJECTED instead of executed."""
+        return self._submit("link", src, dst, t, timeout)
+
+    def submit_embed(self, node: int, t: int,
+                     timeout: Optional[float] = None) -> PendingResponse:
+        """Queue an embedding request (learned tier only — no fallback)."""
+        return self._submit("embed", node, node, t, timeout)
+
+    def predict_link(self, src: int, dst: int, t: int,
+                     timeout: Optional[float] = None) -> Response:
+        """Synchronous :meth:`submit_link`: blocks until resolved."""
+        return self.submit_link(src, dst, t, timeout).result(
+            None if timeout is None else timeout + 10.0)
+
+    def embed(self, node: int, t: int,
+              timeout: Optional[float] = None) -> Response:
+        """Synchronous :meth:`submit_embed`: blocks until resolved."""
+        return self.submit_embed(node, t, timeout).result(
+            None if timeout is None else timeout + 10.0)
+
+    def _submit(self, kind, src, dst, t, timeout) -> PendingResponse:
+        self._check_alive()
+        now = time.monotonic()
+        deadline = float("inf") if timeout is None else now + timeout
+        req = _Request(kind, int(src), int(dst), int(t), deadline, now)
+        self._reqq.put(req)
+        return req.pending
+
+    def _batch_loop(self) -> None:
+        pending: list[_Request] = []
+        while True:
+            if pending:
+                wait = (pending[0].enqueue_t + self.flush_interval
+                        - time.monotonic())
+            else:
+                wait = 0.05
+            item = None
+            if wait > 0:
+                try:
+                    item = self._reqq.get(timeout=wait)
+                except queue.Empty:
+                    pass
+            else:
+                try:
+                    item = self._reqq.get_nowait()
+                except queue.Empty:
+                    pass
+            if item is _STOP:
+                break
+            if item is not None:
+                pending.append(item)
+            if pending and (len(pending) >= self.max_batch
+                            or time.monotonic() - pending[0].enqueue_t
+                            >= self.flush_interval):
+                batch, pending = pending[:self.max_batch], pending[self.max_batch:]
+                try:
+                    self._flush(batch)
+                except BaseException as e:  # never let the batcher die
+                    for r in batch:
+                        if not r.pending.done():
+                            self._resolve(r, Response(
+                                Status.FAILED, detail=f"flush error: {e!r}"))
+        # shutdown: fail everything still queued or held
+        leftovers = pending
+        while True:
+            try:
+                item = self._reqq.get_nowait()
+            except queue.Empty:
+                break
+            if item is not _STOP:
+                leftovers.append(item)
+        for r in leftovers:
+            self._resolve(r, Response(Status.FAILED, detail="service stopped"))
+
+    def _resolve(self, req: _Request, resp: Response) -> None:
+        resp.latency_s = time.monotonic() - req.enqueue_t
+        self.stats[resp.status.value] += 1
+        req.pending._resolve(resp)
+
+    def _choose_tier(self) -> str:
+        if self._failures >= self.fail_threshold or self._over_budget():
+            self._degraded_flushes += 1
+            if self._degraded_flushes % self.probe_every == 0:
+                self.stats["probes"] += 1
+                return "model"  # probe so the breaker can close
+            return "edgebank"
+        return "model"
+
+    def _over_budget(self) -> bool:
+        return (self.latency_budget is not None
+                and self._lat_ewma is not None
+                and self._lat_ewma > self.latency_budget)
+
+    def _flush(self, batch: list[_Request]) -> None:
+        now = time.monotonic()
+        live = []
+        for r in batch:
+            if now > r.deadline:
+                self._resolve(r, Response(Status.REJECTED,
+                                          detail="deadline exceeded"))
+            else:
+                live.append(r)
+        if not live:
+            return
+        links = [r for r in live if r.kind == "link"]
+        embeds = [r for r in live if r.kind == "embed"]
+        tier = self._choose_tier()
+
+        if embeds:
+            if tier == "model":
+                try:
+                    embs = self._run_embeds(embeds)
+                    for r, e in zip(embeds, embs):
+                        self._resolve(r, Response(Status.OK, embedding=e,
+                                                  tier="model"))
+                    self._failures = 0
+                except Exception as e:
+                    self._record_failure()
+                    for r in embeds:
+                        self._resolve(r, Response(
+                            Status.FAILED, detail=f"model error: {e!r}"))
+            else:
+                for r in embeds:
+                    self._resolve(r, Response(
+                        Status.FAILED,
+                        detail="degraded: no fallback tier for embeddings"))
+        if not links:
+            return
+
+        if tier == "model":
+            try:
+                scores = self._run_links(links)
+                for r, s in zip(links, scores):
+                    self._resolve(r, Response(Status.OK, score=float(s),
+                                              tier="model"))
+                self._failures = 0
+                return
+            except Exception:
+                self._record_failure()
+                tier = "edgebank"  # fall through to the warm tier
+        src = np.array([r.src for r in links], np.int64)
+        dst = np.array([r.dst for r in links], np.int64)
+        t = np.array([r.t for r in links], np.int64)
+        with self._state_lock:
+            scores = self.edgebank.predict_link(src, dst, t)
+        for r, s in zip(links, scores):
+            self._resolve(r, Response(Status.DEGRADED, score=float(s),
+                                      tier="edgebank"))
+
+    def _record_failure(self) -> None:
+        self._failures += 1
+        self.stats["model_errors"] += 1
+
+    def _run_links(self, links: list[_Request]) -> np.ndarray:
+        B = len(links)
+        seeds = self._transfer(np.array(
+            [r.src for r in links] + [r.dst for r in links], np.int32))
+        t = self._transfer(np.array([r.t for r in links] * 2, np.int32))
+        t0 = time.perf_counter()
+        with self._state_lock:
+            blk = self.sampler.sample(seeds, query_t=t)
+        scores = np.asarray(jax.device_get(self._score_fn(
+            seeds, jnp.asarray(t), blk.nbr_ids, blk.nbr_times, blk.mask)))
+        assert scores.shape == (B,)
+        self._observe_latency(time.perf_counter() - t0)
+        return scores
+
+    def _run_embeds(self, embeds: list[_Request]) -> list[np.ndarray]:
+        seeds = self._transfer(np.array([r.src for r in embeds], np.int32))
+        t = self._transfer(np.array([r.t for r in embeds], np.int32))
+        t0 = time.perf_counter()
+        with self._state_lock:
+            blk = self.sampler.sample(seeds, query_t=t)
+        h = np.asarray(jax.device_get(self._embed_fn(
+            seeds, jnp.asarray(t), blk.nbr_ids, blk.nbr_times, blk.mask)))
+        self._observe_latency(time.perf_counter() - t0)
+        return [h[i] for i in range(h.shape[0])]
+
+    def _observe_latency(self, lat: float) -> None:
+        self._lat_ewma = (lat if self._lat_ewma is None
+                          else 0.7 * self._lat_ewma + 0.3 * lat)
+
+    # --------------------------------------------------------- durability
+
+    def snapshot(self, ckpt_dir: str, step: int = 0) -> None:
+        """Crash-safe snapshot: drain in-flight events, then write sampler
+        buffers + EdgeBank memory + the event cursor atomically through
+        :mod:`repro.distributed.checkpoint`."""
+        self.drain()
+        with self._state_lock:
+            applied = np.fromiter(sorted(self._applied), dtype=np.int64,
+                                  count=len(self._applied))
+            payload = {
+                "sampler": self.sampler.state_dict(),
+                "edgebank": self.edgebank.state_dict(),
+                "cursor": {
+                    "applied_eids": applied,
+                    "last_t": np.asarray(self._last_t, np.int64),
+                    "event_cursor": np.asarray(self._event_cursor, np.int64),
+                },
+            }
+        ckpt.save(ckpt_dir, step, payload)
+
+    def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        """Load a :meth:`snapshot` back into this service (inverse of
+        snapshot; returns the restored step). The learned tier's params are
+        re-derived from ``seed``, so sampler + EdgeBank + cursor are the
+        full mutable state and a restored service answers bit-identically
+        to one that never died."""
+        flat, got_step, _ = ckpt.restore(ckpt_dir, target=None, step=step)
+        groups: dict[str, dict] = {}
+        for k, v in flat.items():
+            g, name = k.split("/", 1)
+            groups.setdefault(g, {})[name] = v
+        with self._state_lock:
+            self.sampler.load_state_dict(groups["sampler"])
+            self.edgebank.load_state_dict(groups["edgebank"])
+            cur = groups["cursor"]
+            self._applied = set(np.asarray(cur["applied_eids"]).tolist())
+            self._last_t = int(cur["last_t"])
+            self._event_cursor = int(cur["event_cursor"])
+        return got_step
+
+    # ---------------------------------------------------------- lifecycle
+
+    def _check_alive(self) -> None:
+        if self._stop.is_set():
+            raise RuntimeError("OnlineGraphService is stopped")
+
+    def stop(self) -> None:
+        """Idempotent shutdown: stop both workers and fail any outstanding
+        requests (callers blocked in ``result()`` wake with FAILED rather
+        than deadlocking)."""
+        if self._stop.is_set():
+            return
+        self._stop.set()
+        self._evq.put(_STOP)
+        self._reqq.put(_STOP)
+        self._ingest_thread.join(timeout=10)
+        self._batch_thread.join(timeout=10)
+
+    def __enter__(self):
+        """Context-manager entry (service threads already run)."""
+        return self
+
+    def __exit__(self, *exc):
+        """Context-manager exit: :meth:`stop`."""
+        self.stop()
+        return False

@@ -748,7 +748,41 @@ class DTDGLinkPipeline(SnapshotPairPipeline):
         self.manager.reset_state()
         self.model_state = snapshot.init_state(self.model_name, self.cfg)
 
+    @property
+    def snapshot_cursor(self) -> int:
+        """Next train snapshot pair to run — the mid-epoch resume cursor
+        carried in checkpoints as ``pipeline/snapshot_cursor``."""
+        return self._cursor
+
     # ------------------------------------------------------------------
+    def train_chunk(self) -> Optional[list]:
+        """Run ONE compiled chunk from the current snapshot cursor.
+
+        The kill/resume granule of the scan pipeline: each call scans the
+        next ``chunk_size`` snapshot pairs, advances ``_cursor`` (the value
+        checkpointed as ``pipeline.snapshot_cursor``), and returns the
+        chunk's per-pair losses. Returns ``None`` once the train split is
+        exhausted (and zeroes the cursor so the next call starts a fresh
+        epoch). A checkpoint written between calls restores to exactly this
+        boundary, which is what makes mid-epoch kill + resume bit-identical
+        to an uninterrupted run. Compiled mode only."""
+        if not self.compiled:
+            raise RuntimeError("train_chunk requires compiled=True")
+        lo, hi = self._split_pairs("train")
+        start = max(self._cursor, lo)
+        if start >= hi:
+            self._cursor = 0
+            return None
+        if self._cursor == 0:
+            self.reset_epoch_state()
+        chi = min(start + (self.chunk_size or max(hi - lo, 1)), hi)
+        xs = self._pair_xs(start, chi, self.num_negatives)
+        (self.params, self.opt_state, self.model_state), ls = \
+            self._train_scan(self.params, self.opt_state,
+                             self.model_state, xs)
+        self._cursor = chi
+        return [float(l) for l in np.asarray(ls)]
+
     def train_epoch(self) -> Tuple[float, float]:
         """One epoch over the train split. Returns (mean loss, seconds).
 
@@ -763,13 +797,11 @@ class DTDGLinkPipeline(SnapshotPairPipeline):
         t0 = time.perf_counter()
         losses = []
         if self.compiled:
-            for clo, chi in self._chunks(start, hi):
-                xs = self._pair_xs(clo, chi, self.num_negatives)
-                (self.params, self.opt_state, self.model_state), ls = \
-                    self._train_scan(self.params, self.opt_state,
-                                     self.model_state, xs)
-                losses.extend(float(l) for l in np.asarray(ls))
-                self._cursor = chi
+            while True:
+                chunk_losses = self.train_chunk()
+                if chunk_losses is None:
+                    break
+                losses.extend(chunk_losses)
         else:
             with self.manager.activate(TRAIN_KEY):
                 for p in range(start, hi):

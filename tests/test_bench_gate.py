@@ -1,0 +1,50 @@
+"""Regression-gate semantics: direction-aware comparison (lower-better
+latencies vs higher-better rates) and the graceful skip for bench names
+with no baseline entry."""
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _compare(current, baseline, tolerance=2.0):
+    sys.path.insert(0, str(ROOT / "scripts"))
+    try:
+        from check_bench_regression import compare
+    finally:
+        sys.path.pop(0)
+    return compare(current, baseline, tolerance)
+
+
+def _cur(name, us):
+    return {name: [{"us": us, "runs": 1, "backend": "cpu",
+                    "device_count": 1}]}
+
+
+def _base(us, **kw):
+    return {"us": us, "backend": "cpu", "device_count": 1, **kw}
+
+
+def test_lower_is_better_default():
+    _, reg = _compare(_cur("lat", 30.0), {"lat": _base(10.0)})
+    assert reg and reg[0][0] == "lat"
+    _, reg = _compare(_cur("lat", 15.0), {"lat": _base(10.0)})
+    assert reg == []
+
+
+def test_higher_is_better_direction():
+    # rate collapsing below baseline/tolerance = regression
+    _, reg = _compare(_cur("qps", 4.0), {"qps": _base(10.0,
+                                                     direction="higher")})
+    assert reg and reg[0][0] == "qps"
+    # a *slower* latency-style ratio that would fail lower-better passes
+    _, reg = _compare(_cur("qps", 30.0), {"qps": _base(10.0,
+                                                       direction="higher")})
+    assert reg == []
+
+
+def test_unknown_bench_name_skips_gracefully():
+    rows, reg = _compare(_cur("brand_new_bench", 5.0), {})
+    assert reg == []
+    assert rows[0][4] == "new (no baseline)"

@@ -92,3 +92,69 @@ def test_sharded_sampler_bundle_is_canonical_and_reshards(tmp_path):
     np.testing.assert_array_equal(np.asarray(a.nbr_ids), np.asarray(b.nbr_ids))
     np.testing.assert_array_equal(np.asarray(a.nbr_eids), np.asarray(b.nbr_eids))
     np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+
+
+def test_truncated_checkpoint_falls_back_to_newest_intact(tmp_path):
+    """A torn checkpoint (truncated leaf file) must be skipped by
+    latest_step/restore, falling back to the newest intact step; asking
+    for the torn step explicitly raises a clear error."""
+    tree = _tree()
+    ckpt.save(str(tmp_path), 1, tree, extra_meta={"s": 1})
+    ckpt.save(str(tmp_path), 2, tree, extra_meta={"s": 2})
+    # Truncate a leaf of step 2 (crash mid-write / bitrot post-publish).
+    leaf = os.path.join(tmp_path, "ckpt_2", "leaf_0.npy")
+    with open(leaf, "r+b") as f:
+        f.truncate(os.path.getsize(leaf) // 2)
+    assert not ckpt.is_intact(os.path.join(tmp_path, "ckpt_2"))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    restored, step, extra = ckpt.restore(str(tmp_path), target=tree)
+    assert step == 1 and extra["s"] == 1
+    with pytest.raises(RuntimeError, match="torn"):
+        ckpt.restore(str(tmp_path), step=2, target=tree)
+
+
+def test_missing_leaf_detected_as_torn(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 0, tree)
+    ckpt.save(str(tmp_path), 5, tree)
+    os.remove(os.path.join(tmp_path, "ckpt_5", "leaf_1.npy"))
+    assert ckpt.latest_step(str(tmp_path)) == 0
+    assert sorted(ckpt.all_steps(str(tmp_path))) == [0, 5]  # raw listing
+    assert ckpt.all_steps(str(tmp_path), intact_only=True) == [0]
+
+
+def test_async_checkpointer_surfaces_worker_failure(tmp_path):
+    """A failed background write must raise on the NEXT save()/wait(),
+    never be dropped."""
+    w = ckpt.AsyncCheckpointer(str(tmp_path / "sub"), keep=2)
+    w.save(0, _tree())
+    w.wait()
+    # Make the next write fail: the ckpt root becomes a regular file.
+    import shutil
+    shutil.rmtree(tmp_path / "sub")
+    (tmp_path / "sub").write_text("not a directory")
+    w.save(1, _tree())
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        w.wait()
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        w.save(2, _tree())
+
+
+def test_async_checkpointer_dead_worker_raises_not_hangs(tmp_path):
+    """wait() must not block forever when the worker thread has died hard
+    (the old bare q.join() would)."""
+    w = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    w.save(0, _tree())
+    w.wait()
+    w._thread.join(timeout=0.1)  # ensure no task in flight
+    # Simulate a hard worker death with an item still queued.
+    w._q.put((1, {"x": np.zeros(2)}, None, None))
+    orig = w._thread
+    class Dead:
+        @staticmethod
+        def is_alive():
+            return False
+    w._thread = Dead()
+    with pytest.raises(RuntimeError, match="worker thread died"):
+        w.wait()
+    w._thread = orig

@@ -18,6 +18,7 @@ def test_readme_and_docs_exist():
     assert (ROOT / "docs" / "dtdg.md").exists()
     assert (ROOT / "docs" / "experiment.md").exists()
     assert (ROOT / "docs" / "sharding.md").exists()
+    assert (ROOT / "docs" / "serving.md").exists()
 
 
 def test_relative_doc_links_resolve():
@@ -57,6 +58,8 @@ DOCUMENTED_MODULES = [
     "repro.train.nodeprop",
     "repro.tg.specs",
     "repro.tg.experiment",
+    "repro.serve.graph_service",
+    "repro.serve.faults",
 ]
 
 

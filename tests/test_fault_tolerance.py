@@ -58,3 +58,36 @@ def test_tg_workload_resume(tmp_path):
     assert out.returncode == 0, out.stderr[-2000:]
     assert "[resume]" in out.stdout
     assert "final test MRR" in out.stdout
+
+
+def test_dtdg_mid_epoch_resume_is_deterministic(tmp_path):
+    """DTDG quadrant of the kill/resume story: the scan-compiled snapshot
+    pipeline checkpoints its mid-epoch snapshot_cursor after every chunk;
+    killing after N chunks and resuming must land on the exact chunk
+    boundary and produce a bit-identical final test MRR."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    base = [sys.executable, "-m", "repro.launch.train", "--workload", "dtdg",
+            "--model", "gclstm", "--dataset", "tiny", "--data-scale", "0.3",
+            "--epochs", "2", "--chunk-size", "4", "--discretization", "h"]
+
+    def run(ckpt_dir, extra):
+        return subprocess.run(base + ["--ckpt-dir", str(ckpt_dir)] + extra,
+                              capture_output=True, text=True, timeout=520,
+                              env=env, cwd=REPO)
+
+    out = run(tmp_path / "clean", [])
+    assert out.returncode == 0, out.stderr[-2000:]
+    final_clean = [l for l in out.stdout.splitlines()
+                   if "final test MRR" in l][-1]
+
+    # kill after 3 chunks (mid-epoch: each epoch has >3 chunks), resume
+    out = run(tmp_path / "crash", ["--simulate-failure", "3"])
+    assert out.returncode == 42
+    assert "failure-injection" in out.stdout
+    out = run(tmp_path / "crash", ["--resume"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "[resume] restored step" in out.stdout
+    assert "cursor" in out.stdout  # resumed mid-epoch, not at a boundary
+    final_crash = [l for l in out.stdout.splitlines()
+                   if "final test MRR" in l][-1]
+    assert final_clean == final_crash  # bit-identical

@@ -334,3 +334,72 @@ def test_staging_pool_slot_rotation_and_dtype():
     assert c is a  # wrapped around to the first slot
     with pytest.raises(ValueError):
         _HostStagingPool(1)
+
+
+def test_prefetch_loader_exception_keeps_original_traceback():
+    """A hook raising mid-stream surfaces within one next(), carrying the
+    producer-side frames (the raise site is debuggable, not swallowed)."""
+    import traceback
+
+    from repro.core import PrefetchLoader
+    from repro.core.batch import Batch
+
+    def _hook_that_raises():
+        raise ValueError("hook exploded")
+
+    def gen():
+        yield Batch({"src": np.arange(3)})
+        _hook_that_raises()
+
+    class G:
+        def __iter__(self):
+            return gen()
+
+    it = iter(PrefetchLoader(G()))
+    next(it)  # the staged batch arrives first (FIFO with the error)
+    with pytest.raises(ValueError, match="hook exploded") as ei:
+        next(it)  # the error surfaces within ONE next()
+    frames = traceback.extract_tb(ei.value.__traceback__)
+    assert any(f.name == "_hook_that_raises" for f in frames)
+
+
+def test_prefetch_loader_dead_producer_raises_not_hangs(monkeypatch):
+    """A producer thread dying without delivering the end-of-stream
+    sentinel or an error must surface as a RuntimeError on the consumer
+    side instead of blocking forever."""
+    import threading
+
+    from repro.core import PrefetchLoader
+
+    class G:
+        def __iter__(self):
+            return iter(())
+
+    pre = PrefetchLoader(G())
+    it = iter(pre)
+    # Hard death: the producer thread never runs at all, so neither the
+    # END sentinel nor an exception ever reaches the queue.
+    monkeypatch.setattr(threading.Thread, "start", lambda self: None)
+    with pytest.raises(RuntimeError, match="producer thread died"):
+        next(it)
+
+
+def test_prefetch_loader_close_is_idempotent():
+    from repro.core import PrefetchLoader
+    from repro.core.batch import Batch
+
+    def gen():
+        for i in range(1000):
+            yield Batch({"src": np.arange(3) + i})
+
+    class G:
+        def __iter__(self):
+            return gen()
+
+    pre = PrefetchLoader(G(), prefetch=2)
+    it = iter(pre)
+    next(it)
+    pre.close()
+    pre.close()  # idempotent: second call is a no-op
+    assert list(it) == []  # consumer observes a clean end of iteration
+    pre.close()  # and safe again after iteration finished

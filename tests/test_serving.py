@@ -1,0 +1,223 @@
+"""OnlineGraphService: microbatching, deadline shedding, EdgeBank
+degradation + circuit-breaker recovery, ingest hygiene, crash-safe
+snapshot/restore bit-parity, and the deterministic chaos test driven by
+serve.faults.FaultInjector."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.models.tg.edgebank import EdgeBank
+from repro.serve import FaultInjector, ModelFault, OnlineGraphService, Status
+
+
+def _events(n, num_nodes=40, seed=0, t0=100):
+    rng = np.random.default_rng(seed)
+    return [(int(rng.integers(num_nodes)), int(rng.integers(num_nodes)),
+             t0 + i, i) for i in range(n)]
+
+
+def _mk(num_nodes=40, **kw):
+    kw.setdefault("k", 4)
+    kw.setdefault("flush_interval", 0.002)
+    return OnlineGraphService(num_nodes, **kw)
+
+
+# ---------------------------------------------------------------- batching
+
+def test_flush_on_timeout_single_request():
+    with _mk() as svc:
+        svc.ingest_many(_events(50))
+        svc.drain()
+        r = svc.predict_link(1, 2, 500)
+        assert r.status is Status.OK and r.tier == "model"
+        assert 0.0 <= r.score <= 1.0
+
+
+def test_flush_on_size():
+    with _mk(max_batch=4, flush_interval=5.0) as svc:  # size-only flush
+        svc.ingest_many(_events(50))
+        svc.drain()
+        pend = [svc.submit_link(i, i + 1, 500) for i in range(4)]
+        rs = [p.result(timeout=10) for p in pend]
+        assert all(r.status is Status.OK for r in rs)
+
+
+def test_deadline_shedding_is_explicit():
+    with _mk() as svc:
+        r = svc.submit_link(1, 2, 500, timeout=0.0).result(timeout=10)
+        assert r.status is Status.REJECTED
+        assert "deadline" in r.detail
+        assert svc.stats["rejected"] == 1
+
+
+# -------------------------------------------------------------- degradation
+
+def test_degrades_to_edgebank_and_probe_recovers():
+    broken = {"on": True}
+
+    def model(seeds, t, ids, times, mask):
+        if broken["on"]:
+            raise ModelFault("boom")
+        return np.full(len(seeds) // 2, 0.5, np.float32)
+
+    with _mk(model_fn=model, fail_threshold=2, probe_every=2) as svc:
+        svc.ingest(3, 4, 100, 0)
+        svc.drain()
+        # two failing flushes open the breaker; every answer still arrives
+        # via the EdgeBank fallback with an explicit DEGRADED status
+        for _ in range(2):
+            r = svc.predict_link(3, 4, 500)
+            assert r.status is Status.DEGRADED and r.tier == "edgebank"
+        assert svc.stats["model_errors"] == 2
+        # breaker open: EdgeBank answers warm from the same event stream
+        r = svc.predict_link(3, 4, 500)
+        assert r.status is Status.DEGRADED and r.score == 1.0
+        r = svc.predict_link(7, 8, 500)  # unseen pair
+        assert r.status is Status.DEGRADED and r.score == 0.0
+        # heal the model: the next probe flush closes the breaker
+        broken["on"] = False
+        statuses = [svc.predict_link(3, 4, 500).status for _ in range(4)]
+        assert Status.OK in statuses
+        assert statuses[-1] is Status.OK  # healthy again, stays healthy
+        assert svc.stats["probes"] >= 1
+
+
+def test_embed_has_no_fallback_tier():
+    def model(*a):
+        raise ModelFault("boom")
+
+    with _mk(model_fn=model, embed_fn=model, fail_threshold=1) as svc:
+        svc.predict_link(1, 2, 100)  # opens the breaker
+        r = svc.embed(1, 100)
+        assert r.status is Status.FAILED
+        assert "no fallback" in r.detail
+
+
+def test_latency_budget_degrades():
+    def slow(seeds, t, ids, times, mask):
+        time.sleep(0.05)
+        return np.zeros(len(seeds) // 2, np.float32)
+
+    with _mk(model_fn=slow, latency_budget=0.01, probe_every=100) as svc:
+        first = svc.predict_link(1, 2, 100)
+        assert first.status is Status.OK  # no EWMA yet: model runs, is slow
+        second = svc.predict_link(1, 2, 100)
+        assert second.status is Status.DEGRADED and second.tier == "edgebank"
+
+
+# ------------------------------------------------------------------ ingest
+
+def test_ingest_dedup_and_out_of_order_counting():
+    with _mk() as svc:
+        svc.ingest(1, 2, 100, 7)
+        svc.ingest(1, 2, 100, 7)   # duplicate eid: dropped
+        svc.ingest(3, 4, 50, 8)    # out of order: applied + counted
+        svc.drain()
+        assert svc.stats["events_applied"] == 2
+        assert svc.stats["events_deduped"] == 1
+        assert svc.stats["events_out_of_order"] == 1
+        assert svc.predict_link(3, 4, 500).status is Status.OK
+
+
+def test_stop_fails_outstanding_requests_no_deadlock():
+    def hang(seeds, t, ids, times, mask):
+        time.sleep(0.2)
+        return np.zeros(len(seeds) // 2, np.float32)
+
+    svc = _mk(model_fn=hang)
+    pend = [svc.submit_link(i, i + 1, 100) for i in range(3)]
+    svc.stop()
+    for p in pend:
+        r = p.result(timeout=10)  # resolved, not deadlocked
+        assert r.status in (Status.OK, Status.FAILED)
+    with pytest.raises(RuntimeError):
+        svc.ingest(1, 2, 3)
+
+
+# -------------------------------------------------------------- durability
+
+def test_snapshot_restore_bit_parity(tmp_path):
+    """Kill-then-restore == uninterrupted: a service snapshotted mid-stream
+    and restored into a fresh process answers bit-identically to one that
+    never died."""
+    ev = _events(120, seed=3)
+    queries = [(s, d, 1000) for s, d, _, _ in _events(20, seed=9)]
+
+    with _mk(seed=5) as clean:
+        clean.ingest_many(ev)
+        clean.drain()
+        want = [clean.predict_link(*q).score for q in queries]
+
+    with _mk(seed=5) as victim:
+        victim.ingest_many(ev[:60])
+        victim.snapshot(str(tmp_path), step=60)
+    # "crash": victim is gone; a fresh service restores and replays the
+    # rest of the stream (duplicates straddling the snapshot are deduped)
+    with _mk(seed=5) as revived:
+        assert revived.restore(str(tmp_path)) == 60
+        revived.ingest_many(ev[55:])  # overlap: eids 55-59 already applied
+        revived.drain()
+        assert revived.stats["events_deduped"] == 5
+        got = [revived.predict_link(*q).score for q in queries]
+    assert got == want  # bit-identical, not approximately equal
+
+
+def test_edgebank_state_roundtrip():
+    bank = EdgeBank(30, window=50)
+    rng = np.random.default_rng(0)
+    bank.update_memory(rng.integers(0, 30, 40), rng.integers(0, 30, 40),
+                       rng.integers(0, 200, 40))
+    clone = EdgeBank(30, window=50)
+    clone.load_state_dict(bank.state_dict())
+    src, dst, t = rng.integers(0, 30, 50), rng.integers(0, 30, 50), \
+        rng.integers(0, 300, 50)
+    np.testing.assert_array_equal(bank.predict_link(src, dst, t),
+                                  clone.predict_link(src, dst, t))
+    # canonical serialization: same memory -> identical bytes
+    a, b = bank.state_dict(), clone.state_dict()
+    np.testing.assert_array_equal(a["keys"], b["keys"])
+    np.testing.assert_array_equal(a["times"], b["times"])
+
+
+# ------------------------------------------------------------------- chaos
+
+def test_chaos_never_deadlocks_and_degrades_gracefully():
+    """The acceptance chaos test: slow + failing model steps and a dropped/
+    duplicated/reordered event stream. The service must resolve every
+    request with an explicit status, shed over-deadline requests, and keep
+    serving EdgeBank answers while the model tier is down."""
+    inj = FaultInjector(seed=0, drop_p=0.05, dup_p=0.05, reorder_p=0.15,
+                        reorder_span=3, slow_p=0.5, slow_s=0.02,
+                        fail_p=0.6)
+    svc = _mk(num_nodes=60, fault_injector=inj, fail_threshold=2,
+              probe_every=3, latency_budget=0.05)
+    try:
+        stream = inj.perturb_events(_events(150, num_nodes=60, seed=1))
+        svc.ingest_many(stream)
+        svc.drain()
+        assert inj.stats["dropped"] > 0 and inj.stats["duplicated"] > 0
+        assert inj.stats["reordered"] > 0
+        assert svc.stats["events_deduped"] >= inj.stats["duplicated"]
+
+        pend = [svc.submit_link(int(i % 60), int((i * 7 + 1) % 60), 1000,
+                                timeout=5.0) for i in range(30)]
+        pend += [svc.submit_link(1, 2, 1000, timeout=0.0)
+                 for _ in range(3)]  # guaranteed over-deadline
+        results = [p.result(timeout=30) for p in pend]  # never deadlocks
+
+        statuses = {r.status for r in results}
+        assert all(isinstance(r.status, Status) for r in results)
+        assert Status.REJECTED in statuses  # explicit shedding
+        assert Status.DEGRADED in statuses  # EdgeBank served while degraded
+        for r in results:
+            if r.status in (Status.OK, Status.DEGRADED):
+                assert r.score is not None and 0.0 <= r.score <= 1.0
+        assert inj.stats["model_faults"] > 0
+        # every request is accounted for in the service counters
+        tallied = sum(svc.stats[s] for s in
+                      ("ok", "degraded", "rejected", "failed"))
+        assert tallied == len(results)
+    finally:
+        svc.stop()
