@@ -164,11 +164,75 @@ def bench_fused_vs_pregathered(B: int = 200, K: int = 20, N: int = 10_000,
          f"backend={jax.default_backend()}")
 
 
+def bench_fused_train_step(B: int = 100, K: int = 10, N: int = 2_000,
+                           d_edge: int = 32, num_layers: int = 2) -> None:
+    """Gather-free 2-layer TGAT train-step wall time on the fused path.
+
+    One jitted step — loss, the custom-VJP backward, AdamW update — over a
+    device-sampling TGB-link batch, exercising all three fused-layer
+    variants (hop-1 seeds, hop-2 frontier, per-seed final hop). On TPU both
+    directions run Pallas kernels (flash-style backward); on CPU/GPU the
+    split-projection jnp fallback runs, which is what the recorded CPU
+    baseline gates — a regression here means the fused model path itself
+    (projection split, synthetic-buffer assembly, VJP plumbing) got slower.
+    """
+    from repro.core import RECIPE_TGB_LINK, RecipeRegistry, TRAIN_KEY
+    from repro.core.graph import DGData, DGraph
+    from repro.core.loader import DGDataLoader
+    from repro.core.tg_hooks import stage_batch
+    from repro.models.tg import tgat
+    from repro.models.tg.common import bce_link_loss
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+    from repro.tg import SamplerSpec
+
+    rng = np.random.default_rng(0)
+    E = 4 * B
+    feats = rng.standard_normal((E, d_edge)).astype(np.float32)
+    data = DGData.from_arrays(
+        rng.integers(0, N, E), rng.integers(0, N, E),
+        np.sort(rng.integers(0, 10_000, E)), edge_feats=feats,
+        granularity="s",
+    )
+    m = RecipeRegistry.build(
+        RECIPE_TGB_LINK, num_nodes=N, batch_size=B, eval_negatives=20,
+        edge_feats=feats, edge_feat_dim=d_edge, seed=0,
+        spec=SamplerSpec(k=K, device=True, num_hops=num_layers),
+    )
+    with m.activate(TRAIN_KEY):
+        *_, batch = iter(DGDataLoader(DGraph(data), m, batch_size=B))
+    staged = stage_batch(batch)
+    bt = {k2: staged[k2] for k2 in staged.keys()}
+
+    cfg = tgat.TGATConfig(num_nodes=N, d_edge=d_edge, k=K,
+                          num_layers=num_layers)
+    params = tgat.init(jax.random.PRNGKey(0), cfg)
+    opt_cfg = AdamWConfig(lr=1e-4)
+    opt0 = adamw_init(params)
+    fused = "auto" if jax.default_backend() == "tpu" else "ref"
+
+    def loss_fn(params, batch):
+        pos, neg = tgat.link_scores(params, cfg, batch, B, fused=fused)
+        return bce_link_loss(pos, neg, batch["batch_mask"])
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+
+    jax.block_until_ready(step(params, opt0, bt))  # compile
+    t = timeit(lambda: jax.block_until_ready(step(params, opt0, bt)),
+               repeats=7)
+    emit("kernels/fused_train_step", t,
+         f"B{B} K{K} N{N} d_edge{d_edge} layers{num_layers} fused={fused}")
+
+
 def run() -> None:
     rng = np.random.default_rng(0)
 
     bench_recency_sampler()
     bench_fused_vs_pregathered()
+    bench_fused_train_step()
 
     q = jnp.asarray(rng.standard_normal((2, 8, 256, 64)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((2, 2, 256, 64)), jnp.float32)

@@ -10,11 +10,28 @@ from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def _use_kernel(mode: str) -> bool:
+    """Resolve a dispatch mode string; raises on unknown modes."""
+    if mode not in ("auto", "ref", "kernel", "interpret"):
+        raise ValueError(f"unknown kernel dispatch mode {mode!r}")
+    return (mode in ("kernel", "interpret")
+            or (mode == "auto" and jax.default_backend() == "tpu"))
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "mode"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    block_q: int = 128, block_k: int = 128):
-    """q: (B, H, Sq, D); k, v: (B, Hk, Skv, D) -> (B, H, Sq, D)."""
-    if jax.default_backend() == "tpu":
+                    block_q: int = 128, block_k: int = 128,
+                    mode: str = "auto"):
+    """q: (B, H, Sq, D); k, v: (B, Hk, Skv, D) -> (B, H, Sq, D).
+
+    ``mode`` ∈ {"auto", "ref", "kernel", "interpret"}: "auto" runs the
+    Pallas kernel on TPU and the jnp reference elsewhere; "interpret"
+    executes the kernel body through the Pallas interpreter on any backend
+    (the CPU parity path used by ``tests/kernels/``).
+    """
+    if _use_kernel(mode):
         return flash_attention_kernel(q, k, v, causal=causal, window=window,
-                                      block_q=block_q, block_k=block_k)
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=mode == "interpret")
     return flash_attention_ref(q, k, v, causal=causal, window=window)

@@ -4,6 +4,11 @@ The kernel holds the whole (num_segments, D) tile in VMEM; larger segment
 spaces are processed in G-sized chunks (edges are pre-sorted by segment, so
 each chunk reads a contiguous edge range — ops here keeps it simple and
 passes the full edge set with out-of-range ids masked to -1).
+
+``segment_sum`` carries a custom VJP: the backward of a segment sum is a
+plain gather (``g[seg_ids]`` with padding rows zeroed), so the gradient
+never re-materializes scatter intermediates regardless of which dispatch
+path ran the forward.
 """
 
 from __future__ import annotations
@@ -12,6 +17,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.segment_reduce.kernel import segment_sum_kernel
 from repro.kernels.segment_reduce.ref import segment_sum_ref
@@ -19,16 +25,58 @@ from repro.kernels.segment_reduce.ref import segment_sum_ref
 _VMEM_TILE = 2048
 
 
-@partial(jax.jit, static_argnames=("num_segments", "block_e"))
-def segment_sum(data, seg_ids, num_segments: int, *, block_e: int = 256):
-    """data: (E, D); seg_ids: (E,) int32 -> (num_segments, D)."""
-    if jax.default_backend() != "tpu":
+def _use_kernel(mode: str) -> bool:
+    """Resolve a dispatch mode string; raises on unknown modes."""
+    if mode not in ("auto", "ref", "kernel", "interpret"):
+        raise ValueError(f"unknown kernel dispatch mode {mode!r}")
+    return (mode in ("kernel", "interpret")
+            or (mode == "auto" and jax.default_backend() == "tpu"))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _segment_sum_call(data, seg_ids, num_segments, block_e, mode):
+    if not _use_kernel(mode):
         return segment_sum_ref(data, seg_ids, num_segments)
+    interpret = mode == "interpret"
     if num_segments <= _VMEM_TILE:
-        return segment_sum_kernel(data, seg_ids, num_segments, block_e=block_e)
+        return segment_sum_kernel(data, seg_ids, num_segments,
+                                  block_e=block_e, interpret=interpret)
     parts = []
     for lo in range(0, num_segments, _VMEM_TILE):
         g = min(_VMEM_TILE, num_segments - lo)
-        local = jnp.where((seg_ids >= lo) & (seg_ids < lo + g), seg_ids - lo, -1)
-        parts.append(segment_sum_kernel(data, local, g, block_e=block_e))
+        local = jnp.where((seg_ids >= lo) & (seg_ids < lo + g),
+                          seg_ids - lo, -1)
+        parts.append(segment_sum_kernel(data, local, g, block_e=block_e,
+                                        interpret=interpret))
     return jnp.concatenate(parts, axis=0)
+
+
+def _segment_sum_fwd(data, seg_ids, num_segments, block_e, mode):
+    out = _segment_sum_call(data, seg_ids, num_segments, block_e, mode)
+    return out, seg_ids
+
+
+def _segment_sum_bwd(num_segments, block_e, mode, seg_ids, g):
+    # The transpose of a masked scatter-add is a masked gather — no
+    # (num_segments, E) intermediate, no scatter in the backward.
+    d_data = g[jnp.maximum(seg_ids, 0)] * (seg_ids >= 0)[:, None].astype(g.dtype)
+    d_ids = np.zeros(seg_ids.shape, dtype=jax.dtypes.float0)
+    return d_data, d_ids
+
+
+_segment_sum_call.defvjp(_segment_sum_fwd, _segment_sum_bwd)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "block_e", "mode"))
+def segment_sum(data, seg_ids, num_segments: int, *, block_e: int = 256,
+                mode: str = "auto"):
+    """data: (E, D); seg_ids: (E,) int32 -> (num_segments, D).
+
+    Rows with ``seg_ids < 0`` are dropped. ``mode`` ∈ {"auto", "ref",
+    "kernel", "interpret"}: "auto" runs the Pallas kernel on TPU and the
+    jnp reference elsewhere; "interpret" executes the kernel body through
+    the Pallas interpreter on any backend (the CPU parity path used by
+    ``tests/kernels/``). Differentiable w.r.t. ``data`` on every path via
+    a gather-based custom VJP.
+    """
+    return _segment_sum_call(data, seg_ids, num_segments, block_e, mode)

@@ -10,10 +10,25 @@ from repro.kernels.ssd_chunk.kernel import ssd_chunk_kernel
 from repro.kernels.ssd_chunk.ref import ssd_ref
 
 
-@partial(jax.jit, static_argnames=("chunk",))
-def ssd(x, dt, a, B, C, *, chunk: int = 128):
-    """x: (S, H, P); dt: (S, H); a: (H,); B, C: (S, H, N) -> y (S, H, P)."""
-    if jax.default_backend() == "tpu":
-        return ssd_chunk_kernel(x, dt, a, B, C, chunk=chunk)
+def _use_kernel(mode: str) -> bool:
+    """Resolve a dispatch mode string; raises on unknown modes."""
+    if mode not in ("auto", "ref", "kernel", "interpret"):
+        raise ValueError(f"unknown kernel dispatch mode {mode!r}")
+    return (mode in ("kernel", "interpret")
+            or (mode == "auto" and jax.default_backend() == "tpu"))
+
+
+@partial(jax.jit, static_argnames=("chunk", "mode"))
+def ssd(x, dt, a, B, C, *, chunk: int = 128, mode: str = "auto"):
+    """x: (S, H, P); dt: (S, H); a: (H,); B, C: (S, H, N) -> y (S, H, P).
+
+    ``mode`` ∈ {"auto", "ref", "kernel", "interpret"}: "auto" runs the
+    Pallas kernel on TPU and the exact recurrence elsewhere; "interpret"
+    executes the kernel body through the Pallas interpreter on any backend
+    (the CPU parity path used by ``tests/kernels/``).
+    """
+    if _use_kernel(mode):
+        return ssd_chunk_kernel(x, dt, a, B, C, chunk=chunk,
+                                interpret=mode == "interpret")
     y, _ = ssd_ref(x, dt, a, B, C)
     return y

@@ -1,11 +1,14 @@
 from repro.kernels.temporal_attention.kernel import (
     fused_recency_attention_kernel,
+    fused_temporal_layer_bwd_kernel,
     fused_temporal_layer_kernel,
     temporal_attention_kernel,
 )
 from repro.kernels.temporal_attention.ops import (
     fused_recency_attention,
     fused_temporal_layer,
+    fused_temporal_layer_hop2,
+    fused_temporal_layer_per_seed,
     temporal_attention,
 )
 from repro.kernels.temporal_attention.ref import (
@@ -19,7 +22,10 @@ __all__ = [
     "fused_recency_attention_kernel",
     "fused_recency_attention_ref",
     "fused_temporal_layer",
+    "fused_temporal_layer_bwd_kernel",
+    "fused_temporal_layer_hop2",
     "fused_temporal_layer_kernel",
+    "fused_temporal_layer_per_seed",
     "fused_temporal_layer_ref",
     "temporal_attention",
     "temporal_attention_kernel",

@@ -38,7 +38,9 @@ so the fat ``(S, K, H, D)`` intermediates never exist in HBM. The buffer
 row (ids, times, eids) and each neighbor's table/edge-feature row are DMA'd
 from HBM into VMEM scratch per seed; seed ids and query times arrive via
 scalar prefetch (``PrefetchScalarGridSpec``) so DMA source indices are known
-before the kernel body runs.
+before the kernel body runs. Seeds may be negative (hop-2 frontier padding):
+the DMA index is clamped and the whole row masked out, so the 2-hop TGAT
+frontier can run through the kernel unclamped.
 
 Per-seed DMAs are double-buffered: while seed ``j``'s neighborhood is being
 reduced on the VPU/MXU, seed ``j+1``'s buffer row and its K neighbor-row
@@ -46,6 +48,17 @@ copies (issued back-to-back, all in flight at once) land in the other half
 of a 2-slot scratch. ``fused_recency_attention_kernel`` (the PR-1 surface:
 ids-only buffer, no bias folding) is kept as a thin wrapper and runs through
 the same double-buffered body.
+
+``fused_temporal_layer_bwd_kernel`` is the flash-attention-style backward:
+it re-stages every seed's neighborhood through the same double-buffered DMA
+pipeline, recomputes the attention weights in VMEM, and produces all input
+gradients without ever materializing an (S, K, ·) tensor in HBM — dq as a
+blocked output, dk_table/dv_table by sequential per-row DMA
+read-modify-write into ANY-space outputs aliased to zero-initialized
+operands (the TPU has no atomics; the grid is sequential, so the
+read-modify-write is race-free and handles duplicate neighbor ids exactly),
+and the small weight gradients (time/edge projections, Bochner parameters)
+as VMEM-resident accumulators that live across the whole grid.
 
 The jnp oracles in ``ref.py`` remain the correctness references
 (``interpret=True`` executes these kernel bodies on CPU for parity tests).
@@ -120,50 +133,26 @@ def temporal_attention_kernel(q, k, v, mask, *, block_s: int = 128,
     return out[:S]
 
 
-def _fused_layer_kernel(
-    seeds_ref,  # scalar prefetch: (S_pad,) int32 seed node ids (SMEM)
-    times_ref,  # scalar prefetch: (S_pad,) int32 seed query times (SMEM)
-    *refs,
-    scale: float, block_s: int, kbuf: int, heads: int, hdim: int,
-    has_time: bool, has_edge: bool,
-):
-    """Double-buffered fused gather + bias-fold + attention body.
+def _make_stager(seeds_ref, buf_hbm, k_hbm, v_hbm, ef_hbm,
+                 row_smem, row_vmem, k_scr, v_scr, e_scr,
+                 sem_row, sem_rowv, sem_k, sem_v, sem_e,
+                 *, block_s: int, kbuf: int, has_edge: bool):
+    """Build the double-buffered per-seed DMA staging closures.
 
-    ``refs`` unpacks (in order) the non-prefetch inputs, the output, and the
-    scratch allocated by ``fused_temporal_layer_kernel``; the exact layout
-    depends on the static ``has_time`` / ``has_edge`` flags.
+    Shared by the forward and backward fused-layer kernel bodies: both walk
+    the same seed blocks and need the same staged data (the packed buffer
+    row in SMEM+VMEM, the K neighbor k/v table rows, and optionally the K
+    edge-feature rows) in 2-slot scratch. Seed ids < 0 (hop-2 frontier
+    padding) are clamped for the DMA and masked out by the caller.
+
+    Returns ``(stage, wait)``: ``stage(j)`` issues seed j's DMAs into slot
+    ``j % 2``; ``wait(j)`` blocks until they have all landed.
     """
-    it = iter(refs)
-    q_ref = next(it)                     # (bs, H, D) VMEM
-    k_hbm = next(it)                     # (N, H, D) ANY/HBM node key table
-    v_hbm = next(it)                     # (N, H, D) ANY/HBM node value table
-    buf_hbm = next(it)                   # (Nb, K, 3) ANY/HBM packed buffer
-    if has_time:
-        tw_ref = next(it)                # (1, d_time) VMEM Bochner freqs
-        tb_ref = next(it)                # (1, d_time) VMEM Bochner phases
-        wtk_ref = next(it)               # (d_time, H*D) VMEM key time proj
-        wtv_ref = next(it)               # (d_time, H*D) VMEM value time proj
-    if has_edge:
-        ef_hbm = next(it)                # (E, d_edge) ANY/HBM edge features
-        wek_ref = next(it)               # (d_edge, H*D) VMEM key edge proj
-        wev_ref = next(it)               # (d_edge, H*D) VMEM value edge proj
-    o_ref = next(it)                     # (bs, H, D) VMEM
-    row_smem = next(it)                  # (2, K, 3) SMEM — scalar DMA indices
-    row_vmem = next(it)                  # (2, K, 3) VMEM — vector mask/times
-    k_scr = next(it)                     # (2, K, H, D) VMEM
-    v_scr = next(it)                     # (2, K, H, D) VMEM
-    e_scr = next(it) if has_edge else None   # (2, K, d_edge) VMEM
-    sem_row = next(it)                   # DMA((2,)) — per-slot semaphores
-    sem_rowv = next(it)
-    sem_k = next(it)
-    sem_v = next(it)
-    sem_e = next(it) if has_edge else None
-
     pid = pl.program_id(0)
 
     def row_copies(j):
         sl = j % 2
-        seed = seeds_ref[pid * block_s + j]
+        seed = jnp.maximum(seeds_ref[pid * block_s + j], 0)
         return (
             pltpu.make_async_copy(buf_hbm.at[seed], row_smem.at[sl],
                                   sem_row.at[sl]),
@@ -217,6 +206,105 @@ def _fused_layer_kernel(
         row_s.wait()
         issue_nbrs(j)
 
+    def wait(j):
+        _, row_v = row_copies(j)
+        row_v.wait()
+        wait_nbrs(j)
+
+    return stage, wait
+
+
+def _seed_kv(sl, seed_t, row_vmem, k_scr, v_scr, e_scr,
+             tw_ref, tb_ref, wtk_ref, wtv_ref, wek_ref, wev_ref,
+             *, kbuf: int, heads: int, hdim: int,
+             has_time: bool, has_edge: bool):
+    """Rebuild one seed's biased (K, H*D) keys/values from staged scratch.
+
+    Shared by the forward (to attend) and the backward (to recompute the
+    attention weights flash-style). Returns ``(k, v, phi, theta, dt, e)``
+    where ``phi = cos(theta)`` is the Bochner encoding, ``dt`` the query/
+    neighbor time deltas and ``e`` the zeroed edge-feature rows (the
+    backward reuses all three for the weight gradients).
+    """
+    k = k_scr[sl].astype(jnp.float32).reshape(kbuf, heads * hdim)
+    v = v_scr[sl].astype(jnp.float32).reshape(kbuf, heads * hdim)
+    phi = theta = dt = e = None
+    if has_time:
+        # dt in int32 first (exactly like nn.time_encode's caller), then
+        # the Bochner encoding phi = cos(dt * w + b) on the VPU, then the
+        # (K, d_time) @ (d_time, H*D) bias matmul on the MXU.
+        dt = (seed_t - row_vmem[sl, :, 1]).astype(jnp.float32)
+        theta = dt[:, None] * tw_ref[0] + tb_ref[0]
+        phi = jnp.cos(theta)
+        k = k + phi @ wtk_ref[...]
+        v = v + phi @ wtv_ref[...]
+    if has_edge:
+        ev = (row_vmem[sl, :, 2] >= 0).astype(jnp.float32)[:, None]
+        e = e_scr[sl].astype(jnp.float32) * ev   # zero featureless slots
+        k = k + e @ wek_ref[...]
+        v = v + e @ wev_ref[...]
+    return k, v, phi, theta, dt, e
+
+
+def _masked_softmax(s, mask):
+    """Row-softmax over the last axis with fully-masked rows zeroed —
+    identical to the oracle's ``softmax`` + ``where(mask.any(), ·, 0)``."""
+    s = jnp.where(mask[None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.where(mask.any(), p, 0.0)
+
+
+def _fused_layer_kernel(
+    seeds_ref,  # scalar prefetch: (S_pad,) int32 seed node ids (SMEM)
+    times_ref,  # scalar prefetch: (S_pad,) int32 seed query times (SMEM)
+    *refs,
+    scale: float, block_s: int, kbuf: int, heads: int, hdim: int,
+    has_time: bool, has_edge: bool,
+):
+    """Double-buffered fused gather + bias-fold + attention body.
+
+    ``refs`` unpacks (in order) the non-prefetch inputs, the output, and the
+    scratch allocated by ``fused_temporal_layer_kernel``; the exact layout
+    depends on the static ``has_time`` / ``has_edge`` flags.
+    """
+    it = iter(refs)
+    q_ref = next(it)                     # (bs, H, D) VMEM
+    k_hbm = next(it)                     # (N, H, D) ANY/HBM node key table
+    v_hbm = next(it)                     # (N, H, D) ANY/HBM node value table
+    buf_hbm = next(it)                   # (Nb, K, 3) ANY/HBM packed buffer
+    tw_ref = tb_ref = wtk_ref = wtv_ref = None
+    ef_hbm = wek_ref = wev_ref = None
+    if has_time:
+        tw_ref = next(it)                # (1, d_time) VMEM Bochner freqs
+        tb_ref = next(it)                # (1, d_time) VMEM Bochner phases
+        wtk_ref = next(it)               # (d_time, H*D) VMEM key time proj
+        wtv_ref = next(it)               # (d_time, H*D) VMEM value time proj
+    if has_edge:
+        ef_hbm = next(it)                # (E, d_edge) ANY/HBM edge features
+        wek_ref = next(it)               # (d_edge, H*D) VMEM key edge proj
+        wev_ref = next(it)               # (d_edge, H*D) VMEM value edge proj
+    o_ref = next(it)                     # (bs, H, D) VMEM
+    row_smem = next(it)                  # (2, K, 3) SMEM — scalar DMA indices
+    row_vmem = next(it)                  # (2, K, 3) VMEM — vector mask/times
+    k_scr = next(it)                     # (2, K, H, D) VMEM
+    v_scr = next(it)                     # (2, K, H, D) VMEM
+    e_scr = next(it) if has_edge else None   # (2, K, d_edge) VMEM
+    sem_row = next(it)                   # DMA((2,)) — per-slot semaphores
+    sem_rowv = next(it)
+    sem_k = next(it)
+    sem_v = next(it)
+    sem_e = next(it) if has_edge else None
+
+    pid = pl.program_id(0)
+    stage, wait = _make_stager(
+        seeds_ref, buf_hbm, k_hbm, v_hbm, ef_hbm,
+        row_smem, row_vmem, k_scr, v_scr, e_scr,
+        sem_row, sem_rowv, sem_k, sem_v, sem_e,
+        block_s=block_s, kbuf=kbuf, has_edge=has_edge,
+    )
+
     # Prologue: stage seed 0; the loop then overlaps seed j+1's copies with
     # seed j's compute (classic 2-slot software pipeline).
     stage(0)
@@ -227,42 +315,69 @@ def _fused_layer_kernel(
             stage(j + 1)
 
         sl = j % 2
-        _, row_v = row_copies(j)
-        row_v.wait()
-        wait_nbrs(j)
+        wait(j)
 
+        seed = seeds_ref[pid * block_s + j]
         ids = row_vmem[sl, :, 0]                      # (K,)
-        mask = ids >= 0
-        k = k_scr[sl].astype(jnp.float32).reshape(kbuf, heads * hdim)
-        v = v_scr[sl].astype(jnp.float32).reshape(kbuf, heads * hdim)
-        if has_time:
-            # dt in int32 first (exactly like nn.time_encode's caller), then
-            # the Bochner encoding phi = cos(dt * w + b) on the VPU, then the
-            # (K, d_time) @ (d_time, H*D) bias matmul on the MXU.
-            dt = (times_ref[pid * block_s + j] - row_vmem[sl, :, 1]).astype(
-                jnp.float32)
-            phi = jnp.cos(dt[:, None] * tw_ref[0] + tb_ref[0])
-            k = k + phi @ wtk_ref[...]
-            v = v + phi @ wtv_ref[...]
-        if has_edge:
-            ev = (row_vmem[sl, :, 2] >= 0).astype(jnp.float32)[:, None]
-            e = e_scr[sl].astype(jnp.float32) * ev   # zero featureless slots
-            k = k + e @ wek_ref[...]
-            v = v + e @ wev_ref[...]
+        mask = (ids >= 0) & (seed >= 0)               # seed < 0: hop-2 pad
+        k, v, *_ = _seed_kv(
+            sl, times_ref[pid * block_s + j], row_vmem, k_scr, v_scr, e_scr,
+            tw_ref, tb_ref, wtk_ref, wtv_ref, wek_ref, wev_ref,
+            kbuf=kbuf, heads=heads, hdim=hdim,
+            has_time=has_time, has_edge=has_edge,
+        )
         k = k.reshape(kbuf, heads, hdim)
         v = v.reshape(kbuf, heads, hdim)
 
         q = q_ref[j].astype(jnp.float32) * scale      # (H, D)
         s = jnp.einsum("hd,khd->hk", q, k)            # (H, K)
-        s = jnp.where(mask[None, :], s, NEG_INF)
-        m = s.max(axis=-1, keepdims=True)
-        p = jnp.exp(s - m)
-        p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
-        p = jnp.where(mask.any(), p, 0.0)
+        p = _masked_softmax(s, mask)
         o_ref[j] = jnp.einsum("hk,khd->hd", p, v).astype(o_ref.dtype)
         return carry
 
     jax.lax.fori_loop(0, block_s, per_seed, 0)
+
+
+def _layer_operands(q, k_table, v_table, buf, time_w, time_b, wt_k, wt_v,
+                    edge_feats, we_k, we_v, H, D):
+    """Assemble the shared (operands, in_specs, scratch) for the fused
+    forward/backward pallas_calls: node tables + packed buffer in ANY/HBM,
+    weight groups reshaped to (d, H*D) f32 and VMEM-resident."""
+    has_time = wt_k is not None
+    has_edge = we_k is not None
+    K = buf.shape[1]
+    full = lambda a: pl.BlockSpec(a.shape, lambda i, *_: (0,) * a.ndim)  # noqa: E731
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    operands = [k_table, v_table, buf]
+    if has_time:
+        tw = time_w.reshape(1, -1).astype(jnp.float32)
+        tb = time_b.reshape(1, -1).astype(jnp.float32)
+        wtk = wt_k.reshape(wt_k.shape[0], H * D).astype(jnp.float32)
+        wtv = wt_v.reshape(wt_v.shape[0], H * D).astype(jnp.float32)
+        in_specs += [full(tw), full(tb), full(wtk), full(wtv)]
+        operands += [tw, tb, wtk, wtv]
+    if has_edge:
+        wek = we_k.reshape(we_k.shape[0], H * D).astype(jnp.float32)
+        wev = we_v.reshape(we_v.shape[0], H * D).astype(jnp.float32)
+        in_specs += [pl.BlockSpec(memory_space=pltpu.ANY), full(wek),
+                     full(wev)]
+        operands += [edge_feats, wek, wev]
+
+    scratch = [
+        pltpu.SMEM((2, K, 3), jnp.int32),
+        pltpu.VMEM((2, K, 3), jnp.int32),
+        pltpu.VMEM((2, K, H, D), k_table.dtype),
+        pltpu.VMEM((2, K, H, D), v_table.dtype),
+    ]
+    if has_edge:
+        scratch.append(pltpu.VMEM((2, K, edge_feats.shape[1]),
+                                  edge_feats.dtype))
+    scratch += [pltpu.SemaphoreType.DMA((2,))] * (5 if has_edge else 4)
+    return operands, in_specs, scratch
 
 
 def fused_temporal_layer_kernel(
@@ -278,6 +393,8 @@ def fused_temporal_layer_kernel(
     projected keys/values (stay in HBM); seeds/seed_times: (S,) int32;
     buf: (Nb, K, 3) packed circular buffer (channels = neighbor id, time,
     edge id; -1 id = empty slot) — ``DeviceRecencySampler.state["buf"]``.
+    Seeds may be negative (hop-2 frontier padding): those rows produce zero
+    output.
 
     Optional bias folds (both on or both off per group):
       time_w/time_b: (d_time,) Bochner parameters, wt_k/wt_v:
@@ -306,38 +423,12 @@ def fused_temporal_layer_kernel(
         seed_times = jnp.pad(seed_times, (0, pad))
     ns = (S + pad) // block_s
 
-    full = lambda a: pl.BlockSpec(a.shape, lambda i, *_: (0,) * a.ndim)  # noqa: E731
-    in_specs = [
-        pl.BlockSpec((block_s, H, D), lambda i, *_: (i, 0, 0)),
-        pl.BlockSpec(memory_space=pltpu.ANY),
-        pl.BlockSpec(memory_space=pltpu.ANY),
-        pl.BlockSpec(memory_space=pltpu.ANY),
-    ]
-    operands = [q, k_table, v_table, buf]
-    if has_time:
-        tw = time_w.reshape(1, -1).astype(jnp.float32)
-        tb = time_b.reshape(1, -1).astype(jnp.float32)
-        wtk = wt_k.reshape(wt_k.shape[0], H * D).astype(jnp.float32)
-        wtv = wt_v.reshape(wt_v.shape[0], H * D).astype(jnp.float32)
-        in_specs += [full(tw), full(tb), full(wtk), full(wtv)]
-        operands += [tw, tb, wtk, wtv]
-    if has_edge:
-        wek = we_k.reshape(we_k.shape[0], H * D).astype(jnp.float32)
-        wev = we_v.reshape(we_v.shape[0], H * D).astype(jnp.float32)
-        in_specs += [pl.BlockSpec(memory_space=pltpu.ANY), full(wek),
-                     full(wev)]
-        operands += [edge_feats, wek, wev]
-
-    scratch = [
-        pltpu.SMEM((2, K, 3), jnp.int32),
-        pltpu.VMEM((2, K, 3), jnp.int32),
-        pltpu.VMEM((2, K, H, D), k_table.dtype),
-        pltpu.VMEM((2, K, H, D), v_table.dtype),
-    ]
-    if has_edge:
-        scratch.append(pltpu.VMEM((2, K, edge_feats.shape[1]),
-                                  edge_feats.dtype))
-    scratch += [pltpu.SemaphoreType.DMA((2,))] * (5 if has_edge else 4)
+    operands, in_specs, scratch = _layer_operands(
+        q, k_table, v_table, buf, time_w, time_b, wt_k, wt_v,
+        edge_feats, we_k, we_v, H, D)
+    in_specs = [pl.BlockSpec((block_s, H, D), lambda i, *_: (i, 0, 0))
+                ] + in_specs
+    operands = [q] + operands
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -356,6 +447,300 @@ def fused_temporal_layer_kernel(
         interpret=interpret,
     )(seeds, seed_times, *operands)
     return out[:S]
+
+
+def _fused_layer_bwd_kernel(
+    seeds_ref,  # scalar prefetch: (S_pad,) int32 seed node ids (SMEM)
+    times_ref,  # scalar prefetch: (S_pad,) int32 seed query times (SMEM)
+    *refs,
+    scale: float, block_s: int, kbuf: int, heads: int, hdim: int,
+    has_time: bool, has_edge: bool,
+):
+    """Flash-style backward body: restage, recompute attention, accumulate.
+
+    Per seed, the neighborhood is re-staged through the same double-buffered
+    DMA pipeline as the forward, the biased k/v and attention weights are
+    recomputed in VMEM, and the chain rule is applied locally:
+
+      dv   = p ⊗ g              ds = p * (dp - Σ_k p·dp)     dp = g · v
+      dq   = (ds · k) * scale   dk = ds ⊗ (q * scale)
+
+    dq writes to a blocked output; dk/dv rows are scattered into the
+    zero-initialized ANY-space dk_table/dv_table outputs by sequential DMA
+    read-modify-write (grid + fori_loop ordering makes duplicate neighbor
+    ids safe without atomics); the weight gradients (time/edge projection
+    slices and Bochner parameters) live in VMEM-resident accumulator outputs
+    initialized at program 0.
+    """
+    it = iter(refs)
+    q_ref = next(it)                     # (bs, H, D) VMEM
+    g_ref = next(it)                     # (bs, H, D) VMEM output cotangent
+    k_hbm = next(it)                     # (N, H, D) ANY node key table
+    v_hbm = next(it)                     # (N, H, D) ANY node value table
+    buf_hbm = next(it)                   # (Nb, K, 3) ANY packed buffer
+    tw_ref = tb_ref = wtk_ref = wtv_ref = None
+    ef_hbm = wek_ref = wev_ref = None
+    if has_time:
+        tw_ref = next(it)
+        tb_ref = next(it)
+        wtk_ref = next(it)
+        wtv_ref = next(it)
+    if has_edge:
+        ef_hbm = next(it)
+        wek_ref = next(it)
+        wev_ref = next(it)
+    next(it)                             # dk zeros operand (aliased → dk_hbm)
+    next(it)                             # dv zeros operand (aliased → dv_hbm)
+    dq_ref = next(it)                    # (bs, H, D) VMEM blocked output
+    dk_hbm = next(it)                    # (N, H, D) f32 ANY output (aliased)
+    dv_hbm = next(it)                    # (N, H, D) f32 ANY output (aliased)
+    dtw_ref = dtb_ref = dwtk_ref = dwtv_ref = None
+    dwek_ref = dwev_ref = None
+    if has_time:
+        dtw_ref = next(it)               # (1, d_time) resident accumulator
+        dtb_ref = next(it)
+        dwtk_ref = next(it)              # (d_time, H*D) resident accumulator
+        dwtv_ref = next(it)
+    if has_edge:
+        dwek_ref = next(it)              # (d_edge, H*D) resident accumulator
+        dwev_ref = next(it)
+    row_smem = next(it)                  # (2, K, 3) SMEM
+    row_vmem = next(it)                  # (2, K, 3) VMEM
+    k_scr = next(it)                     # (2, K, H, D) VMEM
+    v_scr = next(it)                     # (2, K, H, D) VMEM
+    e_scr = next(it) if has_edge else None
+    dk_rows = next(it)                   # (K, H, D) f32 — this seed's dk
+    dv_rows = next(it)                   # (K, H, D) f32
+    rk_row = next(it)                    # (H, D) f32 read-modify-write cell
+    rv_row = next(it)                    # (H, D) f32
+    sem_row = next(it)
+    sem_rowv = next(it)
+    sem_k = next(it)
+    sem_v = next(it)
+    sem_e = next(it) if has_edge else None
+    sem_rk = next(it)                    # DMA — dk row read-modify-write
+    sem_rv = next(it)
+
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _():
+        if has_time:
+            dtw_ref[...] = jnp.zeros_like(dtw_ref)
+            dtb_ref[...] = jnp.zeros_like(dtb_ref)
+            dwtk_ref[...] = jnp.zeros_like(dwtk_ref)
+            dwtv_ref[...] = jnp.zeros_like(dwtv_ref)
+        if has_edge:
+            dwek_ref[...] = jnp.zeros_like(dwek_ref)
+            dwev_ref[...] = jnp.zeros_like(dwev_ref)
+
+    stage, wait = _make_stager(
+        seeds_ref, buf_hbm, k_hbm, v_hbm, ef_hbm,
+        row_smem, row_vmem, k_scr, v_scr, e_scr,
+        sem_row, sem_rowv, sem_k, sem_v, sem_e,
+        block_s=block_s, kbuf=kbuf, has_edge=has_edge,
+    )
+    stage(0)
+
+    def per_seed(j, carry):
+        @pl.when(j + 1 < block_s)
+        def _():
+            stage(j + 1)
+
+        sl = j % 2
+        wait(j)
+
+        seed = seeds_ref[pid * block_s + j]
+        ids = row_vmem[sl, :, 0]
+        mask = (ids >= 0) & (seed >= 0)
+        k, v, phi, theta, dt, e = _seed_kv(
+            sl, times_ref[pid * block_s + j], row_vmem, k_scr, v_scr, e_scr,
+            tw_ref, tb_ref, wtk_ref, wtv_ref, wek_ref, wev_ref,
+            kbuf=kbuf, heads=heads, hdim=hdim,
+            has_time=has_time, has_edge=has_edge,
+        )
+        k3 = k.reshape(kbuf, heads, hdim)
+        v3 = v.reshape(kbuf, heads, hdim)
+
+        qs = q_ref[j].astype(jnp.float32) * scale     # (H, D)
+        s = jnp.einsum("hd,khd->hk", qs, k3)          # (H, K)
+        p = _masked_softmax(s, mask)                  # (H, K)
+
+        g = g_ref[j].astype(jnp.float32)              # (H, D)
+        dv3 = p.T[:, :, None] * g[None]               # (K, H, D) = p ⊗ g
+        dp = jnp.einsum("hd,khd->hk", g, v3)          # (H, K)
+        ds = p * (dp - (p * dp).sum(axis=-1, keepdims=True))
+        dq_ref[j] = (jnp.einsum("hk,khd->hd", ds, k3) * scale
+                     ).astype(dq_ref.dtype)
+        dk3 = ds.T[:, :, None] * qs[None]             # (K, H, D) = ds ⊗ q
+
+        # p is exactly 0 on masked slots (exp underflows at -1e30), but the
+        # explicit zeroing keeps clamped padding rows provably inert.
+        mf = mask.astype(jnp.float32)[:, None]
+        dkf = dk3.reshape(kbuf, heads * hdim) * mf    # (K, H*D)
+        dvf = dv3.reshape(kbuf, heads * hdim) * mf
+
+        if has_time:
+            dwtk_ref[...] += phi.T @ dkf
+            dwtv_ref[...] += phi.T @ dvf
+            dphi = (jnp.einsum("kf,tf->kt", dkf, wtk_ref[...])
+                    + jnp.einsum("kf,tf->kt", dvf, wtv_ref[...]))
+            dtheta = -jnp.sin(theta) * dphi           # (K, d_time)
+            dtw_ref[...] += (dtheta * dt[:, None]).sum(axis=0)[None]
+            dtb_ref[...] += dtheta.sum(axis=0)[None]
+        if has_edge:
+            dwek_ref[...] += e.T @ dkf                # e already eid-zeroed
+            dwev_ref[...] += e.T @ dvf
+
+        # Scatter this seed's dk/dv rows into the table gradients: one
+        # sequential read-modify-write per slot (no TPU atomics; duplicate
+        # ids within a row accumulate correctly because each RMW completes
+        # before the next starts).
+        dk_rows[...] = dkf.reshape(kbuf, heads, hdim)
+        dv_rows[...] = dvf.reshape(kbuf, heads, hdim)
+
+        def rmw(kk, c):
+            nid = jnp.maximum(row_smem[sl, kk, 0], 0)
+            in_k = pltpu.make_async_copy(dk_hbm.at[nid], rk_row, sem_rk)
+            in_v = pltpu.make_async_copy(dv_hbm.at[nid], rv_row, sem_rv)
+            in_k.start()
+            in_v.start()
+            in_k.wait()
+            in_v.wait()
+            rk_row[...] = rk_row[...] + dk_rows[kk]
+            rv_row[...] = rv_row[...] + dv_rows[kk]
+            out_k = pltpu.make_async_copy(rk_row, dk_hbm.at[nid], sem_rk)
+            out_v = pltpu.make_async_copy(rv_row, dv_hbm.at[nid], sem_rv)
+            out_k.start()
+            out_v.start()
+            out_k.wait()
+            out_v.wait()
+            return c
+
+        jax.lax.fori_loop(0, kbuf, rmw, 0)
+        return carry
+
+    jax.lax.fori_loop(0, block_s, per_seed, 0)
+
+
+def fused_temporal_layer_bwd_kernel(
+    g, q, k_table, v_table, seeds, seed_times, buf, *,
+    time_w=None, time_b=None, wt_k=None, wt_v=None,
+    edge_feats=None, we_k=None, we_v=None,
+    block_s: int = 128, scale: float | None = None,
+    interpret: bool = False,
+):
+    """Backward pass of ``fused_temporal_layer_kernel``, gather-free in HBM.
+
+    g: (S, H, D) cotangent of the forward output; remaining arguments as in
+    the forward. Returns a dict of f32 gradients in the kernel's internal
+    layout — ``q`` (S, H, D), ``k_table``/``v_table`` (N, H, D), and, when
+    the bias groups are present, ``time_w``/``time_b`` (1, d_time) and
+    ``wt_k``/``wt_v``/``we_k``/``we_v`` (d, H*D) — the caller
+    (``ops._fused_layer_bwd``) reshapes/casts them back to the primal
+    shapes. ``edge_feats``, ``seeds``, ``seed_times`` and ``buf`` are
+    non-differentiable.
+
+    The grid is declared sequential ("arbitrary") so the per-row DMA
+    read-modify-write scatter into dk_table/dv_table is race-free.
+    """
+    S, H, D = q.shape
+    N = k_table.shape[0]
+    K = buf.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    has_time = wt_k is not None
+    has_edge = we_k is not None
+
+    seeds = seeds.astype(jnp.int32)
+    seed_times = (jnp.zeros_like(seeds) if seed_times is None
+                  else seed_times.astype(jnp.int32))
+    buf = buf.astype(jnp.int32)
+    block_s = min(block_s, S)
+    pad = (-S) % block_s
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        g = jnp.pad(g, ((0, pad), (0, 0), (0, 0)))
+        seeds = jnp.pad(seeds, (0, pad))
+        seed_times = jnp.pad(seed_times, (0, pad))
+    ns = (S + pad) // block_s
+
+    operands, in_specs, scratch = _layer_operands(
+        q, k_table, v_table, buf, time_w, time_b, wt_k, wt_v,
+        edge_feats, we_k, we_v, H, D)
+    blocked = pl.BlockSpec((block_s, H, D), lambda i, *_: (i, 0, 0))
+    in_specs = [blocked, blocked] + in_specs
+    operands = [q, g] + operands
+    # Zero operands aliased to the table-gradient outputs: the kernel
+    # accumulates into them by DMA read-modify-write.
+    zeros = jnp.zeros((N, H, D), jnp.float32)
+    alias_base = 2 + len(in_specs)  # operand index incl. 2 scalar-prefetch
+    in_specs += [pl.BlockSpec(memory_space=pltpu.ANY),
+                 pl.BlockSpec(memory_space=pltpu.ANY)]
+    operands += [zeros, zeros]
+
+    names = ["q", "k_table", "v_table"]
+    out_shape = [
+        jax.ShapeDtypeStruct((S + pad, H, D), jnp.float32),
+        jax.ShapeDtypeStruct((N, H, D), jnp.float32),
+        jax.ShapeDtypeStruct((N, H, D), jnp.float32),
+    ]
+    out_specs = [blocked, pl.BlockSpec(memory_space=pltpu.ANY),
+                 pl.BlockSpec(memory_space=pltpu.ANY)]
+    resident = lambda shp: pl.BlockSpec(shp, lambda i, *_: (0, 0))  # noqa: E731
+    if has_time:
+        d_time = time_w.size
+        for name, shp in (("time_w", (1, d_time)), ("time_b", (1, d_time)),
+                          ("wt_k", (d_time, H * D)), ("wt_v", (d_time, H * D))):
+            names.append(name)
+            out_shape.append(jax.ShapeDtypeStruct(shp, jnp.float32))
+            out_specs.append(resident(shp))
+    if has_edge:
+        d_edge = edge_feats.shape[1]
+        for name in ("we_k", "we_v"):
+            names.append(name)
+            out_shape.append(jax.ShapeDtypeStruct((d_edge, H * D),
+                                                  jnp.float32))
+            out_specs.append(resident((d_edge, H * D)))
+
+    # The scratch list from _layer_operands ends with the staging
+    # semaphores; the body unpacks buffers first, then semaphores, so the
+    # read-modify-write scratch slots in between and its semaphores at the
+    # end.
+    n_sems = 5 if has_edge else 4
+    scratch = (
+        scratch[:-n_sems]
+        + [
+            pltpu.VMEM((K, H, D), jnp.float32),   # dk_rows
+            pltpu.VMEM((K, H, D), jnp.float32),   # dv_rows
+            pltpu.VMEM((H, D), jnp.float32),      # rk_row
+            pltpu.VMEM((H, D), jnp.float32),      # rv_row
+        ]
+        + scratch[-n_sems:]
+        + [pltpu.SemaphoreType.DMA,               # sem_rk
+           pltpu.SemaphoreType.DMA]               # sem_rv
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ns,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    outs = pl.pallas_call(
+        functools.partial(
+            _fused_layer_bwd_kernel, scale=scale, block_s=block_s, kbuf=K,
+            heads=H, hdim=D, has_time=has_time, has_edge=has_edge,
+        ),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases={alias_base: 1, alias_base + 1: 2},
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(seeds, seed_times, *operands)
+    grads = dict(zip(names, outs))
+    grads["q"] = grads["q"][:S]
+    return grads
 
 
 def fused_recency_attention_kernel(q, k_table, v_table, seeds, buf_ids, *,

@@ -10,8 +10,23 @@
 ``fused_temporal_layer``     — the full TGAT/TGN layer-1 compute for
                                ``device_sampling=True``: adds the in-kernel
                                time-encoding and edge-feature bias folds and
-                               a custom VJP so the fused forward is usable
-                               inside a jitted, differentiated train step.
+                               a custom VJP whose backward is itself a
+                               Pallas kernel (flash-style recompute), so a
+                               jitted, differentiated train step is
+                               gather-free end to end.
+``fused_temporal_layer_hop2``     — hop-2-aware variant: the (S, K) hop-1
+                               frontier (padding ids = -1) queries the same
+                               resident buffer at its interaction times.
+``fused_temporal_layer_per_seed`` — per-seed-embedding-table variant: each
+                               seed attends over its own K *computed* rows
+                               (2-layer TGAT's final hop), expressed as a
+                               synthetic (S, K, 3) buffer over an (S*K, H,
+                               D) table so the same kernel family serves it.
+
+Every wrapper takes ``mode`` ∈ {"auto", "ref", "kernel", "interpret"}:
+"auto" picks the Pallas kernel on TPU and the jnp reference elsewhere;
+"interpret" forces the kernel body through the Pallas interpreter (the CPU
+parity path used by ``tests/kernels/``).
 """
 
 from __future__ import annotations
@@ -19,9 +34,11 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.temporal_attention.kernel import (
     fused_recency_attention_kernel,
+    fused_temporal_layer_bwd_kernel,
     fused_temporal_layer_kernel,
     temporal_attention_kernel,
 )
@@ -32,22 +49,33 @@ from repro.kernels.temporal_attention.ref import (
 )
 
 
-@partial(jax.jit, static_argnames=("block_s",))
-def temporal_attention(q, k, v, mask, *, block_s: int = 128):
+def _use_kernel(mode: str) -> bool:
+    """Resolve a dispatch mode string; raises on unknown modes."""
+    if mode not in ("auto", "ref", "kernel", "interpret"):
+        raise ValueError(f"unknown kernel dispatch mode {mode!r}")
+    return (mode in ("kernel", "interpret")
+            or (mode == "auto" and jax.default_backend() == "tpu"))
+
+
+@partial(jax.jit, static_argnames=("block_s", "mode"))
+def temporal_attention(q, k, v, mask, *, block_s: int = 128,
+                       mode: str = "auto"):
     """q: (S, H, D); k, v: (S, K, H, D); mask: (S, K) -> (S, H, D)."""
-    if jax.default_backend() == "tpu":
-        return temporal_attention_kernel(q, k, v, mask, block_s=block_s)
+    if _use_kernel(mode):
+        return temporal_attention_kernel(q, k, v, mask, block_s=block_s,
+                                         interpret=mode == "interpret")
     return temporal_attention_ref(q, k, v, mask)
 
 
-@partial(jax.jit, static_argnames=("block_s",))
+@partial(jax.jit, static_argnames=("block_s", "mode"))
 def fused_recency_attention(q, k_table, v_table, seeds, buf_ids, *,
-                            block_s: int = 128):
+                            block_s: int = 128, mode: str = "auto"):
     """q: (S, H, D); k_table, v_table: (N, H, D); seeds: (S,);
     buf_ids: (Nb, K) resident buffer rows -> (S, H, D)."""
-    if jax.default_backend() == "tpu":
+    if _use_kernel(mode):
         return fused_recency_attention_kernel(
-            q, k_table, v_table, seeds, buf_ids, block_s=block_s)
+            q, k_table, v_table, seeds, buf_ids, block_s=block_s,
+            interpret=mode == "interpret")
     return fused_recency_attention_ref(q, k_table, v_table, seeds, buf_ids)
 
 
@@ -70,13 +98,17 @@ def _fused_layer_fwd(flt, aux, block_s, interpret):
 
 
 def _fused_layer_bwd(block_s, interpret, res, g):
-    # Flash-attention-style backward: recompute from the jnp oracle. The
-    # recompute materializes the (S, K, H, D) intermediates, so only the
-    # forward is gather-free; a dedicated backward kernel is a ROADMAP item.
+    # Flash-style backward *kernel*: restage the neighborhoods through the
+    # same double-buffered DMA pipeline, recompute the attention weights in
+    # VMEM and accumulate every gradient in place — the (S, K, H, D)
+    # intermediates the oracle-recompute backward used to materialize never
+    # exist in HBM (see fused_temporal_layer_bwd_kernel).
     flt, aux = res
-    _, vjp = jax.vjp(lambda f: fused_temporal_layer_ref(**_assemble(f, aux)),
-                     flt)
-    return vjp(g)[0], None
+    grads = fused_temporal_layer_bwd_kernel(
+        g, **_assemble(flt, aux), block_s=block_s, interpret=interpret)
+    out = {name: grads[name].reshape(p.shape).astype(p.dtype)
+           for name, p in flt.items()}
+    return out, None
 
 
 _fused_layer_call.defvjp(_fused_layer_fwd, _fused_layer_bwd)
@@ -96,7 +128,8 @@ def fused_temporal_layer(q, k_table, v_table, seeds, seed_times, buf, *,
 
     q: (S, H, D); k_table/v_table: (N, H, D) node-level projected terms
     (dense bias already folded in by the caller); seeds/seed_times: (S,)
-    int32; buf: (Nb, K, 3). The time group (``time_w``, ``time_b``,
+    int32 (seeds < 0 — hop-2 frontier padding — produce zero rows and zero
+    gradients); buf: (Nb, K, 3). The time group (``time_w``, ``time_b``,
     ``wt_k``, ``wt_v``) and edge group (``edge_feats``, ``we_k``, ``we_v``)
     are each optional but all-or-nothing.
 
@@ -107,13 +140,12 @@ def fused_temporal_layer(q, k_table, v_table, seeds, seed_times, buf, *,
       * ``"interpret"`` — force the kernel in interpret mode (CPU parity
                           tests and jaxpr inspection).
 
-    The kernel path is differentiable via a custom VJP whose backward
-    recomputes from the reference (forward stays gather-free in HBM).
+    The kernel path is differentiable via a custom VJP whose backward is
+    the flash-style Pallas backward kernel — both directions of a jitted
+    train step stay gather-free in HBM (``edge_feats`` is treated as
+    non-differentiable storage).
     """
-    if mode not in ("auto", "ref", "kernel", "interpret"):
-        raise ValueError(f"unknown fused_temporal_layer mode {mode!r}")
-    use_kernel = (mode in ("kernel", "interpret")
-                  or (mode == "auto" and jax.default_backend() == "tpu"))
+    use_kernel = _use_kernel(mode)
     flt = {"q": q, "k_table": k_table, "v_table": v_table}
     aux = {"seeds": seeds, "seed_times": seed_times, "buf": buf}
     if wt_k is not None:
@@ -124,3 +156,49 @@ def fused_temporal_layer(q, k_table, v_table, seeds, seed_times, buf, *,
     if use_kernel:
         return _fused_layer_call(flt, aux, block_s, mode == "interpret")
     return fused_temporal_layer_ref(**_assemble(flt, aux))
+
+
+def fused_temporal_layer_hop2(q, k_table, v_table, frontier, frontier_times,
+                              buf, **kw):
+    """Hop-2-aware variant: embed the (S, K) hop-1 frontier over the buffer.
+
+    ``frontier``/``frontier_times``: (S, K) int32 hop-1 neighbor ids and
+    interaction times straight from the sampler hook (padding = -1); each
+    frontier node queries the resident buffer *at its own interaction time*
+    — the layer-0 compute of 2-layer TGAT. q: (S*K, H, D) frontier queries
+    (row-major flattened). Returns (S*K, H, D) with zero rows (and zero
+    gradients) for padded frontier slots; no (S, K, ·) float tensor is
+    created here. Keyword arguments as in ``fused_temporal_layer``.
+    """
+    return fused_temporal_layer(
+        q, k_table, v_table,
+        frontier.reshape(-1).astype(jnp.int32),
+        frontier_times.reshape(-1).astype(jnp.int32),
+        buf, **kw)
+
+
+def fused_temporal_layer_per_seed(q, k_rows, v_rows, seed_times, nbr_times,
+                                  nbr_mask, *, nbr_eids=None, **kw):
+    """Per-seed-embedding-table variant: seed ``s`` attends over *its own*
+    K rows of an (S*K, H, D) table — 2-layer TGAT's final hop, where the
+    keys/values come from computed hop-1 embeddings rather than a shared
+    node table.
+
+    q: (S, H, D); k_rows/v_rows: (S*K, H, D) per-seed projected rows (row
+    ``s*K + j`` is seed s's j-th neighbor); seed_times: (S,); nbr_times /
+    nbr_mask (and optional nbr_eids, for the edge bias group): (S, K).
+    Expressed as a synthetic packed buffer (ids = row indices where valid,
+    else -1) over the rows table, so the same fused kernel — and its
+    backward — serves the final hop; gradients flow into ``k_rows`` /
+    ``v_rows`` via the table gradient. Returns (S, H, D).
+    """
+    S = q.shape[0]
+    K = nbr_mask.shape[1]
+    rows = jnp.arange(S * K, dtype=jnp.int32).reshape(S, K)
+    ids = jnp.where(nbr_mask, rows, -1)
+    eids = (jnp.full((S, K), -1, jnp.int32) if nbr_eids is None
+            else jnp.where(nbr_mask, nbr_eids.astype(jnp.int32), -1))
+    buf = jnp.stack([ids, nbr_times.astype(jnp.int32), eids], axis=-1)
+    return fused_temporal_layer(
+        q, k_rows, v_rows, jnp.arange(S, dtype=jnp.int32),
+        seed_times.astype(jnp.int32), buf, **kw)

@@ -58,22 +58,24 @@ def fused_temporal_layer_ref(
     ``phi(t_seed - t_nbr) @ wt``, and the edge-feature bias
     ``edge_feats[eid] @ we``; then runs the plain attention oracle. Same
     argument shapes/semantics as the kernel (``buf``: (Nb, K, 3) packed
-    rows; bias groups optional).
+    rows; bias groups optional; seeds < 0 — hop-2 frontier padding — yield
+    zero rows).
     """
     S, H, D = q.shape
     K = buf.shape[1]
-    ids = buf[seeds, :, 0]          # (S, K)
-    mask = ids >= 0
+    safe_seeds = jnp.maximum(seeds, 0)
+    ids = buf[safe_seeds, :, 0]     # (S, K)
+    mask = (ids >= 0) & (seeds >= 0)[:, None]
     k = k_table[jnp.maximum(ids, 0)].reshape(S, K, H * D).astype(jnp.float32)
     v = v_table[jnp.maximum(ids, 0)].reshape(S, K, H * D).astype(jnp.float32)
     if wt_k is not None:
-        dt = (seed_times[:, None] - buf[seeds, :, 1]).astype(jnp.float32)
+        dt = (seed_times[:, None] - buf[safe_seeds, :, 1]).astype(jnp.float32)
         phi = jnp.cos(dt[..., None] * time_w.reshape(-1)
                       + time_b.reshape(-1))                     # (S, K, dt)
         k = k + phi @ wt_k.reshape(wt_k.shape[0], H * D)
         v = v + phi @ wt_v.reshape(wt_v.shape[0], H * D)
     if we_k is not None:
-        eids = buf[seeds, :, 2]
+        eids = buf[safe_seeds, :, 2]
         e = edge_feats[jnp.maximum(eids, 0)].astype(jnp.float32)
         e = e * (eids >= 0)[..., None]          # zero featureless slots
         k = k + e @ we_k.reshape(we_k.shape[0], H * D)

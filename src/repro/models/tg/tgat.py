@@ -30,6 +30,7 @@ from repro.models.tg.common import (
     node_features,
 )
 from repro.nn.attention import (
+    fused_final_hop_attention,
     fused_seed_neighbor_attention,
     mha_init,
     seed_neighbor_attention,
@@ -99,12 +100,15 @@ def _fused_layer0(params, cfg, h_all, h_seed, seeds, seed_t, buf, edge_table,
 
 
 def _embed_fused(params, cfg: TGATConfig, batch, static_feats, mode):
-    """Device-sampling embed: layer-1 compute via ``fused_temporal_layer``.
+    """Device-sampling embed: every attention via the fused kernel family.
 
-    1-layer TGAT never materializes a pre-gathered neighbor tensor; 2-layer
-    TGAT fuses the hop-2 stage (the (S*K, K, ·) tensors) and keeps the final
-    layer's attention over the *computed* (S, K, d_model) layer-0 embeddings
-    — those are produced, not gathered, so there is nothing left to fuse.
+    1-layer TGAT runs a single ``fused_temporal_layer`` over the resident
+    buffer. 2-layer TGAT additionally embeds the hop-1 frontier through the
+    hop-2-aware variant (frontier ids may be -1 padding; each frontier node
+    queries the buffer at its own interaction time) and runs the final hop
+    through ``fused_final_hop_attention`` — the seeds attend over their
+    *computed* frontier embeddings via the per-seed-table variant, so no
+    ``(S, K, ·)`` float tensor is built on any hop, forward or backward.
     """
     seeds, seed_t = batch["seed_nodes"], batch["seed_times"]
     buf = batch["nbr_buf"]
@@ -116,22 +120,26 @@ def _embed_fused(params, cfg: TGATConfig, batch, static_feats, mode):
     if cfg.num_layers == 1:
         return h1
 
-    # Hop-1 frontier through layer 0 (fused over the same resident buffer;
-    # padded slots are clamped to node 0 and masked out again below).
+    # Hop-1 frontier through layer 0. Padded frontier slots (id -1) pass
+    # straight to the hop-2-aware kernel, which emits zero rows for them;
+    # only the query-side node features need a clamped gather.
     nbr_ids, nbr_t, nbr_mask = (batch["nbr_ids"], batch["nbr_times"],
                                 batch["nbr_mask"])
-    S, K = nbr_ids.shape
     f_nodes = nbr_ids.reshape(-1)
     f_t = nbr_t.reshape(-1)
-    f_safe = jnp.maximum(f_nodes, 0)
-    h_f = jnp.where((f_nodes >= 0)[:, None], h_all[f_safe], 0.0)
-    h_f1 = _fused_layer0(params, cfg, h_all, h_f, f_safe, f_t, buf,
+    h_f = jnp.where((f_nodes >= 0)[:, None],
+                    h_all[jnp.maximum(f_nodes, 0)], 0.0)
+    h_f1 = _fused_layer0(params, cfg, h_all, h_f, f_nodes, f_t, buf,
                          edge_table, mode)
-    # Layer 1: classic attention over the computed layer-0 embeddings.
-    h_nbr1 = h_f1.reshape(S, K, -1)
-    nbr_feats = batch.get("nbr_feats") if cfg.d_edge else None
-    return _layer(params, 1, cfg, h1, seed_t, h_nbr1, nbr_t, nbr_feats,
-                  nbr_mask)
+    # Final hop: seeds attend over their own K computed frontier rows.
+    dt_seed = time_encode(params["time"], jnp.zeros_like(seed_t, jnp.float32))
+    att = fused_final_hop_attention(
+        params["attn_1"], h_f1, jnp.concatenate([h1, dt_seed], axis=-1),
+        seed_t, nbr_t, batch["nbr_eids"], nbr_mask, params["time"],
+        d_edge=cfg.d_edge, edge_table=edge_table, num_heads=cfg.num_heads,
+        mode=mode,
+    )
+    return mlp(params["merge_1"], jnp.concatenate([att, h1], axis=-1))
 
 
 def embed(params, cfg: TGATConfig, batch, static_feats=None, fused=None):

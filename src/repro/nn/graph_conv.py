@@ -19,12 +19,16 @@ from repro.kernels.segment_reduce import segment_sum as _segment_sum_op
 from repro.nn.linear import dense, dense_init
 
 
-def segment_agg(values, seg_ids, num_segments: int):
+def segment_agg(values, seg_ids, num_segments: int, *, mode: str = "auto"):
     """Segment-sum ``values`` (E,) or (E, D) by ``seg_ids`` via the
-    ``kernels/segment_reduce`` op (Pallas on TPU, jnp reference elsewhere)."""
+    ``kernels/segment_reduce`` op (``mode`` dispatch as in that op: Pallas
+    kernel on TPU under "auto", jnp reference elsewhere, "interpret" forces
+    the kernel body on any backend). Differentiable w.r.t. ``values`` via
+    the op's gather-based custom VJP."""
     if values.ndim == 1:
-        return _segment_sum_op(values[:, None], seg_ids, num_segments)[:, 0]
-    return _segment_sum_op(values, seg_ids, num_segments)
+        return _segment_sum_op(values[:, None], seg_ids, num_segments,
+                               mode=mode)[:, 0]
+    return _segment_sum_op(values, seg_ids, num_segments, mode=mode)
 
 
 def gcn_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):

@@ -1,0 +1,173 @@
+"""Shared kernel-parity harness for every Pallas kernel family.
+
+Each family under ``src/repro/kernels/`` ships three things: a Pallas
+kernel, a pure-jnp oracle (``ref.py``), and a public ``ops.py`` wrapper
+with a ``mode`` dispatch argument. This module turns that contract into a
+single reusable test surface — the per-family sweeps in
+``tests/kernels/families.py`` are pure data, and ``test_parity.py`` runs
+every (family, case) pair through the same three assertion engines:
+
+* **forward parity** — the kernel body, executed on CPU through the Pallas
+  interpreter (``mode="interpret"``), must match the oracle within the
+  dtype tolerance policy;
+* **dispatch** — ``mode="interpret"`` must place a ``pallas_call`` in the
+  traced jaxpr and ``mode="ref"`` must not, so CI provably executes kernel
+  bodies (no skips) and the oracle fallback provably avoids them;
+* **gradient parity** — ``jax.grad`` through the op must match
+  ``jax.grad`` of the oracle. Families with a hand-written backward
+  (``fused_temporal_layer``'s flash-style backward kernel,
+  ``segment_sum``'s gather VJP) are differentiated on the kernel path
+  (``grad_mode="interpret"``); families without one (``pallas_call`` has
+  no autodiff rule) are differentiated on the dispatch path a CPU train
+  step actually takes (``grad_mode="ref"``).
+
+Tolerances: forward parity allows 2e-5 (f32) / 2e-2 (bf16) relative+
+absolute; gradient parity allows 1e-4 (f32) — the acceptance bound for the
+fused-layer backward. Cases may override either bound (looser physics, e.g.
+the SSD recurrence, document why at the case site).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FWD_TOL = {jnp.bfloat16: dict(rtol=2e-2, atol=2e-2),
+           "default": dict(rtol=2e-5, atol=2e-5)}
+GRAD_TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def forward_tol(dtype):
+    """Forward-parity tolerance policy for ``dtype`` (bf16 is loose: the
+    kernel accumulates in f32 but inputs/outputs round to 8-bit mantissas).
+    """
+    return FWD_TOL.get(dtype, FWD_TOL["default"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One parametrized input for a kernel family.
+
+    ``build(rng)`` returns ``(args, kw)`` for the family op; ``kw`` may
+    include kernel-only tuning knobs (block sizes), which the harness
+    strips before calling the oracle. ``dtype`` drives the tolerance
+    policy; ``tol``/``grad_tol`` override it (dict of rtol/atol).
+    """
+
+    name: str
+    build: Callable[[np.random.Generator], tuple]
+    dtype: Any = jnp.float32
+    tol: dict | None = None
+    grad_tol: dict | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelFamily:
+    """A kernel family's test contract: the public op, its oracle, the
+    parity/gradient case sweeps, and how to differentiate it.
+
+    ``kernel_only``: kw names consumed by the kernel path only (stripped
+    for the oracle). ``grad_argnums``: positional arg indices to
+    differentiate; ``grad_mode``: the dispatch mode whose VJP is under
+    test. ``grad_cases`` defaults to every case; heavy sweeps list a
+    subset.
+    """
+
+    name: str
+    op: Callable
+    ref: Callable
+    cases: tuple
+    kernel_only: frozenset = frozenset()
+    grad_argnums: tuple = ()
+    grad_mode: str = "interpret"
+    grad_cases: tuple | None = None
+
+    def ref_kw(self, kw: dict) -> dict:
+        """Strip kernel-only tuning knobs from an op kwargs dict."""
+        return {k: v for k, v in kw.items() if k not in self.kernel_only}
+
+    def rng(self, case: Case) -> np.random.Generator:
+        """Deterministic per-(family, case) generator."""
+        return np.random.default_rng(
+            abs(hash((self.name, case.name))) % (2 ** 32))
+
+
+def _has_primitive(jaxpr, name: str) -> bool:
+    """Recursively search a (Closed)Jaxpr for a primitive by name."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            return True
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for item in vs:
+                if hasattr(item, "eqns") or hasattr(item, "jaxpr"):
+                    if _has_primitive(item, name):
+                        return True
+    return False
+
+
+def assert_forward_parity(family: KernelFamily, case: Case):
+    """Engine 1: interpret-mode kernel output == oracle output."""
+    args, kw = case.build(family.rng(case))
+    got = family.op(*args, mode="interpret", **kw)
+    want = family.ref(*args, **family.ref_kw(kw))
+    tol = case.tol or forward_tol(case.dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def assert_interpret_dispatch(family: KernelFamily, case: Case):
+    """Engine 2: mode="interpret" traces a pallas_call; mode="ref" doesn't.
+
+    This is the no-CPU-skips guarantee: tier-1 CI runs on CPU, so kernel
+    bodies execute only if the interpret path actually reaches pallas_call.
+    """
+    args, kw = case.build(family.rng(case))
+    # Close over the args (some, like segment counts, are static ints the
+    # op's jit would reject as tracers).
+    interp = jax.make_jaxpr(
+        lambda: family.op(*args, mode="interpret", **kw))()
+    assert _has_primitive(interp, "pallas_call"), (
+        f"{family.name}: interpret mode never reached a pallas_call")
+    ref = jax.make_jaxpr(lambda: family.op(*args, mode="ref", **kw))()
+    assert not _has_primitive(ref, "pallas_call"), (
+        f"{family.name}: ref mode traced a pallas_call")
+
+
+def assert_grad_parity(family: KernelFamily, case: Case):
+    """Engine 3: jax.grad through the op (on ``family.grad_mode``) matches
+    jax.grad of the oracle, for every argnum in ``family.grad_argnums``.
+
+    The loss is sum(sin(out)) — a non-uniform cotangent, so transposition
+    bugs that a plain sum would cancel still surface.
+    """
+    args, kw = case.build(family.rng(case))
+    argnums = family.grad_argnums
+
+    def loss_op(*diff):
+        a = list(args)
+        for i, d in zip(argnums, diff):
+            a[i] = d
+        return jnp.sum(jnp.sin(
+            family.op(*a, mode=family.grad_mode, **kw).astype(jnp.float32)))
+
+    def loss_ref(*diff):
+        a = list(args)
+        for i, d in zip(argnums, diff):
+            a[i] = d
+        return jnp.sum(jnp.sin(
+            family.ref(*a, **family.ref_kw(kw)).astype(jnp.float32)))
+
+    diff = tuple(args[i] for i in argnums)
+    got = jax.grad(loss_op, tuple(range(len(diff))))(*diff)
+    want = jax.grad(loss_ref, tuple(range(len(diff))))(*diff)
+    tol = case.grad_tol or GRAD_TOL
+    for i, (g, w) in enumerate(zip(got, want)):
+        np.testing.assert_allclose(
+            np.asarray(g, np.float32), np.asarray(w, np.float32),
+            err_msg=f"{family.name}/{case.name} argnum {argnums[i]}", **tol)

@@ -1,0 +1,34 @@
+"""Parametrized parity runner: every kernel family × every declared case
+through the three shared assertion engines (forward parity vs the jnp
+oracle, interpret-mode dispatch — zero CPU skips — and gradient parity).
+See ``tests/kernels/harness.py`` for the contract and tolerance policy."""
+
+import pytest
+
+from tests.kernels.families import FAMILIES
+from tests.kernels.harness import (
+    assert_forward_parity,
+    assert_grad_parity,
+    assert_interpret_dispatch,
+)
+
+FWD = [pytest.param(f, c, id=f"{f.name}-{c.name}")
+       for f in FAMILIES for c in f.cases]
+GRAD = [pytest.param(f, c, id=f"{f.name}-{c.name}")
+        for f in FAMILIES for c in (f.grad_cases or f.cases)]
+DISPATCH = [pytest.param(f, f.cases[0], id=f.name) for f in FAMILIES]
+
+
+@pytest.mark.parametrize("family,case", FWD)
+def test_forward_parity(family, case):
+    assert_forward_parity(family, case)
+
+
+@pytest.mark.parametrize("family,case", DISPATCH)
+def test_interpret_dispatch(family, case):
+    assert_interpret_dispatch(family, case)
+
+
+@pytest.mark.parametrize("family,case", GRAD)
+def test_grad_parity(family, case):
+    assert_grad_parity(family, case)

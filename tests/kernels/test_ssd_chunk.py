@@ -1,0 +1,32 @@
+"""SSD-chunk family extras beyond the shared parity harness: agreement
+with the model-side ``ssd_mix`` path (grouped B/C broadcast to heads)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_kernel
+
+RNG = np.random.default_rng(42)
+
+
+def test_ssd_chunk_matches_model_layer():
+    """The kernel must agree with the model's jnp ssd_mix path too."""
+    from repro.configs import get_arch
+    from repro.models.lm.layers import ssd_mix
+
+    cfg = get_arch("mamba2-780m").reduced()
+    S, H, P, N = 48, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    x = jnp.asarray(RNG.standard_normal((1, S, H, P)), jnp.float32) * 0.5
+    dt = jax.nn.softplus(
+        jnp.asarray(RNG.standard_normal((1, S, H)), jnp.float32))
+    a = -jnp.exp(jnp.asarray(RNG.standard_normal(H), jnp.float32) * 0.3)
+    B = jnp.asarray(RNG.standard_normal((1, S, 1, N)), jnp.float32) * 0.5
+    C = jnp.asarray(RNG.standard_normal((1, S, 1, N)), jnp.float32) * 0.5
+    y_model = ssd_mix(cfg, x, dt, a, B, C, chunk=16)
+    rep = H  # groups=1 -> repeat to heads
+    y_kernel = ssd_chunk_kernel(
+        x[0], dt[0], a,
+        jnp.repeat(B[0], rep, axis=1), jnp.repeat(C[0], rep, axis=1),
+        chunk=16, interpret=True)
+    np.testing.assert_allclose(y_model[0], y_kernel, rtol=1e-3, atol=1e-3)

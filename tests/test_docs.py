@@ -60,6 +60,11 @@ DOCUMENTED_MODULES = [
     "repro.tg.experiment",
     "repro.serve.graph_service",
     "repro.serve.faults",
+    # Test infrastructure is public surface too: the shared kernel-parity
+    # harness and the jaxpr-inspection helpers are how new kernel families
+    # get their acceptance coverage.
+    "tests.utils",
+    "tests.kernels.harness",
 ]
 
 

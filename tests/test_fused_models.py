@@ -18,6 +18,7 @@ from repro.core import (
     TRAIN_KEY,
 )
 from repro.models.tg import tgat, tgn
+from tests.utils import assert_no_intermediate, float_intermediates
 
 
 def _stream(n=400, num_nodes=40, d_edge=6, seed=0):
@@ -117,21 +118,6 @@ def test_fused_requires_device_sampling_batch():
                    fused="ref")
 
 
-def _float_intermediates(jaxpr, S, K):
-    """All float intermediate shapes in ``jaxpr`` whose leading dims are
-    (S, K) with a feature tail — the pre-gathered neighbor kv tensors."""
-    hits = []
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            aval = getattr(v, "aval", None)
-            if aval is None or not hasattr(aval, "shape"):
-                continue
-            if (np.issubdtype(aval.dtype, np.floating) and len(aval.shape) >= 3
-                    and aval.shape[0] == S and aval.shape[1] == K):
-                hits.append(tuple(aval.shape))
-    return hits
-
-
 def test_fused_tgat_never_materializes_pregathered_kv():
     """Acceptance: with the fused kernel active, the (S, K, H, Dh) / (S, K,
     d_kv) neighbor tensors must not appear anywhere in the forward jaxpr —
@@ -146,11 +132,86 @@ def test_fused_tgat_never_materializes_pregathered_kv():
 
     fused_jaxpr = jax.make_jaxpr(
         lambda p, b: tgat.embed(p, cfg, b, fused="interpret"))(params, batch)
-    assert _float_intermediates(fused_jaxpr.jaxpr, S, K) == []
+    assert_no_intermediate(fused_jaxpr, (S, K))
 
     classic_jaxpr = jax.make_jaxpr(
         lambda p, b: tgat.embed(p, cfg, b, fused=False))(params, batch)
-    assert _float_intermediates(classic_jaxpr.jaxpr, S, K) != []
+    assert float_intermediates(classic_jaxpr, (S, K)) != []
+
+
+def _train_step_jaxpr(loss_fn, params, batch):
+    """Trace a full train step (loss + grads + AdamW update) to a jaxpr."""
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    opt_cfg = AdamWConfig(lr=1e-4)
+    opt0 = adamw_init(params)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+
+    return jax.make_jaxpr(step)(params, opt0, batch)
+
+
+@pytest.mark.parametrize("num_layers", [1, 2])
+def test_fused_tgat_train_step_is_gather_free(num_layers):
+    """Tentpole acceptance: the *train* step — forward AND the flash-style
+    backward — never materializes an (S, K, ·) or (S*K, K, ·) float tensor
+    for fused TGAT. With the backward now a Pallas kernel (not the oracle
+    recompute), the whole jitted value_and_grad + AdamW step is gather-free;
+    the classic path is the positive control."""
+    from repro.models.tg.common import bce_link_loss
+
+    data, feats = _stream()
+    batch = _device_batches(data, feats, num_hops=num_layers)[-1]
+    cfg = tgat.TGATConfig(num_nodes=40, d_edge=feats.shape[1], d_model=32,
+                          d_time=16, num_heads=2, num_layers=num_layers, k=6)
+    params = tgat.init(jax.random.PRNGKey(0), cfg)
+    S, K = batch["nbr_ids"].shape
+
+    def loss(fused):
+        def f(params, batch):
+            pos, neg = tgat.link_scores(params, cfg, batch, 50, fused=fused)
+            return bce_link_loss(pos, neg, batch["batch_mask"])
+        return f
+
+    jaxpr = _train_step_jaxpr(loss("interpret"), params, batch)
+    assert_no_intermediate(jaxpr, (S, K))
+    assert_no_intermediate(jaxpr, (S * K, K))
+
+    classic = _train_step_jaxpr(loss(False), params, batch)
+    assert float_intermediates(classic, (S, K)) != []
+
+
+def test_fused_tgn_train_step_is_gather_free():
+    """Same train-step acceptance for fused TGN (memory ‖ features kv
+    tables): no (S, K, ·) float intermediate in forward or backward."""
+    from repro.models.tg.common import bce_link_loss
+
+    data, feats = _stream()
+    batches = _device_batches(data, feats)
+    cfg = tgn.TGNConfig(num_nodes=40, d_edge=feats.shape[1], d_model=32,
+                        d_time=16, d_memory=24, k=6)
+    params = tgn.init(jax.random.PRNGKey(0), cfg)
+    state = tgn.init_state(cfg)
+    for b in batches[:3]:
+        state = tgn.update_memory(params, cfg, state, b)
+    batch = batches[3]
+    S, K = batch["nbr_ids"].shape
+
+    def loss(fused):
+        def f(params, batch):
+            (pos, neg), _ = tgn.link_scores(params, cfg, state, batch, 50,
+                                            fused=fused)
+            return bce_link_loss(pos, neg, batch["batch_mask"])
+        return f
+
+    jaxpr = _train_step_jaxpr(loss("interpret"), params, batch)
+    assert_no_intermediate(jaxpr, (S, K))
+
+    classic = _train_step_jaxpr(loss(False), params, batch)
+    assert float_intermediates(classic, (S, K)) != []
 
 
 def test_trainer_device_sampling_bitwise_parity(small_stream):

@@ -1,0 +1,69 @@
+"""Shared test utilities: jaxpr-inspection helpers.
+
+The fused-kernel acceptance story ("no pre-gathered neighbor tensor ever
+lands in HBM") is asserted structurally: trace the jitted computation,
+walk every equation — recursing into sub-jaxprs so ``custom_vjp`` branches,
+``scan`` bodies and jitted sub-calls are covered, but *not* into
+``pallas_call`` bodies, whose internal scratch is VMEM by construction —
+and require that no floating-point intermediate matches the banned shape
+prefix. ``tests/test_fused_models.py`` uses this to prove the full train
+step (forward *and* backward) of fused TGAT/TGN is gather-free.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _iter_jaxprs(params):
+    """Yield every (Closed)Jaxpr reachable from an eqn's params dict."""
+    for v in params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for item in vs:
+            if hasattr(item, "eqns"):  # raw Jaxpr
+                yield item
+            elif hasattr(item, "jaxpr") and hasattr(
+                    getattr(item, "jaxpr"), "eqns"):  # ClosedJaxpr
+                yield item.jaxpr
+
+
+def float_intermediates(jaxpr, shape_prefix):
+    """All float intermediate shapes in ``jaxpr`` (recursively) whose
+    leading dims equal ``shape_prefix`` and that carry at least one more
+    (feature) axis.
+
+    ``jaxpr`` may be a ``ClosedJaxpr`` or a raw ``Jaxpr``; ``shape_prefix``
+    is a tuple of leading dimensions, e.g. ``(S, K)`` for the pre-gathered
+    neighbor kv tensors. Equations inside ``pallas_call`` bodies are not
+    visited (kernel-internal values live in VMEM scratch, which is exactly
+    the memory win being asserted). Returns a list of offending shapes —
+    empty means the computation never materializes such a tensor.
+    """
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    prefix = tuple(shape_prefix)
+    n = len(prefix)
+    hits = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            shape = getattr(aval, "shape", None)
+            if shape is None or getattr(aval, "dtype", None) is None:
+                continue
+            if (np.issubdtype(aval.dtype, np.floating)
+                    and len(shape) > n and tuple(shape[:n]) == prefix):
+                hits.append(tuple(shape))
+        for sub in _iter_jaxprs(eqn.params):
+            hits.extend(float_intermediates(sub, prefix))
+    return hits
+
+
+def assert_no_intermediate(jaxpr, shape_prefix):
+    """Assert ``jaxpr`` contains no float intermediate whose shape starts
+    with ``shape_prefix`` (see ``float_intermediates``); raises with the
+    offending shapes otherwise."""
+    hits = float_intermediates(jaxpr, shape_prefix)
+    assert not hits, (
+        f"found float intermediates with banned shape prefix "
+        f"{tuple(shape_prefix)}: {sorted(set(hits))}")
