@@ -1,13 +1,19 @@
-"""Mesh-sharded sampler scaling curve (docs/sharding.md).
+"""Mesh-sharded sampler + 2-D train-step scaling curves (docs/sharding.md).
 
 ``bench_sharded_sampler`` times the device-resident recency update+sample
 round-trip and the device uniform sample at every shard count that fits the
 visible device set (1, 2, 4, 8, ...), emitting one BENCH_JSON point per
 (sampler, shards) pair — a scaling curve over the trajectory, not a single
-number. On the CPU CI host (``--xla_force_host_platform_device_count=8``)
-the curve measures shard_map/collective *overhead* (all "devices" share the
-same cores, so there is no real HBM win to see); on real multi-chip
-hardware the same curve is the scaling measurement. Records carry
+number; the uniform sampler is timed under both CSR partitions (equal-rows
+and degree-balanced boundaries — identical draws, different per-shard
+padding). ``bench_2d_train_step`` times the full jitted CTDG train step
+across 2-D ``(data, nodes)`` mesh shapes: each axis swept independently
+((d,1) and (1,n) curves) plus the combined shapes, so the per-axis cost
+composition is visible. On the CPU CI host
+(``--xla_force_host_platform_device_count=8``) the curves measure
+shard_map/collective *overhead* (all "devices" share the same cores, so
+there is no real HBM/FLOP win to see); on real multi-chip hardware the
+same curves are the scaling measurement. Records carry
 ``backend``/``device_count`` metadata (``benchmarks/common.py``) so the
 regression gate never confuses the two regimes.
 """
@@ -86,6 +92,66 @@ def bench_sharded_sampler(B: int = 200, K: int = 20, N: int = 20_000,
         emit(f"sharded/uniform_sample_{tag}", t_uni,
              f"K{K} N{N} E{E} S{S} shards={shards}")
 
+        if shards:
+            deg = DeviceUniformSampler(N, K, mesh=mesh, partition="degree")
+            deg.build(esrc, edst, et)
+            run_uniform(deg)  # compile
+            t_deg = timeit(lambda: run_uniform(deg), repeats=5) / num_batches
+            emit(f"sharded/uniform_sample_degree_{tag}", t_deg,
+                 f"K{K} N{N} E{E} S{S} shards={shards} partition=degree")
+
+
+def bench_2d_train_step(batch_size: int = 100) -> None:
+    """Wall time of one jitted CTDG (TGAT, fused) train step across 2-D
+    mesh shapes.
+
+    Sweeps the data axis alone ((2,1), (4,1)), the node axis alone
+    ((1,2), (1,4)), and the combined shapes ((2,2), (2,4), (4,2)),
+    skipping any shape that needs more devices than are visible; (1,1) is
+    the single-device fused baseline the 2-D step must parity-match. Uses
+    the fused attention path (Pallas on TPU, the jnp fused oracle
+    elsewhere) so the shard-aware layer and its node-axis psum are inside
+    the timed step. One train batch is staged through the real hook
+    pipeline, then the step itself — grads, psums, optimizer — is timed
+    in isolation (the jitted step is pure in the batch: sampler updates
+    happen at batch production, so replaying one batch is sound).
+    """
+    from repro.core import TRAIN_KEY
+    from repro.data import generate
+    from repro.tg.specs import SamplerSpec
+    from repro.train.loop import CTDGLinkPipeline
+
+    data = generate("tiny")
+    fused = "auto" if jax.default_backend() == "tpu" else "ref"
+    shapes = [(1, 1), (2, 1), (4, 1),
+              (1, 2), (1, 4),
+              (2, 2), (2, 4), (4, 2)]
+    skipped = []
+    for ds, ns in shapes:
+        if ds * ns > jax.device_count():
+            skipped.append((ds, ns))
+            continue
+        spec = SamplerSpec(kind="recency", device=True,
+                           shards=ns if ns > 1 else None,
+                           expose_buffer=True if ns > 1 else None)
+        p = CTDGLinkPipeline("tgat", data, batch_size=batch_size, seed=0,
+                             sampler_spec=spec, data_shards=ds, fused=fused)
+        p.reset_epoch_state()
+        with p.manager.activate(TRAIN_KEY):
+            bt = p._batch_tensors(next(iter(p._loader(p.train_data))))
+
+        def step():
+            out = p._train_step(p.params, p.opt_state, bt)
+            jax.block_until_ready(out[2])
+
+        step()  # compile
+        t = timeit(step, repeats=5)
+        emit(f"sharded/2d_train_step_d{ds}n{ns}", t,
+             f"tgat fused={fused} B{batch_size} mesh={ds}x{ns}")
+    if skipped:
+        print(f"# skipped (need more devices): {skipped}", flush=True)
+
 
 if __name__ == "__main__":
     bench_sharded_sampler()
+    bench_2d_train_step()

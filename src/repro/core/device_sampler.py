@@ -401,30 +401,31 @@ class DeviceRecencySampler:
 
     @property
     def buffer_ids(self):
-        """(N+1, K) neighbor-id rows — the fused attention kernel's input.
-        Unavailable in sharded mode (the fused path is single-device)."""
-        self._require_unsharded("buffer_ids")
+        """(rows, K) neighbor-id rows — the fused attention kernel's input.
+        Single-device rows = N+1 (global sink last); sharded rows =
+        shards*(per+1) with a local sink at local row ``per`` of each shard
+        block (see ``rows_per_shard`` / ``docs/sharding.md``)."""
         return self.state["buf"][..., 0]
 
     @property
     def packed_buffer(self):
-        """(N+1, K, 3) packed rows (id, time, edge id) — what
-        ``fused_temporal_layer`` consumes. Construct the sampler with
-        ``retain_state=True`` if you hold on to this across ``update`` calls
-        on a donating (non-CPU) backend. Unavailable in sharded mode: the
-        sharded layout interleaves per-shard sink rows, so node ids are not
-        direct row indices there."""
-        self._require_unsharded("packed_buffer")
+        """Packed rows (id, time, edge id) — what ``fused_temporal_layer``
+        consumes. Construct the sampler with ``retain_state=True`` if you
+        hold on to this across ``update`` calls on a donating (non-CPU)
+        backend. Single-device: ``(N+1, K, 3)`` with the global sink at row
+        N. Sharded: the ``(shards*(per+1), K, 3)`` per-shard-sink layout,
+        ``P(mesh_axis)``-sharded — node ids are *not* direct row indices;
+        consume it through ``fused_temporal_layer_sharded`` inside a
+        shard_map over ``mesh_axis`` (each shard addresses its block with
+        seed-lo-offset local ids; see ``docs/sharding.md``)."""
         return self.state["buf"]
 
-    def _require_unsharded(self, what: str) -> None:
-        if self._mesh is not None:
-            raise RuntimeError(
-                f"{what} is not available on a mesh-sharded sampler — the "
-                f"sharded layout interleaves per-shard sink rows (see "
-                f"docs/sharding.md); the fused buffer-consuming model path "
-                f"is single-device"
-            )
+    @property
+    def rows_per_shard(self) -> Optional[int]:
+        """Node rows owned per shard (``ceil(N/shards)``) in sharded mode;
+        ``None`` on a single-device sampler. Each shard's local block in
+        ``packed_buffer`` is ``rows_per_shard + 1`` rows (sink last)."""
+        return self._per if self._mesh is not None else None
 
     # ------------------------------------------------------------------
     _as_i32 = staticmethod(as_int32)

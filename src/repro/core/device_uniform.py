@@ -26,9 +26,12 @@ checkpoints are interchangeable between the two — mirroring the
 sampler families drop-in swappable inside ``RECIPE_TGB_LINK``.
 
 **Multi-device sharding** (``mesh=`` + ``docs/sharding.md``): the CSR is
-split on node boundaries over a 1-D mesh — shard ``s`` owns nodes
-``[s*per, (s+1)*per)`` and holds exactly their adjacency slice, padded to
-the max per-shard edge count with int32-max keys so the local
+split on node boundaries over the mesh's node axis — by default shard
+``s`` owns nodes ``[s*per, (s+1)*per)`` (``partition="rows"``); with
+``partition="degree"`` the cuts fall at cumulative-degree quantiles
+instead, equalizing per-shard edge counts on skewed graphs (see
+``_shard_bounds``). Each shard holds exactly its nodes' adjacency slice,
+padded to the max per-shard edge count with int32-max keys so the local
 ``searchsorted`` stays correct. The sharded build runs host-side
 (``_host_csr``, a stable numpy sort bit-identical to the jitted build)
 and each shard's slice is materialized directly on its device, so the
@@ -125,9 +128,12 @@ class DeviceUniformSampler:
 
     def __init__(self, num_nodes: int, k: int, seed: int = 0, device=None,
                  checkpoint_adjacency: bool = True, mesh=None,
-                 mesh_axis: str = "data"):
+                 mesh_axis: str = "data", partition: str = "rows"):
         if k <= 0:
             raise ValueError("k must be positive")
+        if partition not in ("rows", "degree"):
+            raise ValueError(
+                f"partition must be 'rows' or 'degree', got {partition!r}")
         self.num_nodes = int(num_nodes)
         self.k = int(k)
         self._seed = int(seed)
@@ -136,6 +142,7 @@ class DeviceUniformSampler:
         self.checkpoint_adjacency = bool(checkpoint_adjacency)
         self._mesh = mesh
         self._mesh_axis = mesh_axis
+        self.partition = partition
         if mesh is not None:
             from repro.distributed.sharding import (
                 node_rows_per_shard,
@@ -241,23 +248,52 @@ class DeviceUniformSampler:
                 "adj_key": key, "indptr": indptr, "tvals": tvals,
                 "base": base}
 
+    def _shard_bounds(self, indptr: np.ndarray) -> np.ndarray:
+        """Per-shard node boundaries ``bounds`` (s+1,): shard ``i`` owns
+        nodes ``[bounds[i], bounds[i+1])``.
+
+        ``partition="rows"`` (default) keeps the equal-row-count split of
+        ``node_rows_per_shard`` — shard ``i`` owns ``[i*per, (i+1)*per)``.
+        ``partition="degree"`` cuts at the cumulative-degree quantiles
+        instead (``searchsorted`` on the global indptr), so each shard
+        holds roughly ``E/s`` adjacency entries — on skewed graphs this
+        shrinks the max per-shard edge padding ``L`` (and with it every
+        shard's CSR allocation) relative to the equal-rows split, at the
+        cost of variable per-shard node counts (local indptr is padded to
+        the max). Both splits draw identically: the prefix-length psum and
+        the replicated draws do not depend on where the cuts fall.
+        """
+        s, n = self._shards, self.num_nodes
+        if self.partition == "degree":
+            total = int(indptr[n])
+            targets = (np.arange(1, s, dtype=np.int64) * total) // s
+            cuts = np.searchsorted(indptr[: n + 1], targets)
+            bounds = np.concatenate([[0], cuts, [n]]).astype(np.int64)
+            return np.maximum.accumulate(bounds)
+        per = self._per
+        return np.minimum(np.arange(s + 1, dtype=np.int64) * per, n)
+
     def _shard_adjacency(self, host: dict) -> None:
         """Split the host CSR on node boundaries and place it row-sharded.
 
-        Shard ``s`` owns nodes ``[s*per, (s+1)*per)``; its adjacency slice
-        (a contiguous, still globally-sorted run of the node-major arrays)
-        is padded to the max per-shard edge count ``L`` — keys with int32
-        max so a local ``searchsorted`` never lands in padding, values with
-        0 (never read: gathers are masked by ownership and prefix length).
-        Local ``indptr`` is rebased per shard with ``per + 1`` entries.
+        Shard ``i`` owns nodes ``[bounds[i], bounds[i+1])`` (see
+        ``_shard_bounds`` for the equal-rows vs degree-balanced cut); its
+        adjacency slice (a contiguous, still globally-sorted run of the
+        node-major arrays) is padded to the max per-shard edge count ``L``
+        — keys with int32 max so a local ``searchsorted`` never lands in
+        padding, values with 0 (never read: gathers are masked by
+        ownership and prefix length). Local ``indptr`` is rebased per
+        shard and padded to the max per-shard node count (clamping at the
+        shard's upper bound, so padding entries read as zero-degree).
         Each shard's padded slice is materialized directly on its device
         via ``jax.make_array_from_callback`` — no device (and no extra
         host copy) ever holds the padded global layout.
         """
-        s, per, n = self._shards, self._per, self.num_nodes
+        s, n = self._shards, self.num_nodes
         indptr = np.asarray(host["indptr"], np.int64)
-        node_lo = np.minimum(np.arange(s, dtype=np.int64) * per, n)
-        node_hi = np.minimum(node_lo + per, n)
+        bounds = self._shard_bounds(indptr)
+        node_lo, node_hi = bounds[:-1], bounds[1:]
+        rows = max(int((node_hi - node_lo).max()), 1)
         off = indptr[node_lo]
         counts = indptr[node_hi] - off
         L = max(int(counts.max()), 1)
@@ -273,8 +309,8 @@ class DeviceUniformSampler:
                                                 self._row_sharding, cb)
 
         def indptr_cb(index):
-            i = (index[0].start or 0) // (per + 1)
-            nodes = np.minimum(node_lo[i] + np.arange(per + 1), node_hi[i])
+            i = (index[0].start or 0) // (rows + 1)
+            nodes = np.minimum(node_lo[i] + np.arange(rows + 1), node_hi[i])
             return (indptr[nodes] - off[i]).astype(np.int32)
 
         self._adj = {
@@ -283,7 +319,9 @@ class DeviceUniformSampler:
             "adj_e": edge_cb(np.asarray(host["adj_e"]), 0),
             "adj_key": edge_cb(np.asarray(host["adj_key"]), _I32_MAX),
             "indptr": jax.make_array_from_callback(
-                (s * (per + 1),), self._row_sharding, indptr_cb),
+                (s * (rows + 1),), self._row_sharding, indptr_cb),
+            "bounds": jax.device_put(jnp.asarray(bounds, jnp.int32),
+                                     self._replicated),
             "tvals": jax.device_put(jnp.asarray(host["tvals"], jnp.int32),
                                     self._replicated),
             "base": jax.device_put(jnp.asarray(host["base"], jnp.int32),
@@ -302,15 +340,16 @@ class DeviceUniformSampler:
         from repro.distributed.sharding import SHARD_MAP_KW, shard_map
 
         mesh, axis = self._mesh, self._mesh_axis
-        per, k, L = self._per, self.k, self._L
+        k, L = self.k, self._L
         adj_specs = {"adj_nbr": P(axis), "adj_t": P(axis), "adj_e": P(axis),
-                     "adj_key": P(axis), "indptr": P(axis), "tvals": P(),
-                     "base": P()}
+                     "adj_key": P(axis), "indptr": P(axis), "bounds": P(),
+                     "tvals": P(), "base": P()}
         rep = P()
 
         def sample_body(adj, seeds, query_t, rng_key):
-            lo = jax.lax.axis_index(axis).astype(jnp.int32) * per
-            owned = (seeds >= lo) & (seeds < lo + per)
+            i = jax.lax.axis_index(axis)
+            lo, hi = adj["bounds"][i], adj["bounds"][i + 1]
+            owned = (seeds >= lo) & (seeds < hi)
             qranks = jnp.searchsorted(adj["tvals"], query_t,
                                       side="left").astype(jnp.int32)
             starts = adj["indptr"][jnp.where(owned, seeds - lo, 0)]

@@ -233,7 +233,8 @@ def _tgb_link(
                 device=None if mesh is not None else device,
                 num_hops=num_hops,
                 checkpoint_adjacency=spec.checkpoint_adjacency,
-                mesh=mesh, mesh_axis=mesh_axis))
+                mesh=mesh, mesh_axis=mesh_axis,
+                partition=getattr(spec, "partition", "rows")))
         else:
             m.register(UniformNeighborHook(
                 num_nodes, k, include_negatives=True, seed=seed,

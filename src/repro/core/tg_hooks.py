@@ -42,6 +42,45 @@ def _jnp():
     return jnp
 
 
+from collections import OrderedDict  # noqa: E402
+
+_EDGE_TABLE_CACHE: OrderedDict = OrderedDict()
+_EDGE_TABLE_CACHE_MAX = 8
+
+
+def device_edge_table(feats, sharding=None):
+    """Device-resident ``float32`` view of an edge-feature storage array,
+    cached by storage identity.
+
+    Epoch resets and mesh re-stagings rebuild hook pipelines over the
+    *same* host storage array; re-transferring the full ``(E, d)`` table
+    each time is pure waste (ROADMAP "TPU memory niceties"). The cache key
+    is ``(id(storage), shape, dtype, sharding)`` and each entry pins the
+    source array — its ``id`` cannot be recycled while the entry lives, so
+    a hit is guaranteed to be the same storage — with a small FIFO bound
+    keeping the pin set tiny. JAX arrays pass through (re-placed only when
+    a ``sharding`` is requested).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if isinstance(feats, jax.Array):
+        return feats if sharding is None else jax.device_put(feats, sharding)
+    arr = np.asarray(feats)
+    key = (id(feats), arr.shape, arr.dtype.str, sharding)
+    entry = _EDGE_TABLE_CACHE.get(key)
+    if entry is not None and entry[0] is feats:
+        _EDGE_TABLE_CACHE.move_to_end(key)
+        return entry[1]
+    table = jnp.asarray(arr, jnp.float32)
+    if sharding is not None:
+        table = jax.device_put(table, sharding)
+    _EDGE_TABLE_CACHE[key] = (feats, table)
+    while len(_EDGE_TABLE_CACHE) > _EDGE_TABLE_CACHE_MAX:
+        _EDGE_TABLE_CACHE.popitem(last=False)
+    return table
+
+
 class NegativeEdgeHook(Hook):
     """Produces ``neg``: (B, num_negatives) corrupted destinations."""
 
@@ -239,11 +278,13 @@ class DeviceRecencyNeighborHook(Hook):
       * buffer updates consume the full padded batch plus ``batch_mask`` as
         a validity mask instead of slicing, again for fixed shapes.
 
-    With ``mesh`` (a 1-D ``jax.sharding.Mesh``) the sampler state is
-    partitioned row-wise by node id and update/sample run through
-    ``shard_map`` — same outputs, state scales past one device's HBM.
-    ``expose_buffer`` is forced off there (the fused ``nbr_buf`` model path
-    is single-device); see ``docs/sharding.md``.
+    With ``mesh`` the sampler state is partitioned row-wise by node id
+    over the mesh's node axis and update/sample run through ``shard_map``
+    — same outputs, state scales past one device's HBM. ``expose_buffer``
+    defaults off there (the sharded packed layout interleaves per-shard
+    sink rows); pass ``expose_buffer=True`` to carry the *sharded* buffer
+    on each batch for the shard-aware fused attention path
+    (``fused_temporal_layer_sharded``); see ``docs/sharding.md``.
     """
 
     def __init__(self, num_nodes: int, k: int, num_hops: int = 1,
@@ -252,16 +293,14 @@ class DeviceRecencyNeighborHook(Hook):
                  edge_feats=None, mesh=None, mesh_axis: str = "data"):
         if num_hops not in (1, 2):
             raise ValueError("num_hops must be 1 or 2")
-        if mesh is not None:
-            # The fused buffer-consuming model path is single-device: the
-            # sharded layout interleaves per-shard sink rows, so node ids
-            # are not direct rows of the packed buffer there.
-            if expose_buffer:
-                raise ValueError(
-                    "expose_buffer=True is incompatible with a mesh-sharded "
-                    "sampler (the fused nbr_buf path is single-device; see "
-                    "docs/sharding.md)"
-                )
+        if mesh is not None and expose_buffer is None:
+            # Auto under a mesh: keep the buffer private. The sharded
+            # packed layout interleaves per-shard sink rows, so only the
+            # shard-aware fused path (``fused_temporal_layer_sharded``
+            # inside a shard_map over the node axis) can consume it —
+            # pipelines that want it must opt in with expose_buffer=True
+            # (CTDGLinkPipeline does when the fused path is enabled; see
+            # docs/sharding.md).
             expose_buffer = False
         if expose_buffer is None:
             # Auto: expose wherever a consumer can exist. The fused model
@@ -299,9 +338,14 @@ class DeviceRecencyNeighborHook(Hook):
         self.expose_buffer = expose_buffer
         self._edge_table = None
         if expose_buffer and edge_feats is not None:
-            import jax.numpy as jnp
+            sh = None
+            if mesh is not None:
+                # Replicate the table over the whole mesh up front so the
+                # sharded steps never re-stage it per invocation.
+                from repro.distributed.sharding import replicated_sharding
 
-            self._edge_table = jnp.asarray(edge_feats, jnp.float32)
+                sh = replicated_sharding(mesh)
+            self._edge_table = device_edge_table(edge_feats, sharding=sh)
 
     def reset_state(self) -> None:
         """Clear the on-device circular buffers (start of an epoch)."""
@@ -469,7 +513,7 @@ class DeviceUniformNeighborHook(UniformNeighborHook):
     def __init__(self, num_nodes: int, k: int, include_negatives: bool = False,
                  seed: int = 0, device=None, num_hops: int = 1,
                  checkpoint_adjacency: bool = True, mesh=None,
-                 mesh_axis: str = "data"):
+                 mesh_axis: str = "data", partition: str = "rows"):
         from repro.core.device_uniform import DeviceUniformSampler
 
         super().__init__(num_nodes, k, include_negatives=include_negatives,
@@ -477,7 +521,7 @@ class DeviceUniformNeighborHook(UniformNeighborHook):
         self.sampler = DeviceUniformSampler(
             num_nodes, k, seed=seed, device=device,
             checkpoint_adjacency=checkpoint_adjacency, mesh=mesh,
-            mesh_axis=mesh_axis)
+            mesh_axis=mesh_axis, partition=partition)
         # Shared checkpoint key with the host twin (see
         # DeviceRecencyNeighborHook): state_dicts are interchangeable.
         self.state_key = "UniformNeighborHook"
@@ -566,7 +610,7 @@ class EdgeFeatureLookupHook(Hook):
                 out = jnp.zeros(eids.shape + (self._dim,), jnp.float32)
             else:
                 if not hasattr(self, "_feats_dev"):
-                    self._feats_dev = jnp.asarray(self._feats, jnp.float32)
+                    self._feats_dev = device_edge_table(self._feats)
                 safe = jnp.maximum(eids, 0)
                 out = jnp.where((eids >= 0)[..., None],
                                 self._feats_dev[safe], 0.0)

@@ -37,6 +37,7 @@ from repro.optim import AdamWConfig, adamw_init, adamw_update
 # and lives with the other mesh helpers in distributed/sharding.py.
 from repro.distributed.sharding import SHARD_MAP_KW as _SHARD_MAP_KW
 from repro.distributed.sharding import shard_map as _shard_map
+from repro.distributed.sharding import sync_state_masked_psum
 
 
 class DataParallelTrainer:
@@ -99,21 +100,7 @@ class DataParallelTrainer:
             # DistTGL-style state sync: mean over shards that touched a row
             if stateful and touched is not None:
                 touched_any = touched.any(0)  # over accum steps
-                cnt = jax.lax.psum(touched_any.astype(jnp.float32), axis)
-                for key, val in state.items():
-                    m = touched_any
-                    while m.ndim < val.ndim:
-                        m = m[..., None]
-                    contrib = jnp.where(m, val, 0.0).astype(jnp.float32)
-                    summed = jax.lax.psum(contrib, axis)
-                    c = jnp.maximum(cnt, 1.0)
-                    while c.ndim < val.ndim:
-                        c = c[..., None]
-                    mean = summed / c
-                    keep = cnt > 0
-                    while keep.ndim < val.ndim:
-                        keep = keep[..., None]
-                    state[key] = jnp.where(keep, mean, val.astype(jnp.float32)).astype(val.dtype)
+                state = sync_state_masked_psum(state, touched_any, axis)
 
             params_new, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
             return params_new, opt_state, err, state, loss

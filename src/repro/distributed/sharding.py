@@ -28,6 +28,7 @@ import threading
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -208,6 +209,59 @@ def make_node_mesh(shards: int, axis: str = "data",
             f"--xla_force_host_platform_device_count=N to emulate more)"
         )
     return Mesh(np.asarray(devices[:shards]), (axis,))
+
+
+def make_2d_mesh(data_shards: int, node_shards: int,
+                 axes: Tuple[str, str] = ("data", "nodes"),
+                 devices: Optional[Sequence] = None) -> Mesh:
+    """A 2-D ``(data, nodes)`` mesh over the first ``data*nodes`` devices.
+
+    The data axis shards event batches (contiguous time-ordered
+    sub-streams, DistTGL-style); the node axis shards sampler buffers /
+    CSR adjacency row-wise by node id. Sampler state uses
+    ``P(axes[1])`` placements (sharded over nodes, replicated over data);
+    batch tensors inside the 2-D train step use ``P(axes[0])``.
+    """
+    if data_shards < 1 or node_shards < 1:
+        raise ValueError("mesh axis sizes must be >= 1")
+    devices = list(devices if devices is not None else jax.devices())
+    need = data_shards * node_shards
+    if need > len(devices):
+        raise ValueError(
+            f"requested a {data_shards}x{node_shards} mesh but only "
+            f"{len(devices)} devices are visible (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N to emulate more)"
+        )
+    grid = np.asarray(devices[:need]).reshape(data_shards, node_shards)
+    return Mesh(grid, axes)
+
+
+def sync_state_masked_psum(state: Dict, touched, axis: str) -> Dict:
+    """DistTGL-style masked-psum model-state sync inside ``shard_map``.
+
+    ``touched`` is a bool mask over state rows (leading dim of every value
+    in ``state``): rows touched on exactly one shard of ``axis`` take that
+    shard's value; rows touched on several take the mean; untouched rows
+    keep their (replicated) local value. Staleness is bounded by one batch
+    — the DistTGL trade-off documented in ``distributed/dp_trainer.py``.
+    """
+    cnt = jax.lax.psum(touched.astype(jnp.float32), axis)
+    out = {}
+    for key, val in state.items():
+        m = touched
+        while m.ndim < val.ndim:
+            m = m[..., None]
+        contrib = jnp.where(m, val, 0.0).astype(jnp.float32)
+        summed = jax.lax.psum(contrib, axis)
+        c = jnp.maximum(cnt, 1.0)
+        while c.ndim < val.ndim:
+            c = c[..., None]
+        mean = summed / c
+        keep = cnt > 0
+        while keep.ndim < val.ndim:
+            keep = keep[..., None]
+        out[key] = jnp.where(keep, mean, val.astype(jnp.float32)).astype(val.dtype)
+    return out
 
 
 def node_rows_per_shard(num_nodes: int, shards: int) -> int:

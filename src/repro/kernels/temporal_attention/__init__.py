@@ -9,6 +9,7 @@ from repro.kernels.temporal_attention.ops import (
     fused_temporal_layer,
     fused_temporal_layer_hop2,
     fused_temporal_layer_per_seed,
+    fused_temporal_layer_sharded,
     temporal_attention,
 )
 from repro.kernels.temporal_attention.ref import (
@@ -27,6 +28,7 @@ __all__ = [
     "fused_temporal_layer_kernel",
     "fused_temporal_layer_per_seed",
     "fused_temporal_layer_ref",
+    "fused_temporal_layer_sharded",
     "temporal_attention",
     "temporal_attention_kernel",
     "temporal_attention_ref",

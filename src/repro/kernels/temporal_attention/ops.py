@@ -22,6 +22,14 @@
                                (2-layer TGAT's final hop), expressed as a
                                synthetic (S, K, 3) buffer over an (S*K, H,
                                D) table so the same kernel family serves it.
+``fused_temporal_layer_sharded``  — shard_map-aware variant for the 2-D
+                               mesh: each node shard computes partial
+                               attention from its local block of the
+                               node-partitioned buffer and one psum over
+                               the node axis assembles exact attention
+                               (bit-parity with the single-device layer);
+                               its custom VJP psums the operand cotangents
+                               so sharded gradients stay exact too.
 
 Every wrapper takes ``mode`` ∈ {"auto", "ref", "kernel", "interpret"}:
 "auto" picks the Pallas kernel on TPU and the jnp reference elsewhere;
@@ -145,7 +153,16 @@ def fused_temporal_layer(q, k_table, v_table, seeds, seed_times, buf, *,
     train step stay gather-free in HBM (``edge_feats`` is treated as
     non-differentiable storage).
     """
-    use_kernel = _use_kernel(mode)
+    flt, aux = _pack_operands(q, k_table, v_table, seeds, seed_times, buf,
+                              time_w, time_b, wt_k, wt_v,
+                              edge_feats, we_k, we_v)
+    return _dispatch_layer(flt, aux, block_s, mode)
+
+
+def _pack_operands(q, k_table, v_table, seeds, seed_times, buf, time_w,
+                   time_b, wt_k, wt_v, edge_feats, we_k, we_v):
+    """Split layer operands into the differentiable / auxiliary dicts the
+    custom-VJP calls take (time and edge groups each all-or-nothing)."""
     flt = {"q": q, "k_table": k_table, "v_table": v_table}
     aux = {"seeds": seeds, "seed_times": seed_times, "buf": buf}
     if wt_k is not None:
@@ -153,9 +170,84 @@ def fused_temporal_layer(q, k_table, v_table, seeds, seed_times, buf, *,
     if we_k is not None:
         flt.update(we_k=we_k, we_v=we_v)
         aux.update(edge_feats=edge_feats)
-    if use_kernel:
+    return flt, aux
+
+
+def _dispatch_layer(flt, aux, block_s, mode):
+    """Mode dispatch shared by the plain and shard-aware layer wrappers."""
+    if _use_kernel(mode):
         return _fused_layer_call(flt, aux, block_s, mode == "interpret")
     return fused_temporal_layer_ref(**_assemble(flt, aux))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _fused_layer_sharded_call(flt, aux, axis, block_s, mode):
+    return jax.lax.psum(_dispatch_layer(flt, aux, block_s, mode), axis)
+
+
+def _fused_layer_sharded_fwd(flt, aux, axis, block_s, mode):
+    return _fused_layer_sharded_call(flt, aux, axis, block_s, mode), (flt, aux)
+
+
+def _fused_layer_sharded_bwd(axis, block_s, mode, res, g):
+    # The forward is ``psum_axis(local_s)``; downstream compute is
+    # node-replicated, so the incoming cotangent ``g`` is identical on
+    # every node shard. Recompute the *local* call's VJP (flash-style —
+    # residuals are just the operands), apply it to ``g``, then psum the
+    # operand cotangents over the node axis: every shard ends up holding
+    # the true Σ_s ∂local_s — the exact single-device layer gradient —
+    # so no collectives are needed on the rest of the (node-replicated)
+    # gradient tree.
+    flt, aux = res
+    _, vjp = jax.vjp(lambda f: _dispatch_layer(f, aux, block_s, mode), flt)
+    (grads,) = vjp(g)
+    grads = jax.tree.map(lambda x: jax.lax.psum(x, axis), grads)
+    return grads, None
+
+
+_fused_layer_sharded_call.defvjp(_fused_layer_sharded_fwd,
+                                 _fused_layer_sharded_bwd)
+
+
+def fused_temporal_layer_sharded(q, k_table, v_table, seeds, seed_times,
+                                 buf, *, axis: str, rows_per_shard: int,
+                                 time_w=None, time_b=None, wt_k=None,
+                                 wt_v=None, edge_feats=None, we_k=None,
+                                 we_v=None, block_s: int = 128,
+                                 mode: str = "auto"):
+    """Shard-aware ``fused_temporal_layer``: partial attention per node
+    shard, assembled exactly by one psum over the mesh's node axis.
+
+    Call this *inside* a ``shard_map`` body over a mesh with node axis
+    ``axis``. ``buf`` is the shard's local ``(rows_per_shard + 1, K, 3)``
+    block of the node-partitioned packed buffer (its sink at local row
+    ``rows_per_shard``; see ``DeviceRecencySampler.packed_buffer``), while
+    ``seeds`` carry *global* node ids and ``q``/``k_table``/``v_table``/
+    weight groups are node-replicated — the buffer's id/eid channels hold
+    global ids, so the in-kernel k/v/edge gathers need no remap. Each
+    shard remaps the seeds it owns (``[s*per, (s+1)*per)``) to local
+    buffer rows and marks the rest ``-1`` — the kernel family's existing
+    zero-output / zero-gradient path — computing only its owned seeds'
+    attention from rows it holds in local HBM/VMEM; the psum then sums
+    exactly one owner's value with exact zeros, so the assembled output is
+    bit-identical to the single-device layer at any shard count.
+
+    Differentiation goes through a custom VJP that psums the *layer
+    operand* cotangents over ``axis`` (see ``_fused_layer_sharded_bwd``),
+    which keeps per-device gradients equal to the true gradients without
+    collectives over the rest of the gradient tree. ``mode`` as in
+    ``fused_temporal_layer``.
+    """
+    per = int(rows_per_shard)
+    lo = jax.lax.axis_index(axis).astype(jnp.int32) * per
+    seeds = seeds.astype(jnp.int32)
+    owned = (seeds >= lo) & (seeds < lo + per)
+    local = jnp.where(owned, seeds - lo, -1)
+    flt, aux = _pack_operands(q, k_table, v_table, local,
+                              seed_times.astype(jnp.int32), buf,
+                              time_w, time_b, wt_k, wt_v,
+                              edge_feats, we_k, we_v)
+    return _fused_layer_sharded_call(flt, aux, axis, block_s, mode)
 
 
 def fused_temporal_layer_hop2(q, k_table, v_table, frontier, frontier_times,

@@ -52,8 +52,14 @@ def link_logits(params, h, batch_size: int):
     return pos, neg
 
 
-def bce_link_loss(pos_logits, neg_logits, batch_mask):
-    """Masked binary cross-entropy over positives + negatives."""
+def bce_link_loss_parts(pos_logits, neg_logits, batch_mask):
+    """Masked BCE numerator/denominator before normalization.
+
+    Returns ``(loss_sum, denom)`` so data-sharded training can psum the
+    parts over the data axis and normalize by the *global* term count —
+    every shard then optimizes ``local_sum / global_denom``, whose psum'd
+    gradient is exactly the single-device gradient (the denominator does
+    not depend on params)."""
     m = batch_mask.astype(jnp.float32)
     pos_ls = jax.nn.log_sigmoid(pos_logits)
     loss = -(pos_ls * m).sum()
@@ -62,6 +68,12 @@ def bce_link_loss(pos_logits, neg_logits, batch_mask):
         neg_ls = jax.nn.log_sigmoid(-neg_logits)
         loss = loss - (neg_ls * m[:, None]).sum()
         denom = denom + (m[:, None] * jnp.ones_like(neg_logits)).sum()
+    return loss, denom
+
+
+def bce_link_loss(pos_logits, neg_logits, batch_mask):
+    """Masked binary cross-entropy over positives + negatives."""
+    loss, denom = bce_link_loss_parts(pos_logits, neg_logits, batch_mask)
     return loss / jnp.maximum(denom, 1.0)
 
 

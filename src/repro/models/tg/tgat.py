@@ -83,23 +83,27 @@ def _layer(params, l, cfg, h_seed, seed_t, h_nbr, nbr_t, nbr_feats, nbr_mask):
 
 
 def _fused_layer0(params, cfg, h_all, h_seed, seeds, seed_t, buf, edge_table,
-                  mode):
+                  mode, node_axis=None, buf_rows=None):
     """Layer-0 attention for ``seeds`` straight off the packed buffer.
 
     The kv projection's node term comes from the (N, d_model) table; the
     time-encoding and edge-feature terms are folded in by the fused op, so
-    no ``(S, K, ·)`` kv tensor is built here.
+    no ``(S, K, ·)`` kv tensor is built here. With ``node_axis``/
+    ``buf_rows`` (inside a shard_map over the mesh's node axis) the
+    attention runs shard-aware over each shard's local buffer block.
     """
     dt0 = time_encode(params["time"], jnp.zeros_like(seed_t, jnp.float32))
     att = fused_seed_neighbor_attention(
         params["attn_0"], h_all, jnp.concatenate([h_seed, dt0], axis=-1),
         seeds, seed_t, buf, params["time"], d_edge=cfg.d_edge,
         edge_table=edge_table, num_heads=cfg.num_heads, mode=mode,
+        node_axis=node_axis, buf_rows=buf_rows,
     )
     return mlp(params["merge_0"], jnp.concatenate([att, h_seed], axis=-1))
 
 
-def _embed_fused(params, cfg: TGATConfig, batch, static_feats, mode):
+def _embed_fused(params, cfg: TGATConfig, batch, static_feats, mode,
+                 node_axis=None, buf_rows=None):
     """Device-sampling embed: every attention via the fused kernel family.
 
     1-layer TGAT runs a single ``fused_temporal_layer`` over the resident
@@ -116,7 +120,7 @@ def _embed_fused(params, cfg: TGATConfig, batch, static_feats, mode):
     h_all = all_node_features(params["nodes"], static_feats)  # (N, d_model)
     h_seed = h_all[seeds]
     h1 = _fused_layer0(params, cfg, h_all, h_seed, seeds, seed_t, buf,
-                       edge_table, mode)
+                       edge_table, mode, node_axis, buf_rows)
     if cfg.num_layers == 1:
         return h1
 
@@ -130,7 +134,7 @@ def _embed_fused(params, cfg: TGATConfig, batch, static_feats, mode):
     h_f = jnp.where((f_nodes >= 0)[:, None],
                     h_all[jnp.maximum(f_nodes, 0)], 0.0)
     h_f1 = _fused_layer0(params, cfg, h_all, h_f, f_nodes, f_t, buf,
-                         edge_table, mode)
+                         edge_table, mode, node_axis, buf_rows)
     # Final hop: seeds attend over their own K computed frontier rows.
     dt_seed = time_encode(params["time"], jnp.zeros_like(seed_t, jnp.float32))
     att = fused_final_hop_attention(
@@ -142,17 +146,22 @@ def _embed_fused(params, cfg: TGATConfig, batch, static_feats, mode):
     return mlp(params["merge_1"], jnp.concatenate([att, h1], axis=-1))
 
 
-def embed(params, cfg: TGATConfig, batch, static_feats=None, fused=None):
+def embed(params, cfg: TGATConfig, batch, static_feats=None, fused=None,
+          node_axis=None, buf_rows=None):
     """Embed all S seeds. Uses hop-2 tensors when cfg.num_layers == 2.
 
     ``fused`` selects the device-sampling fused attention path (see
     ``models.tg.common.fused_mode``): ``None``/"auto" fuses on TPU when the
     batch carries ``nbr_buf``; ``False`` forces the classic pre-gathered
     path; "ref"/"kernel"/"interpret" force a specific fused implementation.
+    ``node_axis``/``buf_rows`` engage the shard-aware fused layer when
+    called inside a shard_map over a 2-D mesh (``nbr_buf`` then holds each
+    shard's local buffer block; see ``docs/sharding.md``).
     """
     mode = fused_mode(fused, batch)
     if mode is not None:
-        return _embed_fused(params, cfg, batch, static_feats, mode)
+        return _embed_fused(params, cfg, batch, static_feats, mode,
+                            node_axis, buf_rows)
 
     seeds, seed_t = batch["seed_nodes"], batch["seed_times"]
     nbr_ids, nbr_t = batch["nbr_ids"], batch["nbr_times"]
@@ -184,6 +193,8 @@ def embed(params, cfg: TGATConfig, batch, static_feats=None, fused=None):
 
 
 def link_scores(params, cfg: TGATConfig, batch, batch_size: int,
-                static_feats=None, fused=None):
-    h = embed(params, cfg, batch, static_feats, fused=fused)
+                static_feats=None, fused=None, node_axis=None,
+                buf_rows=None):
+    h = embed(params, cfg, batch, static_feats, fused=fused,
+              node_axis=node_axis, buf_rows=buf_rows)
     return link_logits(params["decoder"], h, batch_size)

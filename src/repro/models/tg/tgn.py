@@ -73,7 +73,8 @@ def init_state(cfg: TGNConfig):
     }
 
 
-def _embed_fused(params, cfg: TGNConfig, state, batch, static_feats, mode):
+def _embed_fused(params, cfg: TGNConfig, state, batch, static_feats, mode,
+                 node_axis=None, buf_rows=None):
     """Device-sampling embed: attention over the resident packed buffer.
 
     The kv input's node-level slice is ``memory ‖ node features`` — both are
@@ -96,20 +97,24 @@ def _embed_fused(params, cfg: TGNConfig, state, batch, static_feats, mode):
     att = fused_seed_neighbor_attention(
         params["attn"], node_kv, q_in, seeds, seed_t, buf, params["time"],
         d_edge=cfg.d_edge, edge_table=edge_table, num_heads=cfg.num_heads,
-        mode=mode,
+        mode=mode, node_axis=node_axis, buf_rows=buf_rows,
     )
     return mlp(params["merge"], jnp.concatenate([att, m_seed, h_seed], -1))
 
 
-def embed(params, cfg: TGNConfig, state, batch, static_feats=None, fused=None):
+def embed(params, cfg: TGNConfig, state, batch, static_feats=None, fused=None,
+          node_axis=None, buf_rows=None):
     """Temporal-attention embedding of the batch seeds over node memory.
 
     ``fused`` behaves as in ``tgat.embed`` (see
-    ``models.tg.common.fused_mode``).
+    ``models.tg.common.fused_mode``); ``node_axis``/``buf_rows`` engage
+    the shard-aware fused layer inside a 2-D-mesh shard_map (see
+    ``tgat.embed`` / ``docs/sharding.md``).
     """
     mode = fused_mode(fused, batch)
     if mode is not None:
-        return _embed_fused(params, cfg, state, batch, static_feats, mode)
+        return _embed_fused(params, cfg, state, batch, static_feats, mode,
+                            node_axis, buf_rows)
 
     seeds, seed_t = batch["seed_nodes"], batch["seed_times"]
     nbr_ids, nbr_t, nbr_mask = batch["nbr_ids"], batch["nbr_times"], batch["nbr_mask"]
@@ -169,9 +174,11 @@ def update_memory(params, cfg: TGNConfig, state, batch):
 
 
 def link_scores(params, cfg: TGNConfig, state, batch, batch_size: int,
-                static_feats=None, fused=None):
+                static_feats=None, fused=None, node_axis=None,
+                buf_rows=None):
     """Returns ((pos, neg), new_state)."""
-    h = embed(params, cfg, state, batch, static_feats, fused=fused)
+    h = embed(params, cfg, state, batch, static_feats, fused=fused,
+              node_axis=node_axis, buf_rows=buf_rows)
     logits = link_logits(params["decoder"], h, batch_size)
     new_state = update_memory(params, cfg, state, batch)
     return logits, new_state

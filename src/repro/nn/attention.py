@@ -72,7 +72,8 @@ def seed_neighbor_attention(params, seed_feat, nbr_feat, nbr_mask, num_heads: in
 def fused_seed_neighbor_attention(params, node_kv_in, q_in, seeds, seed_times,
                                   buf, time_params, d_edge: int = 0,
                                   edge_table=None, num_heads: int = 2,
-                                  mode: str = "auto"):
+                                  mode: str = "auto", node_axis=None,
+                                  buf_rows=None):
     """Fused twin of ``seed_neighbor_attention`` over the resident recency
     buffer (the ``device_sampling=True`` layer-1 compute of TGAT/TGN).
 
@@ -90,6 +91,14 @@ def fused_seed_neighbor_attention(params, node_kv_in, q_in, seeds, seed_times,
     edge-feature storage (or None). ``mode`` is forwarded to
     ``fused_temporal_layer``. Returns (S, d_model).
 
+    With ``node_axis``/``buf_rows`` (inside a shard_map over a mesh whose
+    node axis is ``node_axis``) the attention runs through
+    ``fused_temporal_layer_sharded``: ``buf`` is then each shard's local
+    ``(buf_rows + 1, K, 3)`` block of the node-partitioned buffer, the
+    node-replicated partial outputs are psum-assembled exactly, and the
+    o-projection runs on the assembled result (node-replicated like the
+    rest of the model).
+
     Cost note: the node term is projected for *all* N nodes (O(N * d^2)
     per call) instead of the classic path's O(S*K * d^2) gathered-row
     projection — a win when S*K is comparable to or larger than N (the
@@ -98,7 +107,10 @@ def fused_seed_neighbor_attention(params, node_kv_in, q_in, seeds, seed_times,
     batch-reachable rows needs dynamic shapes under jit and is a ROADMAP
     item; gate with ``fused=False`` for huge-N / tiny-batch workloads.
     """
-    from repro.kernels.temporal_attention import fused_temporal_layer
+    from repro.kernels.temporal_attention import (
+        fused_temporal_layer,
+        fused_temporal_layer_sharded,
+    )
 
     d_model = params["o"]["w"].shape[0]
     h = num_heads
@@ -113,15 +125,21 @@ def fused_seed_neighbor_attention(params, node_kv_in, q_in, seeds, seed_times,
     wt_k = wk["w"][d_node + d_edge:]
     wt_v = wv["w"][d_node + d_edge:]
     q = _split_heads(dense(params["q"], q_in), h)  # (S, H, Dh)
-    att = fused_temporal_layer(
-        q, k_tab, v_tab,
-        jnp.asarray(seeds, jnp.int32), jnp.asarray(seed_times, jnp.int32),
-        buf,
+    kw = dict(
         time_w=time_params["w"], time_b=time_params["b"],
         wt_k=wt_k, wt_v=wt_v,
         edge_feats=edge_table if use_edge else None,
         we_k=we_k, we_v=we_v, mode=mode,
     )
+    seeds = jnp.asarray(seeds, jnp.int32)
+    seed_times = jnp.asarray(seed_times, jnp.int32)
+    if node_axis is not None:
+        att = fused_temporal_layer_sharded(
+            q, k_tab, v_tab, seeds, seed_times, buf,
+            axis=node_axis, rows_per_shard=buf_rows, **kw)
+    else:
+        att = fused_temporal_layer(q, k_tab, v_tab, seeds, seed_times, buf,
+                                   **kw)
     return dense(params["o"], att.reshape(-1, d_model))
 
 

@@ -131,6 +131,7 @@ class Experiment:
                     eval_negatives=t.eval_negatives, seed=t.seed,
                     model_kwargs=dict(m.kwargs), sampler_spec=self.sampler,
                     val_ratio=d.val_ratio, test_ratio=d.test_ratio,
+                    data_shards=t.data_shards,
                 )
             if m.name not in DTDG_MODELS:
                 raise ValueError(

@@ -127,13 +127,21 @@ class SamplerSpec(_SpecBase):
     ``device=True``. DTDG scan pipelines need no sampler — snapshots are
     consumed whole — so link/node snapshot experiments ignore this spec.
 
-    ``shards`` is the multi-device axis (``docs/sharding.md``): ``None``
+    ``shards`` is the node sharding axis (``docs/sharding.md``): ``None``
     keeps today's single-device state; an integer N shards the device
-    samplers' state row-wise by node id over a 1-D mesh of the first N
-    devices (axis ``mesh_axis``), with batches placed mesh-replicated and
-    update/sample routed through ``shard_map`` — same outputs, state
-    scales past one device's HBM. Requires ``device=True``; checkpoints
-    stay canonical, so runs reshard freely across different ``shards``.
+    samplers' state row-wise by node id over the mesh's node axis (a 1-D
+    mesh of the first N devices by default, or the node axis of the 2-D
+    ``(data, nodes)`` mesh when ``TrainSpec.data_shards > 1``), with
+    batches placed mesh-replicated and update/sample routed through
+    ``shard_map`` — same outputs, state scales past one device's HBM.
+    Requires ``device=True``; checkpoints stay canonical, so runs reshard
+    freely across different ``shards``. ``expose_buffer=True`` with
+    ``shards`` carries each shard's local buffer block on the batch for
+    the shard-aware fused attention path. ``partition`` picks the uniform
+    sampler's CSR node-boundary split: ``"rows"`` (equal node counts, the
+    default) or ``"degree"`` (cumulative-degree quantile cuts — smaller
+    per-shard CSR padding on skewed graphs; draws are identical either
+    way).
     """
 
     kind: str = "recency"
@@ -145,6 +153,7 @@ class SamplerSpec(_SpecBase):
     prefetch: int = 2
     shards: Optional[int] = None
     mesh_axis: str = "data"
+    partition: str = "rows"
 
     def __post_init__(self):
         if self.kind not in ("recency", "uniform"):
@@ -153,6 +162,10 @@ class SamplerSpec(_SpecBase):
             )
         if self.num_hops not in (None, 1, 2):
             raise ValueError("num_hops must be None (auto), 1 or 2")
+        if self.partition not in ("rows", "degree"):
+            raise ValueError(
+                f"partition must be 'rows' or 'degree', got {self.partition!r}"
+            )
         if self.shards is not None:
             if self.shards < 1:
                 raise ValueError("shards must be a positive integer or None")
@@ -160,11 +173,6 @@ class SamplerSpec(_SpecBase):
                 raise ValueError(
                     "shards requires device=True (only the device-resident "
                     "samplers have mesh-sharded state)"
-                )
-            if self.expose_buffer:
-                raise ValueError(
-                    "expose_buffer=True is incompatible with shards (the "
-                    "fused nbr_buf model path is single-device)"
                 )
 
 
@@ -198,6 +206,14 @@ class TrainSpec(_SpecBase):
     ``ckpt_every=N`` with ``ckpt_dir`` writes a checkpoint every N epochs.
     ``compiled``/``chunk_size`` control the DTDG scan (``compiled=False``
     is the per-snapshot jitted loop, the bit-parity oracle).
+
+    ``data_shards`` is the event-stream data-parallel axis
+    (``docs/sharding.md``): > 1 builds the 2-D ``(data, nodes)`` mesh —
+    ``data_shards × SamplerSpec.shards`` devices — and each CTDG link
+    train step shards the batch into contiguous time-ordered sub-streams
+    over the data axis (gradients psum-summed; TGN memory synchronized by
+    the DistTGL masked psum). Requires ``SamplerSpec.device=True`` and a
+    ``batch_size`` divisible by ``data_shards``.
     """
 
     lr: Optional[float] = None
@@ -212,3 +228,14 @@ class TrainSpec(_SpecBase):
     ckpt_every: int = 0
     compiled: bool = True
     chunk_size: Optional[int] = None
+    data_shards: int = 1
+
+    def __post_init__(self):
+        if self.data_shards < 1:
+            raise ValueError("data_shards must be a positive integer")
+        if self.data_shards > 1 and self.batch_size % self.data_shards:
+            raise ValueError(
+                f"batch_size {self.batch_size} must be divisible by "
+                f"data_shards {self.data_shards} (each data shard takes a "
+                f"contiguous time-ordered sub-stream of the batch)"
+            )

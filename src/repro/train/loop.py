@@ -36,6 +36,7 @@ from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
@@ -198,6 +199,19 @@ class CTDGLinkPipeline:
     row-wise by node id over a 1-D mesh (``shard_map`` update/sample;
     bit-identical outputs), stages batches mesh-replicated, and runs the
     jitted steps replicated over the same mesh — see ``docs/sharding.md``.
+
+    ``data_shards > 1`` composes the data and node axes into one 2-D
+    ``("data", "nodes")`` mesh of ``data_shards × (SamplerSpec.shards or
+    1)`` devices: each train step slices the event batch into contiguous
+    time-ordered sub-streams over the data axis (gradients psum'd, the
+    loss normalized by the global term count, TGN memory synchronized by
+    the DistTGL masked psum) while sampler buffers/CSR stay partitioned
+    over the node axis. With ``fused`` enabled the per-shard attention
+    runs shard-aware (``fused_temporal_layer_sharded``) over each node
+    shard's local buffer block, assembled exactly by a psum over the node
+    axis — so one step scales FLOPs (data axis) and sampler HBM (node
+    axis) together. ``fused`` forwards to the TGAT/TGN ``link_scores``
+    (e.g. ``"ref"`` forces the fused math on CPU for parity tests).
     """
 
     def __init__(
@@ -217,6 +231,8 @@ class CTDGLinkPipeline:
         sampler_spec: Optional[SamplerSpec] = None,
         val_ratio: float = 0.15,
         test_ratio: float = 0.15,
+        data_shards: int = 1,
+        fused=None,
     ):
         if model_name not in CTDG_LINK_MODELS:
             raise ValueError(f"unknown CTDG model {model_name!r}")
@@ -230,12 +246,71 @@ class CTDGLinkPipeline:
         self.sampler_spec = spec
         self.device_sampling = spec.device
         self.prefetch = spec.prefetch
-        # Multi-device sampler sharding (SamplerSpec.shards): one 1-D mesh
-        # shared by sampler state (row-sharded), batch staging (replicated)
-        # and the replicated jitted steps. See docs/sharding.md.
+        self.data_shards = int(data_shards)
+        self.fused = fused
+        if self.data_shards < 1:
+            raise ValueError("data_shards must be a positive integer")
+        if fused is not None and model_name not in ("tgat", "tgn"):
+            raise ValueError(
+                f"fused= applies to the TGAT/TGN fused attention path; "
+                f"{model_name!r} has no fused twin"
+            )
+        if self.data_shards > 1:
+            if not spec.device:
+                raise ValueError(
+                    "data_shards > 1 requires SamplerSpec(device=True) — "
+                    "the 2-D mesh step assumes device-staged batches and "
+                    "mesh-placed sampler state (docs/sharding.md)"
+                )
+            if batch_size % self.data_shards:
+                raise ValueError(
+                    f"batch_size {batch_size} must be divisible by "
+                    f"data_shards {self.data_shards} (each data shard takes "
+                    f"a contiguous time-ordered sub-stream of the batch)"
+                )
+            if model_name == "tpnet":
+                raise ValueError(
+                    "data_shards > 1 supports tgat/tgn/graphmixer/dygformer;"
+                    " tpnet's sketch state has no masked-psum sync recipe"
+                )
+        # Resolve expose_buffer early: it decides whether the sharded fused
+        # path (and hence the 2-D shard_map step) is in play. Only TGAT/TGN
+        # consume the exposed packed buffer; under a mesh, exposure is an
+        # opt-in for the shard-aware fused layer, so auto-enable it exactly
+        # when the fused path can engage (explicit fused= or TPU backend).
+        expose = spec.expose_buffer
+        if expose is None and model_name not in ("tgat", "tgn"):
+            expose = False
+        if expose is None and (spec.shards or self.data_shards > 1):
+            expose = bool(self.fused) or jax.default_backend() == "tpu"
+        self._expose_buffer = expose
+        # Multi-device meshes (docs/sharding.md): data_shards composes the
+        # 2-D ("data", "nodes") mesh — event sub-streams over the data
+        # axis, sampler state over the node axis; SamplerSpec.shards alone
+        # keeps the 1-D node mesh with replicated jitted steps. The 2-D
+        # shard_map step is also required whenever a *sharded* packed
+        # buffer rides the batch (expose_buffer with shards), since only
+        # ``fused_temporal_layer_sharded`` inside a shard_map can read it.
         self._mesh = None
         self._replicated = None
-        if spec.shards:
+        self._data_axis = None
+        self._node_axis = None
+        self._use_2d = self.data_shards > 1 or bool(
+            spec.shards and expose and spec.kind == "recency"
+            and model_name in ("tgat", "tgn")
+        )
+        recipe_axis = spec.mesh_axis
+        if self._use_2d:
+            from repro.distributed.sharding import (
+                make_2d_mesh,
+                replicated_sharding,
+            )
+
+            self._mesh = make_2d_mesh(self.data_shards, spec.shards or 1)
+            self._replicated = replicated_sharding(self._mesh)
+            self._data_axis, self._node_axis = "data", "nodes"
+            recipe_axis = "nodes"
+        elif spec.shards:
             from repro.distributed.sharding import (
                 make_node_mesh,
                 replicated_sharding,
@@ -279,12 +354,6 @@ class CTDGLinkPipeline:
             num_hops = spec.num_hops
 
         needs_nbrs = model_name != "tpnet"
-        # Only TGAT/TGN have a fused attention path consuming the exposed
-        # packed buffer; other models skip the snapshot so the device
-        # sampler's buffer update can donate in place.
-        expose = spec.expose_buffer
-        if expose is None and model_name not in ("tgat", "tgn"):
-            expose = False
         self.manager = RecipeRegistry.build(
             RECIPE_TGB_LINK,
             num_nodes=n,
@@ -292,11 +361,12 @@ class CTDGLinkPipeline:
                 kind=spec.kind, k=self.cfg.k if needs_nbrs else 1,
                 num_hops=num_hops, device=spec.device,
                 checkpoint_adjacency=spec.checkpoint_adjacency,
-                expose_buffer=expose, prefetch=spec.prefetch,
-                shards=spec.shards, mesh_axis=spec.mesh_axis,
+                expose_buffer=self._expose_buffer, prefetch=spec.prefetch,
+                shards=spec.shards, mesh_axis=recipe_axis,
+                partition=spec.partition,
             ),
             mesh=self._mesh,
-            mesh_axis=spec.mesh_axis,
+            mesh_axis=recipe_axis,
             batch_size=batch_size,
             eval_negatives=eval_negatives,
             # Full-stream features: sampled nbr_eids are global event
@@ -322,6 +392,17 @@ class CTDGLinkPipeline:
                     hook.build(data.src, data.dst, data.edge_t,
                                np.arange(len(data.src), dtype=np.int64))
 
+        # Node rows owned per shard of the sharded packed buffer — the
+        # ``rows_per_shard`` handed to ``fused_temporal_layer_sharded`` by
+        # the 2-D step (None without a node-sharded recency sampler).
+        self._buf_rows = None
+        if self._node_axis is not None:
+            from repro.core.tg_hooks import DeviceRecencyNeighborHook
+
+            for hook in self.manager.hooks():
+                if isinstance(hook, DeviceRecencyNeighborHook):
+                    self._buf_rows = hook.sampler.rows_per_shard
+
         self.opt_cfg = AdamWConfig(lr=1e-4 if lr is None else lr)
         self.opt_state = adamw_init(self.params)
         self._place_replicated()
@@ -341,12 +422,17 @@ class CTDGLinkPipeline:
                                               self._replicated)
 
     def _build_steps(self):
+        if self._use_2d:
+            self._build_steps_2d()
+            return
         name, B = self.model_name, self.batch_size
+        skw = {} if self.fused is None else {"fused": self.fused}
 
         if name in CTDG_STATELESS:
 
             def loss_fn(params, batch):
-                pos, neg = self._scores(params, batch=batch, batch_size=B)
+                pos, neg = self._scores(params, batch=batch, batch_size=B,
+                                        **skw)
                 return bce_link_loss(pos, neg, batch["batch_mask"])
 
             @jax.jit
@@ -357,7 +443,7 @@ class CTDGLinkPipeline:
 
             @jax.jit
             def eval_step(params, batch):
-                return self._scores(params, batch=batch, batch_size=B)
+                return self._scores(params, batch=batch, batch_size=B, **skw)
 
             self._train_step, self._eval_step = train_step, eval_step
 
@@ -366,7 +452,8 @@ class CTDGLinkPipeline:
             cfg = self.cfg
 
             def loss_fn(params, state, batch):
-                (pos, neg), new_state = score_fn(params, cfg, state, batch, B)
+                (pos, neg), new_state = score_fn(params, cfg, state, batch, B,
+                                                 **skw)
                 return bce_link_loss(pos, neg, batch["batch_mask"]), new_state
 
             @jax.jit
@@ -379,9 +466,199 @@ class CTDGLinkPipeline:
 
             @jax.jit
             def eval_step(params, state, batch):
-                return score_fn(params, cfg, state, batch, B)
+                return score_fn(params, cfg, state, batch, B, **skw)
 
             self._train_step, self._eval_step = train_step, eval_step
+
+    # -- 2-D mesh steps (docs/sharding.md) ------------------------------
+    def _seed_perm(self, S: int) -> np.ndarray:
+        """Shard-major permutation of the stacked seed axis.
+
+        Seed-aligned tensors are stacked ``[src (B) | dst (B) | neg
+        (B*Nn)]``; slicing that layout over the data axis would hand shard
+        0 nothing but src rows. This (static) permutation reorders rows
+        shard-major so each contiguous ``1/data_shards`` slice is that
+        shard's own ``[src_l | dst_l | neg_l]`` stack — exactly the seed
+        layout the models expect at batch size ``B/data_shards``.
+        """
+        B, ds = self.batch_size, self.data_shards
+        nn = (S - 2 * B) // B
+        bl = B // ds
+        parts = []
+        for s in range(ds):
+            lo, hi = s * bl, (s + 1) * bl
+            parts.append(np.arange(lo, hi))
+            parts.append(B + np.arange(lo, hi))
+            if nn:
+                parts.append(2 * B + np.arange(lo * nn, hi * nn))
+        return np.concatenate(parts).astype(np.int32)
+
+    def _make_2d_step(self, kind: str, bt: Dict[str, Any]):
+        """Build one jitted 2-D ``shard_map`` step for this batch signature.
+
+        Batch tensors are routed by leading dimension: event-aligned
+        ``(B, ...)`` tensors slice directly over the data axis (the batch
+        is time-ordered, so equal slices are contiguous time-ordered
+        sub-streams); seed-aligned ``(S, ...)`` and frontier-aligned
+        ``(S*K, ...)`` tensors are permuted shard-major first
+        (``_seed_perm``); ``nbr_buf`` splits over the node axis; the edge
+        table, params, optimizer and model state stay replicated. Each
+        shard optimizes ``local_loss_sum / global_denominator`` so the
+        psum'd gradient equals the single-device gradient; the optimizer
+        update runs replicated inside the shard_map.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import (
+            SHARD_MAP_KW,
+            shard_map,
+            sync_state_masked_psum,
+        )
+        from repro.models.tg.common import bce_link_loss_parts
+
+        mesh = self._mesh
+        daxis, naxis = self._data_axis, self._node_axis
+        ds, B = self.data_shards, self.batch_size
+        Bl = B // ds
+        S = int(np.shape(bt["seed_nodes"])[0]) if "seed_nodes" in bt else -1
+        perm = self._seed_perm(S) if (S > 0 and ds > 1) else None
+
+        perms: Dict[str, Optional[np.ndarray]] = {}
+        specs: Dict[str, P] = {}
+        for key, v in bt.items():
+            shp = tuple(np.shape(v))
+            perms[key] = None
+            if key == "nbr_buf":
+                specs[key] = P(naxis)
+            elif key == "edge_feat_table" or not shp:
+                specs[key] = P()
+            elif shp[0] == B:
+                specs[key] = P(daxis)
+            elif S > 0 and shp[0] % S == 0:
+                if perm is not None:
+                    m = shp[0] // S
+                    perms[key] = perm if m == 1 else (
+                        perm[:, None] * m + np.arange(m, dtype=np.int32)
+                    ).reshape(-1)
+                specs[key] = P(daxis)
+            else:
+                specs[key] = P()
+
+        def prep(batch):
+            return {k: (v if perms[k] is None else v[perms[k]])
+                    for k, v in batch.items()}
+
+        kw = {}
+        if self.model_name in ("tgat", "tgn"):
+            kw["fused"] = self.fused
+            if "nbr_buf" in bt and self._buf_rows is not None:
+                kw["node_axis"] = naxis
+                kw["buf_rows"] = self._buf_rows
+        opt_cfg = self.opt_cfg
+        rep = P()
+
+        if self.model_name in CTDG_STATELESS:
+            scores = self._scores
+
+            def train_body(params, opt_state, pb):
+                def objective(p):
+                    pos, neg = scores(p, batch=pb, batch_size=Bl, **kw)
+                    num, den = bce_link_loss_parts(pos, neg,
+                                                   pb["batch_mask"])
+                    D = jnp.maximum(jax.lax.psum(den, daxis), 1.0)
+                    return num / D, (num, den)
+
+                (_, (num, den)), grads = jax.value_and_grad(
+                    objective, has_aux=True)(params)
+                grads = jax.tree.map(
+                    lambda g: jax.lax.psum(g, daxis), grads)
+                loss = jax.lax.psum(num, daxis) / jnp.maximum(
+                    jax.lax.psum(den, daxis), 1.0)
+                params, opt_state = adamw_update(params, grads, opt_state,
+                                                 opt_cfg)
+                return params, opt_state, loss
+
+            def eval_body(params, pb):
+                return scores(params, batch=pb, batch_size=Bl, **kw)
+
+            if kind == "train":
+                smapped = shard_map(
+                    train_body, mesh=mesh, in_specs=(rep, rep, specs),
+                    out_specs=(rep, rep, rep), **SHARD_MAP_KW)
+                return jax.jit(lambda p, o, b: smapped(p, o, prep(b)))
+            smapped = shard_map(
+                eval_body, mesh=mesh, in_specs=(rep, specs),
+                out_specs=(P(daxis), P(daxis)), **SHARD_MAP_KW)
+            return jax.jit(lambda p, b: smapped(p, prep(b)))
+
+        score_fn = tgn.link_scores
+        cfg = self.cfg
+
+        def touched_rows(pb):
+            # Node rows this data shard's events update — the masked-psum
+            # sync mask (padded rows excluded via batch_mask).
+            nodes = jnp.concatenate([pb["src"], pb["dst"]])
+            mm = jnp.concatenate([pb["batch_mask"], pb["batch_mask"]])
+            return jnp.zeros(cfg.num_nodes, bool).at[nodes].max(mm)
+
+        def train_body(params, opt_state, state, pb):
+            def objective(p):
+                (pos, neg), new_state = score_fn(p, cfg, state, pb, Bl, **kw)
+                num, den = bce_link_loss_parts(pos, neg, pb["batch_mask"])
+                D = jnp.maximum(jax.lax.psum(den, daxis), 1.0)
+                return num / D, (num, den, new_state)
+
+            (_, (num, den, new_state)), grads = jax.value_and_grad(
+                objective, has_aux=True)(params)
+            grads = jax.tree.map(lambda g: jax.lax.psum(g, daxis), grads)
+            loss = jax.lax.psum(num, daxis) / jnp.maximum(
+                jax.lax.psum(den, daxis), 1.0)
+            new_state = sync_state_masked_psum(
+                new_state, touched_rows(pb), daxis)
+            params, opt_state = adamw_update(params, grads, opt_state,
+                                             opt_cfg)
+            return params, opt_state, new_state, loss
+
+        def eval_body(params, state, pb):
+            (pos, neg), new_state = score_fn(params, cfg, state, pb, Bl,
+                                             **kw)
+            new_state = sync_state_masked_psum(
+                new_state, touched_rows(pb), daxis)
+            return (pos, neg), new_state
+
+        if kind == "train":
+            smapped = shard_map(
+                train_body, mesh=mesh, in_specs=(rep, rep, rep, specs),
+                out_specs=(rep, rep, rep, rep), **SHARD_MAP_KW)
+            return jax.jit(lambda p, o, s, b: smapped(p, o, s, prep(b)))
+        smapped = shard_map(
+            eval_body, mesh=mesh, in_specs=(rep, rep, specs),
+            out_specs=((P(daxis), P(daxis)), rep), **SHARD_MAP_KW)
+        return jax.jit(lambda p, s, b: smapped(p, s, prep(b)))
+
+    def _build_steps_2d(self):
+        """Install 2-D dispatchers with the standard step signatures.
+
+        Steps are built lazily per batch signature (train and eval batches
+        differ in the negatives width, hence in every seed-aligned shape)
+        and memoized, so each shape still compiles exactly once.
+        """
+        cache: Dict[Any, Any] = {}
+
+        def get(kind, bt):
+            sig = (kind, tuple(sorted(
+                (k, tuple(np.shape(v))) for k, v in bt.items())))
+            if sig not in cache:
+                cache[sig] = self._make_2d_step(kind, bt)
+            return cache[sig]
+
+        if self.model_name in CTDG_STATELESS:
+            self._train_step = lambda p, o, bt: get("train", bt)(p, o, bt)
+            self._eval_step = lambda p, bt: get("eval", bt)(p, bt)
+        else:
+            self._train_step = (
+                lambda p, o, s, bt: get("train", bt)(p, o, s, bt))
+            self._eval_step = lambda p, s, bt: get("eval", bt)(p, s, bt)
 
     # ------------------------------------------------------------------
     def _loader(self, data: DGData):

@@ -197,6 +197,153 @@ def test_sharded_pipeline_matches_single_device():
     assert "PIPELINE SHARDED OK" in out
 
 
+def test_sharded_fused_layer_bit_parity():
+    """``fused_temporal_layer_sharded`` inside a shard_map over the node
+    axis must be BIT-identical to the single-device layer: one owner per
+    seed contributes its value, every other shard contributes exact zeros,
+    and the psum of one value with zeros is exact. Gradients likewise."""
+    out = _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import DeviceRecencySampler
+    from repro.distributed.sharding import (SHARD_MAP_KW, make_node_mesh,
+                                            shard_map)
+    from repro.kernels.temporal_attention import (
+        fused_temporal_layer, fused_temporal_layer_sharded)
+
+    rng = np.random.default_rng(0)
+    N, K, H, D, S = 23, 4, 2, 8, 16
+    plain = DeviceRecencySampler(N, K, retain_state=True)
+    for _ in range(3):
+        src, dst = rng.integers(0, N, 20), rng.integers(0, N, 20)
+        t = np.sort(rng.integers(0, 50, 20))
+        plain.update(src, dst, t)
+    sd = plain.state_dict()
+
+    q = jnp.asarray(rng.standard_normal((S, H, D)) * .25, jnp.float32)
+    kt = jnp.asarray(rng.standard_normal((N, H, D)) * .25, jnp.float32)
+    vt = jnp.asarray(rng.standard_normal((N, H, D)) * .25, jnp.float32)
+    seeds = jnp.asarray(rng.integers(0, N, S), jnp.int32)
+    seed_t = jnp.asarray(np.full(S, 60), jnp.int32)
+
+    def ref_loss(q, kt):
+        o = fused_temporal_layer(q, kt, vt, seeds, seed_t,
+                                 plain.packed_buffer, mode="ref")
+        return jnp.sum(jnp.sin(o)), o
+    (_, out_ref), g_ref = jax.value_and_grad(
+        ref_loss, (0, 1), has_aux=True)(q, kt)
+
+    for shards in (2, 5, 8):
+        mesh = make_node_mesh(shards, "nodes")
+        sh = DeviceRecencySampler(N, K, mesh=mesh, mesh_axis="nodes",
+                                  retain_state=True)
+        sh.load_state_dict(sd)
+        per = sh.rows_per_shard
+
+        def body(q, kt, buf):
+            def loss(q, kt):
+                o = fused_temporal_layer_sharded(
+                    q, kt, vt, seeds, seed_t, buf, axis="nodes",
+                    rows_per_shard=per, mode="ref")
+                return jnp.sum(jnp.sin(o)), o
+            (_, o), g = jax.value_and_grad(loss, (0, 1),
+                                           has_aux=True)(q, kt)
+            return o, g
+
+        smapped = shard_map(body, mesh=mesh,
+                            in_specs=(P(), P(), P("nodes")),
+                            out_specs=(P(), (P(), P())), **SHARD_MAP_KW)
+        o, g = jax.jit(smapped)(q, kt, sh.packed_buffer)
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(out_ref))
+        for a, b in zip(g, g_ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+        print(f"SHARDED LAYER {shards} OK")
+    """)
+    for shards in (2, 5, 8):
+        assert f"SHARDED LAYER {shards} OK" in out
+
+
+def test_2d_pipeline_matches_single_device():
+    """A jitted 2-D-mesh train epoch (data >= 2, nodes >= 2, fused path
+    enabled) must match the single-device fused pipeline within the
+    documented 1e-4 kernel grad bound — both 2x4 and 4x2 mesh shapes
+    (docs/sharding.md)."""
+    out = _run("""
+    import numpy as np, jax
+    from repro.data import generate
+    from repro.tg.specs import SamplerSpec
+    from repro.train.loop import CTDGLinkPipeline
+
+    data = generate("tiny").slice_events(0, 300)
+
+    def build(ds, ns):
+        spec = SamplerSpec(kind="recency", device=True, shards=ns,
+                           expose_buffer=True if ns else None)
+        return CTDGLinkPipeline("tgat", data, batch_size=100, seed=0,
+                                sampler_spec=spec, data_shards=ds,
+                                fused="ref")
+
+    ref = build(1, None)
+    l0, _ = ref.train_epoch()
+    leaves0 = jax.tree.leaves(ref.params)
+    for ds, ns in ((2, 4), (4, 2)):
+        p = build(ds, ns)
+        assert p._mesh is not None and dict(p._mesh.shape) == {
+            "data": ds, "nodes": ns}
+        l1, _ = p.train_epoch()
+        assert abs(l0 - l1) < 1e-4, (ds, ns, l0, l1)
+        d = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                for a, b in zip(leaves0, jax.tree.leaves(p.params)))
+        assert d < 1e-4, (ds, ns, d)
+        print(f"2D {ds}x{ns} OK", l1, d)
+    """)
+    assert "2D 2x4 OK" in out and "2D 4x2 OK" in out
+
+
+def test_2d_checkpoint_reshard_across_mesh_shapes(tmp_path):
+    """A pipeline checkpoint written under one 2-D mesh shape must restore
+    under any other (1x1 <-> 2x4 <-> 4x2) and continue training to the
+    same losses — canonical sampler state + replicated params make
+    checkpoints mesh-agnostic."""
+    out = _run(f"""
+    import numpy as np, jax
+    from repro.data import generate
+    from repro.tg.specs import SamplerSpec
+    from repro.train.loop import CTDGLinkPipeline
+
+    data = generate("tiny").slice_events(0, 300)
+
+    def build(ds, ns):
+        spec = SamplerSpec(kind="recency", device=True, shards=ns,
+                           expose_buffer=True if ns else None)
+        return CTDGLinkPipeline("tgat", data, batch_size=100, seed=0,
+                                sampler_spec=spec, data_shards=ds,
+                                fused="ref")
+
+    # epoch 0 under 2x4, checkpoint, then epoch 1 under 1x1 / 2x4 / 4x2
+    a = build(2, 4)
+    a.train_epoch()
+    d = r"{tmp_path}" + "/2d"
+    a.save_checkpoint(d, 0)
+
+    losses, params = [], []
+    for ds, ns in ((1, None), (2, 4), (4, 2)):
+        p = build(ds, ns)
+        p.restore_checkpoint(d)
+        l, _ = p.train_epoch()
+        losses.append(l)
+        params.append(jax.tree.leaves(p.params))
+    for l, ps in zip(losses[1:], params[1:]):
+        assert abs(l - losses[0]) < 1e-4, losses
+        dmax = max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+                   for x, y in zip(params[0], ps))
+        assert dmax < 1e-4, dmax
+    print("2D RESHARD OK", losses)
+    """)
+    assert "2D RESHARD OK" in out
+
+
 def test_elastic_restore_across_meshes(tmp_path):
     out = _run(f"""
     import jax, jax.numpy as jnp, numpy as np

@@ -133,35 +133,83 @@ def test_sharded_uniform_state_dict_reassembles_csr():
     _assert_same_np(ref.sample(seeds, qt), dev2.sample(seeds, qt))
 
 
-def test_sharded_sampler_rejects_fused_buffer_surface():
-    """The fused nbr_buf path is single-device: the packed-buffer views
-    must refuse on a sharded sampler, and the hook must refuse
-    expose_buffer=True with a mesh."""
+def test_sharded_sampler_exposes_fused_buffer_surface():
+    """The sharded packed buffer is a first-class surface now (the
+    shard-aware fused path consumes it): ``packed_buffer`` returns the
+    node-sharded packed layout, ``rows_per_shard`` reports the per-shard
+    node row count, and the hook accepts ``expose_buffer=True`` with a
+    mesh (defaulting to off there)."""
     from repro.core.tg_hooks import DeviceRecencyNeighborHook
+    from repro.distributed.sharding import node_rows_per_shard
 
-    s = DeviceRecencySampler(10, 3, mesh=_mesh_all())
-    with pytest.raises(RuntimeError, match="sharded"):
-        _ = s.packed_buffer
-    with pytest.raises(RuntimeError, match="sharded"):
-        _ = s.buffer_ids
-    with pytest.raises(ValueError, match="expose_buffer"):
-        DeviceRecencyNeighborHook(10, 3, mesh=_mesh_all(), expose_buffer=True)
+    mesh = _mesh_all()
+    shards = jax.device_count()
+    N, k = 10, 3
+    s = DeviceRecencySampler(N, k, mesh=mesh)
+    per = node_rows_per_shard(N, shards)
+    assert s.rows_per_shard == per
+    buf = s.packed_buffer
+    assert buf.shape == (shards * (per + 1), k, 3)
+    # default under a mesh keeps the buffer private; opting in exposes it
+    hook = DeviceRecencyNeighborHook(N, k, mesh=mesh)
+    assert hook.expose_buffer is False
+    hook = DeviceRecencyNeighborHook(N, k, mesh=mesh, expose_buffer=True)
+    assert hook.expose_buffer is True
+    from repro.core.batch import Batch
+
+    out = hook(Batch({"src": np.array([1, 2]), "dst": np.array([3, 4]),
+                      "time": np.array([5, 6]),
+                      "neg": np.array([[0], [7]])}))
+    assert out["nbr_buf"].shape == (shards * (per + 1), k, 3)
+    # unsharded sampler: rows_per_shard is None (no shard axis)
+    assert DeviceRecencySampler(N, k).rows_per_shard is None
 
 
 def test_sampler_spec_shards_validation():
-    """SamplerSpec.shards: device-only, positive, JSON round-trips."""
+    """SamplerSpec.shards: device-only, positive, JSON round-trips; the
+    expose_buffer+shards combination is legal (shard-aware fused path)."""
     spec = SamplerSpec(device=True, shards=2)
+    assert SamplerSpec.from_dict(spec.to_dict()) == spec
+    spec = SamplerSpec(device=True, shards=2, expose_buffer=True,
+                       partition="degree")
     assert SamplerSpec.from_dict(spec.to_dict()) == spec
     with pytest.raises(ValueError, match="device=True"):
         SamplerSpec(shards=2)
     with pytest.raises(ValueError, match="positive"):
         SamplerSpec(device=True, shards=0)
-    with pytest.raises(ValueError, match="expose_buffer"):
-        SamplerSpec(device=True, shards=2, expose_buffer=True)
+    with pytest.raises(ValueError, match="partition"):
+        SamplerSpec(partition="hash")
     with pytest.raises(ValueError, match="shards must be >= 1"):
         make_node_mesh(0)
     with pytest.raises(ValueError, match="devices are visible"):
         make_node_mesh(jax.device_count() + 1)
+
+
+def test_degree_partition_matches_rows_partition():
+    """Degree-balanced CSR boundaries must not change a single draw — the
+    partition only moves node boundaries between shards."""
+    rng = np.random.default_rng(11)
+    N, E, k = 29, 350, 4
+    # Skewed degrees: a few hub nodes absorb most edges.
+    hub = rng.integers(0, 3, E)
+    src = np.where(rng.random(E) < 0.7, hub, rng.integers(0, N, E))
+    dst = rng.integers(0, N, E)
+    t = np.sort(rng.integers(0, 70, E))
+    eids = np.arange(E, dtype=np.int64)
+
+    rows = DeviceUniformSampler(N, k, seed=3, mesh=_mesh_all())
+    rows.build(src, dst, t, eids)
+    deg = DeviceUniformSampler(N, k, seed=3, mesh=_mesh_all(),
+                               partition="degree")
+    deg.build(src, dst, t, eids)
+    for _ in range(4):
+        seeds = rng.integers(0, N, 15)
+        qt = rng.integers(0, 80, 15)
+        _assert_same_np(rows.sample(seeds, qt), deg.sample(seeds, qt))
+    # and the canonical checkpoint is partition-independent
+    a, b = rows.state_dict(), deg.state_dict()
+    for key in ("adj_nbr", "adj_t", "adj_e", "indptr"):
+        np.testing.assert_array_equal(a[key], b[key])
 
 
 # ----------------------------------------------------------------------
