@@ -1,0 +1,101 @@
+"""Out-of-core storage benchmarks: converter and windowed-epoch throughput
+for the ``repro.storage`` backends (``docs/storage.md``).
+
+Records (all gated against ``benchmarks/baseline_cpu.json``):
+
+  * ``storage/convert_mmap`` — chunked ``MmapStore.from_chunks`` of a
+    synthetic time-sorted stream (E edges, d-dim features), wall seconds.
+    The stream is produced by a generator, so the conversion itself is the
+    only thing touching all E rows.
+  * ``storage/epoch_inmem`` / ``storage/epoch_mmap`` — one windowed
+    "epoch" per backend: iterate ``iter_windows(batch_size=B)`` over the
+    full store and reduce every column (the loader-side access pattern
+    without model cost). The mmap run releases pages after each window;
+    its derived field reports the peak-RSS delta of the epoch
+    (``resource.getrusage``) next to the in-memory run's.
+
+``--fast`` shrinks the stream for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import resource
+import shutil
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+
+from repro.storage import InMemoryStore, MmapStore
+
+
+def _chunks(n_edges: int, d_edge: int, num_nodes: int, chunk: int = 1 << 16,
+            seed: int = 0):
+    """Synthetic time-sorted stream, one chunk at a time (never whole)."""
+    rng = np.random.default_rng(seed)
+    t0 = 0
+    for lo in range(0, n_edges, chunk):
+        m = min(chunk, n_edges - lo)
+        yield {
+            "src": rng.integers(0, num_nodes, m),
+            "dst": rng.integers(0, num_nodes, m),
+            "t": t0 + np.sort(rng.integers(0, 1000, m)),
+            "edge_feats": rng.standard_normal((m, d_edge)).astype(np.float32),
+        }
+        t0 += 1000
+
+
+def _rss_kb() -> int:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+
+
+def _epoch(store, batch_size: int, release: bool) -> int:
+    """Touch every column of every window; returns a checksum."""
+    acc = 0
+    for w in store.iter_windows(batch_size=batch_size, release=release):
+        acc += int(w.src[0]) + int(w.dst[-1]) + int(w.t[-1])
+        if w.edge_feats is not None:
+            acc += int(w.edge_feats[0, 0] * 0)
+    return acc
+
+
+def bench_storage(n_edges: int = 200_000, d_edge: int = 32,
+                  num_nodes: int = 20_000, batch_size: int = 10_000) -> None:
+    """Converter + windowed-epoch throughput, mmap vs in-memory."""
+    tmp = tempfile.mkdtemp(prefix="storage_bench_")
+    try:
+        path = f"{tmp}/store"
+        t_conv = timeit(
+            lambda: MmapStore.from_chunks(
+                path, _chunks(n_edges, d_edge, num_nodes), overwrite=True),
+            repeats=1, warmup=0)
+        stream_mb = (n_edges * (3 * 8 + 4 * d_edge)) / 2**20
+        emit("storage/convert_mmap", t_conv,
+             f"E={n_edges} d={d_edge} stream={stream_mb:.0f}MB")
+
+        mm = MmapStore(path)
+        mem = InMemoryStore.from_data(mm.to_data())
+        t_mem = timeit(lambda: _epoch(mem, batch_size, release=False))
+        rss0 = _rss_kb()
+        t_mm = timeit(lambda: _epoch(mm, batch_size, release=True))
+        drss = (_rss_kb() - rss0) / 1024
+        emit("storage/epoch_inmem", t_mem, f"E={n_edges} B={batch_size}")
+        emit("storage/epoch_mmap", t_mm,
+             f"E={n_edges} B={batch_size} rss_delta={drss:.0f}MB "
+             f"vs_inmem={t_mm / t_mem:.2f}x")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small stream for CI")
+    a = ap.parse_args()
+    if a.fast:
+        bench_storage(n_edges=60_000, d_edge=16, num_nodes=6_000,
+                      batch_size=5_000)
+    else:
+        bench_storage()

@@ -210,6 +210,49 @@ class DeviceUniformSampler:
             )
         self._adj = jax.device_put(adj, self._device)
 
+    def build_from_store(self, store, chunk_size: int = 1 << 20,
+                         scratch_dir: Optional[str] = None) -> None:
+        """Build the CSR from an ``EventStore`` via the streaming two-pass
+        build (``repro.storage.streaming_csr``): degree count, then
+        chunked fill — O(chunk) host-resident beyond the adjacency itself,
+        which ``scratch_dir`` parks in disk-backed memmaps. Sharded
+        samplers hand the streamed CSR straight to ``_shard_adjacency``
+        (the same ``partition="rows"``/``"degree"`` boundary cut as
+        ``build``), so each shard's padded slice goes host-scratch ->
+        device with no full-size host copy; single-device samplers place
+        the already-sorted arrays directly, skipping the device re-sort.
+        Layout matches ``build`` bit-identically whenever no two distinct
+        events share a ``(node, timestamp)`` pair (``repro/storage/csr.py``).
+        """
+        from repro.storage.csr import streaming_csr
+
+        t_hi = store.time_span[1]
+        if store.num_edge_events >= 2**30 or t_hi >= 2**31:
+            raise ValueError(
+                "stream exceeds the device sampler's int32 range "
+                "(indptr/timestamps); use the host UniformSampler")
+        csr = streaming_csr(store, num_nodes=self.num_nodes,
+                            chunk_size=chunk_size, scratch_dir=scratch_dir)
+        base = int(csr["base"])
+        if self.num_nodes * base >= 2**31:
+            raise ValueError(
+                f"composite key range num_nodes*({base}) exceeds int32; use "
+                f"the host UniformSampler for this graph"
+            )
+        if self._mesh is not None:
+            self._shard_adjacency(csr)
+            return
+        adj = {
+            "adj_nbr": self._as_i32(csr["adj_nbr"], "adj_nbr"),
+            "adj_t": self._as_i32(csr["adj_t"], "adj_t"),
+            "adj_e": self._as_i32(csr["adj_e"], "adj_e"),
+            "adj_key": self._as_i32(csr["adj_key"], "adj_key"),
+            "indptr": self._as_i32(csr["indptr"], "indptr"),
+            "tvals": self._as_i32(csr["tvals"], "tvals"),
+            "base": jnp.int32(base),
+        }
+        self._adj = jax.device_put(adj, self._device)
+
     @staticmethod
     def _host_i64(a, name: str) -> np.ndarray:
         """Host int64 view of an input array with the same int32-range

@@ -34,6 +34,61 @@ def _as_f32(x) -> Optional[np.ndarray]:
     return np.ascontiguousarray(np.asarray(x, dtype=np.float32))
 
 
+def _int64_col(strings: np.ndarray) -> np.ndarray:
+    """Parse a string column to int64 exactly; float-formatted cells
+    ("3.0") fall back through float64 (truncating like the old
+    ``genfromtxt`` path did)."""
+    try:
+        return strings.astype(np.int64)
+    except ValueError:
+        return strings.astype(np.float64).astype(np.int64)
+
+
+def iter_csv_chunks(
+    path: str,
+    src_col: int = 0,
+    dst_col: int = 1,
+    t_col: int = 2,
+    feat_cols: Optional[Sequence[int]] = None,
+    delimiter: str = ",",
+    skip_header: int = 1,
+    chunk_rows: int = 1 << 16,
+):
+    """Stream a CSV of events as ``{"src", "dst", "t"[, "edge_feats"]}``
+    numpy chunks of at most ``chunk_rows`` rows.
+
+    Only one chunk is resident at a time: this is the parser behind both
+    the chunked ``DGData.from_csv`` and the out-of-core
+    ``repro.storage.MmapStore.from_csv`` converter. Integer id/time
+    columns parse straight to int64 (no float64 round-trip), features to
+    float32. Blank lines are skipped.
+    """
+    if chunk_rows <= 0:
+        raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
+    fcols = list(feat_cols) if feat_cols else None
+    with open(path) as f:
+        for _ in range(skip_header):
+            f.readline()
+        while True:
+            lines = []
+            for line in f:
+                if line.strip():
+                    lines.append(line)
+                if len(lines) >= chunk_rows:
+                    break
+            if not lines:
+                return
+            cells = np.array([ln.strip().split(delimiter) for ln in lines])
+            chunk = {
+                "src": _int64_col(cells[:, src_col]),
+                "dst": _int64_col(cells[:, dst_col]),
+                "t": _int64_col(cells[:, t_col]),
+            }
+            if fcols:
+                chunk["edge_feats"] = cells[:, fcols].astype(np.float32)
+            yield chunk
+
+
 @dataclasses.dataclass(frozen=True)
 class DGData:
     """Immutable temporal-graph storage.
@@ -130,15 +185,68 @@ class DGData:
         delimiter: str = ",",
         skip_header: int = 1,
         granularity: TimeDelta | str = "s",
+        chunk_rows: int = 1 << 16,
     ) -> "DGData":
-        """CSV IO adapter (paper §4: custom adapters via CSV)."""
-        raw = np.genfromtxt(path, delimiter=delimiter, skip_header=skip_header)
-        raw = np.atleast_2d(raw)
-        feats = raw[:, list(feat_cols)] if feat_cols else None
+        """CSV IO adapter (paper §4: custom adapters via CSV).
+
+        The parse streams in ``chunk_rows``-line chunks
+        (``iter_csv_chunks``): id/time columns are parsed straight to
+        int64 (event ids stay int64 end-to-end until device staging — no
+        float round-trip that could silently lose precision on huge
+        streams) and features to float32, so peak parse memory is one
+        chunk plus the final columns instead of the whole file's float64
+        matrix. For streams that should never be fully resident, convert
+        to a store instead: ``repro.storage.MmapStore.from_csv``.
+        """
+        parts = {"src": [], "dst": [], "t": [], "edge_feats": []}
+        for chunk in iter_csv_chunks(
+            path, src_col=src_col, dst_col=dst_col, t_col=t_col,
+            feat_cols=feat_cols, delimiter=delimiter,
+            skip_header=skip_header, chunk_rows=chunk_rows,
+        ):
+            for k in ("src", "dst", "t"):
+                parts[k].append(chunk[k])
+            if "edge_feats" in chunk:
+                parts["edge_feats"].append(chunk["edge_feats"])
+        cat = lambda k, d: (
+            np.concatenate(parts[k]) if parts[k] else np.empty((0,), d))
+        feats = np.concatenate(parts["edge_feats"]) if parts["edge_feats"] else None
         return cls.from_arrays(
-            raw[:, src_col], raw[:, dst_col], raw[:, t_col],
+            cat("src", np.int64), cat("dst", np.int64), cat("t", np.int64),
             edge_feats=feats, granularity=granularity,
         )
+
+    @classmethod
+    def from_store(cls, store) -> "DGData":
+        """Zero-copy ``DGData`` view over an ``EventStore`` backend.
+
+        Columns are aliased, not copied: for ``InMemoryStore`` they are
+        the same host arrays ``from_arrays`` would produce (bit-identical
+        pipelines); for ``MmapStore`` they are read-only ``np.memmap``
+        views, so slicing/splitting/loading downstream reads O(touched
+        pages) from disk — the whole training stack runs off a store
+        handle without ever materializing the stream (``docs/storage.md``).
+        The store guarantees time-sorted columns, so no re-sort happens.
+        """
+        return cls(
+            src=store.src,
+            dst=store.dst,
+            edge_t=store.edge_t,
+            edge_feats=store.edge_feats,
+            node_ids=store.node_ids,
+            node_t=store.node_t,
+            node_feats=store.node_feats,
+            static_node_feats=store.static_node_feats,
+            granularity=store.granularity,
+            num_nodes=int(store.num_nodes),
+        )
+
+    def to_store(self):
+        """This storage as an ``InMemoryStore`` (columns aliased, not
+        copied) — the inverse of ``from_store`` for the default backend."""
+        from repro.storage import InMemoryStore
+
+        return InMemoryStore.from_data(self)
 
     # ------------------------------------------------------------------
     # Basic properties
@@ -195,7 +303,19 @@ class DGData:
         )
 
     def slice_events(self, lo: int, hi: int, t_hi: Optional[int] = None) -> "DGData":
-        """Sub-storage of edge events [lo, hi); node events filtered by time."""
+        """Sub-storage of edge events [lo, hi); node events filtered by time.
+
+        ``lo == hi`` (an empty window) is valid and yields an empty slice;
+        ``lo > hi`` or rows outside ``[0, num_edge_events]`` raise
+        ``ValueError`` — silently clamping used to produce empty or
+        misaligned feature slices downstream.
+        """
+        n = self.num_edge_events
+        if lo > hi:
+            raise ValueError(f"slice_events lo {lo} > hi {hi}")
+        if lo < 0 or hi > n:
+            raise ValueError(
+                f"slice_events window [{lo}, {hi}) out of range [0, {n})")
         t_lo_bound = int(self.edge_t[lo]) if lo < self.num_edge_events and lo < hi else 0
         nsel = slice(0, 0)
         if self.node_ids is not None:

@@ -249,6 +249,22 @@ class UniformSampler:
         order = np.lexsort((times, nodes))  # by node, then time
         self._set_adjacency(nodes[order], nbrs[order], times[order], es[order])
 
+    def build_from_store(self, store, chunk_size: int = 1 << 20,
+                         scratch_dir: Optional[str] = None) -> None:
+        """Build the adjacency from an ``EventStore`` without materializing
+        the doubled edge list: the two-pass ``repro.storage.streaming_csr``
+        (degree count, then chunked fill at per-node cursors) walks the
+        stream in O(chunk)-resident windows — ``scratch_dir`` additionally
+        parks the O(E) adjacency arrays on disk. Same layout as ``build``
+        (bit-identical whenever no two distinct events share a
+        ``(node, timestamp)`` pair — see ``repro/storage/csr.py``)."""
+        from repro.storage.csr import streaming_csr
+
+        csr = streaming_csr(store, num_nodes=self.num_nodes,
+                            chunk_size=chunk_size, scratch_dir=scratch_dir,
+                            with_keys=False)
+        self._set_adjacency(*csr_from_state(csr, self.num_nodes))
+
     def _set_adjacency(self, nodes, nbrs, times, es) -> None:
         """Install a node-major/time-ascending adjacency and derive the
         search structures (unique-time table + fused key)."""

@@ -452,6 +452,14 @@ class UniformNeighborHook(Hook):
         self.sampler.build(src, dst, t, eids)
         return self
 
+    def build_from_store(self, store, **kwargs) -> "UniformNeighborHook":
+        """Build the adjacency from an ``EventStore`` via the streaming
+        two-pass build (O(chunk) resident — ``repro.storage.streaming_csr``);
+        returns self. Works for both the host and device hook (each
+        sampler implements ``build_from_store``)."""
+        self.sampler.build_from_store(store, **kwargs)
+        return self
+
     def reset_state(self) -> None:
         """Rewind the sampler's draw counter (epochs replay exactly)."""
         self.sampler.reset_state()

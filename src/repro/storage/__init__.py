@@ -1,0 +1,26 @@
+"""Pluggable out-of-core event storage (``docs/storage.md``).
+
+``EventStore`` is the backend contract (sorted columnar event arrays +
+range queries + resumable windowed iteration); ``InMemoryStore`` is the
+bit-identical host-numpy default, ``MmapStore`` the memory-mapped columnar
+backend for streams larger than host RAM. ``streaming_csr`` builds the
+uniform samplers' adjacency in O(chunk) resident memory, and
+``StoreEventLoader`` feeds store windows through the hook pipeline into
+``PrefetchLoader``.
+"""
+
+from repro.storage.base import EventStore, EventWindow, WindowIterator
+from repro.storage.csr import streaming_csr
+from repro.storage.memory import InMemoryStore
+from repro.storage.mmap import MmapStore
+from repro.storage.windows import StoreEventLoader
+
+__all__ = [
+    "EventStore",
+    "EventWindow",
+    "WindowIterator",
+    "InMemoryStore",
+    "MmapStore",
+    "StoreEventLoader",
+    "streaming_csr",
+]

@@ -94,8 +94,27 @@ class Experiment:
         return cls.from_dict(json.loads(blob))
 
     # -- compilation -----------------------------------------------------
+    def _store(self, data=None):
+        """The out-of-core ``EventStore`` handle, if this experiment has
+        one: an ``EventStore`` passed as ``data``, else the ``MmapStore``
+        at ``DataSpec.storage`` (``None`` otherwise)."""
+        from repro.storage import EventStore
+
+        if isinstance(data, EventStore):
+            return data
+        if data is None and self.data.storage is not None:
+            from repro.storage import MmapStore
+
+            return MmapStore(self.data.storage)
+        return None
+
     def _dataset(self, data=None):
-        """The concrete ``DGData``: the given one, else ``DataSpec``'s."""
+        """The concrete ``DGData``: the given one (an ``EventStore`` is
+        viewed through ``DGData.from_store``), else the ``MmapStore`` at
+        ``DataSpec.storage``, else ``DataSpec``'s generated stream."""
+        store = self._store(data)
+        if store is not None:
+            return store.to_data()
         if data is not None:
             return data
         from repro.data import generate
@@ -109,11 +128,14 @@ class Experiment:
         the module table) and returns a pipeline exposing the shared
         surface (``train_epoch`` / ``evaluate`` / ``save_checkpoint`` /
         ``restore_checkpoint``). ``data`` overrides ``DataSpec``'s
-        generated dataset with a pre-built ``DGData`` (splits and the axis
-        still come from the specs).
+        generated dataset with a pre-built ``DGData`` — or an
+        ``EventStore``, which (like ``DataSpec.storage``) backs the stream
+        with the store's columns and runs event pipelines out-of-core
+        (``docs/storage.md``).
         """
         d, m, t = self.data, self.model, self.train
-        stream = self._dataset(data)
+        store = self._store(data)
+        stream = store.to_data() if store is not None else self._dataset(data)
 
         if self.task == "link":
             if d.discretization is None:
@@ -131,7 +153,7 @@ class Experiment:
                     eval_negatives=t.eval_negatives, seed=t.seed,
                     model_kwargs=dict(m.kwargs), sampler_spec=self.sampler,
                     val_ratio=d.val_ratio, test_ratio=d.test_ratio,
-                    data_shards=t.data_shards,
+                    data_shards=t.data_shards, store=store,
                 )
             if m.name not in DTDG_MODELS:
                 raise ValueError(

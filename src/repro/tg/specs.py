@@ -79,6 +79,13 @@ class DataSpec(_SpecBase):
     it into fixed-capacity snapshots (``capacity`` overrides the automatic
     max-row power-of-two sizing). ``val_ratio``/``test_ratio`` are the
     ``DGData.split`` chronological boundaries shared by every task.
+
+    ``storage`` points at an on-disk ``repro.storage.MmapStore`` directory
+    (``docs/storage.md``). When set, ``Experiment.compile`` opens the store
+    instead of generating ``dataset``, backs the event stream with its
+    memory-mapped columns, and runs the pipelines out-of-core: uniform
+    adjacency built by the streaming two-pass CSR, loader pages released
+    after every batch. Results are bit-identical to the in-memory run.
     """
 
     dataset: str = "wikipedia"
@@ -87,6 +94,7 @@ class DataSpec(_SpecBase):
     test_ratio: float = 0.15
     discretization: Optional[TimeDelta] = None
     capacity: Optional[int] = None
+    storage: Optional[str] = None
 
     def __post_init__(self):
         if self.discretization is not None and not isinstance(

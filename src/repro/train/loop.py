@@ -233,6 +233,7 @@ class CTDGLinkPipeline:
         test_ratio: float = 0.15,
         data_shards: int = 1,
         fused=None,
+        store=None,
     ):
         if model_name not in CTDG_LINK_MODELS:
             raise ValueError(f"unknown CTDG model {model_name!r}")
@@ -242,6 +243,10 @@ class CTDGLinkPipeline:
         )
         self.model_name = model_name
         self.data = data
+        # Out-of-core handle (repro.storage.EventStore). When set, the
+        # uniform adjacency is built by the streaming two-pass CSR (O(chunk)
+        # resident) and loaders release memmap pages after every batch.
+        self._store = store
         self.batch_size = batch_size
         self.sampler_spec = spec
         self.device_sampling = spec.device
@@ -389,8 +394,11 @@ class CTDGLinkPipeline:
             for hook in self.manager.hooks():
                 if isinstance(hook, (UniformNeighborHook,
                                      DeviceUniformNeighborHook)):
-                    hook.build(data.src, data.dst, data.edge_t,
-                               np.arange(len(data.src), dtype=np.int64))
+                    if self._store is not None:
+                        hook.build_from_store(self._store)
+                    else:
+                        hook.build(data.src, data.dst, data.edge_t,
+                                   np.arange(len(data.src), dtype=np.int64))
 
         # Node rows owned per shard of the sharded packed buffer — the
         # ``rows_per_shard`` handed to ``fused_temporal_layer_sharded`` by
@@ -662,7 +670,12 @@ class CTDGLinkPipeline:
 
     # ------------------------------------------------------------------
     def _loader(self, data: DGData):
-        loader = DGDataLoader(DGraph(data), self.manager, batch_size=self.batch_size)
+        # With an out-of-core store, drop its resident pages after each
+        # batch is handed off — hooks copy what they keep, so the epoch's
+        # peak RSS stays near one window of the stream.
+        on_batch = self._store.release if self._store is not None else None
+        loader = DGDataLoader(DGraph(data), self.manager,
+                              batch_size=self.batch_size, on_batch=on_batch)
         if self.device_sampling:
             # Overlap hook pipeline + host->device staging of batch i+1 with
             # the jitted step on batch i (double-buffered by default). With

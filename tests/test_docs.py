@@ -19,6 +19,7 @@ def test_readme_and_docs_exist():
     assert (ROOT / "docs" / "experiment.md").exists()
     assert (ROOT / "docs" / "sharding.md").exists()
     assert (ROOT / "docs" / "serving.md").exists()
+    assert (ROOT / "docs" / "storage.md").exists()
 
 
 def test_relative_doc_links_resolve():
@@ -60,6 +61,11 @@ DOCUMENTED_MODULES = [
     "repro.tg.experiment",
     "repro.serve.graph_service",
     "repro.serve.faults",
+    "repro.storage.base",
+    "repro.storage.memory",
+    "repro.storage.mmap",
+    "repro.storage.csr",
+    "repro.storage.windows",
     # Test infrastructure is public surface too: the shared kernel-parity
     # harness and the jaxpr-inspection helpers are how new kernel families
     # get their acceptance coverage.

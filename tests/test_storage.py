@@ -1,0 +1,395 @@
+"""Out-of-core event storage (``repro.storage``): backend parity between
+``InMemoryStore`` and ``MmapStore`` (range queries, windowed iteration,
+end-to-end CTDG training), the streaming two-pass CSR build against the
+in-RAM oracle, the converters' torn-store/unsorted-stream guards, and the
+``iter_windows`` resume cursor round-tripping through the checkpoint
+layer."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import DGData
+from repro.core.sampler import UniformSampler
+from repro.storage import (
+    EventStore,
+    InMemoryStore,
+    MmapStore,
+    StoreEventLoader,
+    streaming_csr,
+)
+
+
+def _mk_data(n=500, num_nodes=60, d_edge=4, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, num_nodes, n)
+    dst = rng.integers(0, num_nodes, n)
+    t = np.sort(rng.integers(0, 10_000, n))
+    feats = rng.standard_normal((n, d_edge)).astype(np.float32)
+    return DGData.from_arrays(src, dst, t, edge_feats=feats, granularity="s")
+
+
+@pytest.fixture()
+def both_stores(tmp_path):
+    data = _mk_data()
+    mem = InMemoryStore.from_data(data)
+    mm = MmapStore.from_data(str(tmp_path / "store"), data, chunk_rows=97)
+    return data, mem, mm
+
+
+# -- backend parity ----------------------------------------------------
+
+
+def test_backend_columns_bit_identical(both_stores):
+    data, mem, mm = both_stores
+    for col in ("src", "dst", "edge_t"):
+        np.testing.assert_array_equal(getattr(mem, col), getattr(mm, col))
+        assert getattr(mm, col).dtype == getattr(mem, col).dtype
+    np.testing.assert_array_equal(mem.edge_feats, mm.edge_feats)
+    assert mem.num_nodes == mm.num_nodes == data.num_nodes
+    assert mem.edge_feat_dim == mm.edge_feat_dim == 4
+    assert mem.time_span == mm.time_span
+
+
+def test_backend_range_queries_identical(both_stores):
+    data, mem, mm = both_stores
+    t_lo, t_hi = mem.time_span
+    probes = [(None, None), (t_lo, t_hi), (t_lo + 7, t_hi - 7),
+              (t_hi + 1, t_hi + 2), (None, (t_lo + t_hi) // 2)]
+    for a, b in probes:
+        assert mem.edge_range(a, b) == mm.edge_range(a, b)
+        assert mem.edge_range(a, b) == data.edge_range(a, b)
+        assert mem.node_event_range(a, b) == mm.node_event_range(a, b)
+
+
+def test_windowed_iteration_identical(both_stores):
+    _, mem, mm = both_stores
+    for kw in ({"batch_size": 123}, {"time_window": 1777}):
+        w1 = list(mem.iter_windows(**kw))
+        w2 = list(mm.iter_windows(**kw))
+        assert len(w1) == len(w2) > 1
+        for a, b in zip(w1, w2):
+            assert (a.lo, a.hi, a.window) == (b.lo, b.hi, b.window)
+            np.testing.assert_array_equal(a.src, b.src)
+            np.testing.assert_array_equal(a.t, b.t)
+            np.testing.assert_array_equal(a.eids, b.eids)
+
+
+def test_mmap_release_keeps_columns_readable(both_stores):
+    _, mem, mm = both_stores
+    before = mm.src[:10].copy()
+    mm.release()  # MADV_DONTNEED; pages fault back in on next touch
+    np.testing.assert_array_equal(mm.src[:10], before)
+    np.testing.assert_array_equal(np.asarray(mm.dst), np.asarray(mem.dst))
+
+
+# -- windows: bounds, resume, checkpoint round-trip --------------------
+
+
+def test_edge_window_bounds_raise(both_stores):
+    _, mem, mm = both_stores
+    for store in (mem, mm):
+        with pytest.raises(ValueError):
+            store.edge_window(10, 5)
+        with pytest.raises(ValueError):
+            store.edge_window(-1, 5)
+        with pytest.raises(ValueError):
+            store.edge_window(0, store.num_edge_events + 1)
+        empty = store.edge_window(7, 7)
+        assert len(empty) == 0 and empty.eids.dtype == np.int64
+
+
+def test_iter_windows_argument_validation(both_stores):
+    _, mem, _ = both_stores
+    with pytest.raises(ValueError):
+        mem.iter_windows()
+    with pytest.raises(ValueError):
+        mem.iter_windows(batch_size=10, time_window=10)
+    with pytest.raises(ValueError):
+        mem.iter_windows(batch_size=0)
+
+
+def test_resume_cursor_roundtrips_through_checkpoint(both_stores, tmp_path):
+    """Stop mid-epoch, checkpoint the cursor with the distributed
+    checkpoint layer, restore into a fresh iterator: the replayed windows
+    match an uninterrupted epoch's tail bit-for-bit."""
+    from repro.distributed import checkpoint as ckpt
+
+    _, _, mm = both_stores
+    full = list(mm.iter_windows(batch_size=77))
+
+    it = mm.iter_windows(batch_size=77)
+    seen = []
+    for w in it:
+        seen.append(w)
+        if len(seen) == 3:
+            break
+    ckpt.save(str(tmp_path / "ck"), 0, it.state_dict())
+
+    state, _, _ = ckpt.restore(str(tmp_path / "ck"))
+    resumed = list(mm.iter_windows(
+        batch_size=77, start={k: int(v) for k, v in state.items()}))
+    tail = full[3:]
+    assert len(resumed) == len(tail)
+    for a, b in zip(resumed, tail):
+        assert (a.lo, a.hi) == (b.lo, b.hi)
+        np.testing.assert_array_equal(a.src, b.src)
+        np.testing.assert_array_equal(a.eids, b.eids)
+
+
+def test_time_window_resume(both_stores):
+    _, mem, _ = both_stores
+    full = list(mem.iter_windows(time_window=911))
+    wi = mem.iter_windows(time_window=911)
+    gen = iter(wi)
+    next(gen)
+    next(gen)
+    # cursor state reflects what the generator has already yielded
+    state = wi.state_dict()
+    resumed = list(mem.iter_windows(time_window=911, start=state))
+    assert [(w.lo, w.hi) for w in resumed] == [(w.lo, w.hi) for w in full[2:]]
+
+
+# -- converters: guards and CSV ----------------------------------------
+
+
+def test_from_chunks_rejects_unsorted(tmp_path):
+    chunks = [
+        {"src": np.array([1, 2]), "dst": np.array([3, 4]),
+         "t": np.array([10, 5])},
+    ]
+    with pytest.raises(ValueError, match="time-sorted"):
+        MmapStore.from_chunks(str(tmp_path / "bad"), iter(chunks))
+    assert not os.path.exists(str(tmp_path / "bad"))  # no torn publish
+
+    across = [
+        {"src": np.array([1]), "dst": np.array([2]), "t": np.array([10])},
+        {"src": np.array([3]), "dst": np.array([4]), "t": np.array([5])},
+    ]
+    with pytest.raises(ValueError, match="time-sorted"):
+        MmapStore.from_chunks(str(tmp_path / "bad2"), iter(across))
+
+
+def test_torn_store_detected(tmp_path, both_stores):
+    data, _, _ = both_stores
+    path = str(tmp_path / "torn")
+    MmapStore.from_data(path, data)
+    assert MmapStore.is_intact(path)
+    with open(os.path.join(path, "src.npy"), "r+b") as f:
+        f.truncate(os.path.getsize(os.path.join(path, "src.npy")) - 8)
+    assert not MmapStore.is_intact(path)
+    with pytest.raises(ValueError):
+        MmapStore(path)
+
+
+def test_from_csv_matches_dgdata_from_csv(tmp_path):
+    rng = np.random.default_rng(3)
+    n = 257
+    src = rng.integers(0, 40, n)
+    dst = rng.integers(0, 40, n)
+    t = np.sort(rng.integers(0, 5000, n))
+    lines = ["src,dst,t,f0,f1"]
+    for i in range(n):
+        lines.append(f"{src[i]},{dst[i]},{t[i]},{i * 0.5},{-i * 0.25}")
+    p = tmp_path / "edges.csv"
+    p.write_text("\n".join(lines) + "\n")
+
+    d = DGData.from_csv(str(p), feat_cols=[3, 4], chunk_rows=61)
+    store = MmapStore.from_csv(str(tmp_path / "csvstore"), str(p),
+                               feat_cols=[3, 4], chunk_rows=61)
+    np.testing.assert_array_equal(d.src, store.src)
+    np.testing.assert_array_equal(d.dst, store.dst)
+    np.testing.assert_array_equal(d.edge_t, store.edge_t)
+    np.testing.assert_array_equal(d.edge_feats, store.edge_feats)
+    assert store.src.dtype == np.int64  # exact ids end-to-end
+
+
+def test_csv_int64_exactness(tmp_path):
+    """Ids/timestamps above 2**53 survive the chunked parse exactly (the
+    old float64 genfromtxt path would round them)."""
+    big = 2**60 + 1
+    p = tmp_path / "big.csv"
+    p.write_text(f"src,dst,t\n{big},1,{big}\n{big + 2},1,{big + 2}\n")
+    d = DGData.from_csv(str(p))
+    assert int(d.src[0]) == big and int(d.edge_t[1]) == big + 2
+
+
+# -- DGData <-> store --------------------------------------------------
+
+
+def test_dgdata_from_store_zero_copy(both_stores):
+    data, mem, mm = both_stores
+    d1, d2 = DGData.from_store(mem), mm.to_data()
+    assert d1.src is mem.src  # alias, not a copy
+    assert isinstance(d2.src, np.memmap)
+    np.testing.assert_array_equal(d1.src, d2.src)
+    np.testing.assert_array_equal(d1.edge_feats, d2.edge_feats)
+    assert d1.num_nodes == d2.num_nodes == data.num_nodes
+    assert d1.granularity == d2.granularity == data.granularity
+    # views/splits work off the memmap-backed columns
+    tr, va, te = d2.split(0.15, 0.15)
+    assert tr.num_edge_events + va.num_edge_events + te.num_edge_events \
+        == data.num_edge_events
+    assert te.eid_offset == tr.num_edge_events + va.num_edge_events
+
+
+def test_to_store_roundtrip(both_stores):
+    data, _, _ = both_stores
+    store = data.to_store()
+    assert isinstance(store, EventStore)
+    assert store.src is data.src
+
+
+# -- slice_events hardening --------------------------------------------
+
+
+def test_slice_events_bounds(both_stores):
+    data, _, _ = both_stores
+    with pytest.raises(ValueError):
+        data.slice_events(5, 4)
+    with pytest.raises(ValueError):
+        data.slice_events(-1, 4)
+    with pytest.raises(ValueError):
+        data.slice_events(0, data.num_edge_events + 1)
+    empty = data.slice_events(7, 7)  # empty window is legal
+    assert empty.num_edge_events == 0
+    assert empty.eid_offset == 7
+
+
+# -- streaming CSR vs in-RAM build -------------------------------------
+
+
+def test_streaming_csr_matches_host_build(both_stores):
+    data, mem, mm = both_stores
+    eids = np.arange(data.num_edge_events, dtype=np.int64)
+    ref = UniformSampler(data.num_nodes, k=4, seed=0)
+    ref.build(data.src, data.dst, data.edge_t, eids)
+    for store in (mem, mm):
+        s = UniformSampler(data.num_nodes, k=4, seed=0)
+        s.build_from_store(store, chunk_size=89)
+        a, b = ref.state_dict(), s.state_dict()
+        assert a.keys() == b.keys()
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_streaming_csr_scratch_dir(both_stores, tmp_path):
+    _, _, mm = both_stores
+    in_ram = streaming_csr(mm, chunk_size=101)
+    on_disk = streaming_csr(mm, chunk_size=101,
+                            scratch_dir=str(tmp_path / "scratch"))
+    for k in in_ram:
+        np.testing.assert_array_equal(np.asarray(in_ram[k]),
+                                      np.asarray(on_disk[k]))
+
+
+def test_device_uniform_build_from_store(both_stores):
+    from repro.core.device_uniform import DeviceUniformSampler
+
+    data, _, mm = both_stores
+    eids = np.arange(data.num_edge_events, dtype=np.int64)
+    ref = DeviceUniformSampler(data.num_nodes, k=4, seed=0)
+    ref.build(data.src, data.dst, data.edge_t, eids)
+    s = DeviceUniformSampler(data.num_nodes, k=4, seed=0)
+    s.build_from_store(mm, chunk_size=73)
+    q = np.array([1, 5, 9], dtype=np.int32)
+    qt = np.array([8000, 9000, 9999], dtype=np.int32)
+    b1, b2 = ref.sample(q, qt), s.sample(q, qt)
+    np.testing.assert_array_equal(np.asarray(b1.nbr_ids),
+                                  np.asarray(b2.nbr_ids))
+    np.testing.assert_array_equal(np.asarray(b1.nbr_times),
+                                  np.asarray(b2.nbr_times))
+    np.testing.assert_array_equal(np.asarray(b1.mask), np.asarray(b2.mask))
+
+
+# -- loader integration ------------------------------------------------
+
+
+def test_store_event_loader_feeds_prefetch(both_stores):
+    from repro.core.loader import PrefetchLoader
+
+    _, mem, mm = both_stores
+    plain = [(b["src"], b.meta["eids"]) for b in
+             StoreEventLoader(mem, batch_size=150)]
+    pref = PrefetchLoader(StoreEventLoader(mm, batch_size=150, release=True))
+    fetched = [(b["src"], b.meta["eids"]) for b in pref]
+    assert len(plain) == len(fetched) == 4
+    for (s1, e1), (s2, e2) in zip(plain, fetched):
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+        np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+def test_dgdataloader_on_batch_called(both_stores):
+    from repro.core import DGraph
+    from repro.core.loader import DGDataLoader
+
+    data, _, _ = both_stores
+    calls = []
+    loader = DGDataLoader(DGraph(data), batch_size=100,
+                          on_batch=lambda: calls.append(1))
+    n = sum(1 for _ in loader)
+    assert len(calls) == n > 0
+
+
+# -- end-to-end CTDG parity --------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["uniform", "recency"])
+def test_e2e_ctdg_link_backend_parity(kind, small_stream, tmp_path):
+    """One CTDG link epoch + eval off each backend: loss and MRR are
+    bit-identical between ``InMemoryStore`` and ``MmapStore``."""
+    from repro.tg import (
+        DataSpec, Experiment, ModelSpec, SamplerSpec, TrainSpec,
+    )
+
+    path = str(tmp_path / "store")
+    MmapStore.from_data(path, small_stream)
+    exp = Experiment(
+        data=DataSpec("tiny", storage=None),
+        model=ModelSpec("graphmixer"),
+        sampler=SamplerSpec(kind=kind, k=4),
+        train=TrainSpec(batch_size=150, eval_negatives=5, seed=0),
+    )
+
+    def run(store):
+        pipe = exp.compile(store)
+        assert isinstance(pipe.data.src, np.ndarray)
+        loss, _ = pipe.train_epoch()
+        mrr, _ = pipe.evaluate("val")
+        return loss, mrr
+
+    l_mem, m_mem = run(small_stream.to_store())
+    l_mm, m_mm = run(MmapStore(path))
+    assert l_mem == l_mm
+    assert m_mem == m_mm
+
+
+def test_experiment_dataspec_storage_roundtrip(small_stream, tmp_path):
+    from repro.tg import DataSpec, Experiment
+
+    path = str(tmp_path / "store")
+    MmapStore.from_data(path, small_stream)
+    exp = Experiment(data=DataSpec(storage=path))
+    again = Experiment.from_json(exp.to_json())
+    assert again.data.storage == path
+    stream = again._dataset()
+    assert isinstance(stream.src, np.memmap)
+    assert stream.num_edge_events == small_stream.num_edge_events
+
+
+def test_dtdg_discretize_off_memmap(small_stream, tmp_path):
+    """The DTDG discretization path runs off memmap-backed columns and
+    matches the in-RAM stream exactly."""
+    from repro.core import TimeDelta
+    from repro.core.discretize import discretize
+
+    path = str(tmp_path / "store")
+    store = MmapStore.from_data(path, small_stream)
+    a = discretize(small_stream, TimeDelta("h"))
+    b = discretize(store.to_data(), TimeDelta("h"))
+    np.testing.assert_array_equal(np.asarray(a.src), np.asarray(b.src))
+    np.testing.assert_array_equal(np.asarray(a.edge_t), np.asarray(b.edge_t))
+    if a.edge_feats is not None:
+        np.testing.assert_array_equal(np.asarray(a.edge_feats),
+                                      np.asarray(b.edge_feats))
