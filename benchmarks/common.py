@@ -8,6 +8,11 @@ regressions show up as a time series rather than a single stale number —
 and the backend/device metadata keeps single- and multi-device trajectory
 points distinguishable (``scripts/check_bench_regression.py`` gates on the
 per-name medians).
+
+The JSON record is built by ``repro.obs.records.bench_record`` — the same
+typed record layer the telemetry sinks emit through — so bench lines are
+schema-validated and carry ``"kind": "bench"`` alongside the legacy
+fields (``docs/benchmarks.md`` documents the format).
 """
 
 from __future__ import annotations
@@ -67,13 +72,11 @@ def emit_value(name: str, value: float, derived: str = "") -> None:
     print(f"{name},{value:.1f},{derived}", flush=True)
     path = os.environ.get("BENCH_JSON")
     if path:
-        record = {
-            "name": name,
-            "us": round(value, 1),
-            "derived": derived,
-            "ts": round(time.time(), 3),
-            "rev": _git_rev(),
-            **_device_meta(),
-        }
+        from repro.obs.records import bench_record
+
+        record = bench_record(
+            name, value, derived,
+            ts=time.time(), rev=_git_rev(), **_device_meta(),
+        )
         with open(path, "a") as f:
             f.write(json.dumps(record) + "\n")

@@ -1,0 +1,53 @@
+"""Telemetry overhead microbenchmarks (``repro.obs``).
+
+Gates the two costs the observability layer is allowed to have:
+
+  obs/span_disabled   — a span + counter + histogram observe on a
+                        sink-less ``Telemetry`` (the default state of
+                        every instrumented hot path). This is the price
+                        the whole codebase pays unconditionally, so it is
+                        gated tightly; the epoch-level complement is the
+                        ``storage/epoch_*`` benches, which drive full
+                        instrumented training epochs with telemetry
+                        disabled against the pre-instrumentation
+                        baseline.
+  obs/span_enabled    — the same triple into an attached ``MemorySink``:
+                        what a run actually observing itself pays per
+                        instrumented section.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.obs import MemorySink, Telemetry
+
+from benchmarks.common import emit
+
+
+def _triple_per_call(tel: Telemetry, n: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with tel.span("bench"):
+            pass
+        tel.count("c")
+        tel.observe("h", 1e-4)
+    return (time.perf_counter() - t0) / n
+
+
+def run(n: int = 100_000) -> None:
+    """Emit per-call span+counter+observe cost, disabled and enabled."""
+    disabled = Telemetry()
+    _triple_per_call(disabled, 1000)  # warm
+    emit("obs/span_disabled", _triple_per_call(disabled, n))
+
+    enabled = Telemetry()
+    sink = enabled.attach(MemorySink())
+    _triple_per_call(enabled, 1000)
+    sink.drain()
+    emit("obs/span_enabled", _triple_per_call(enabled, n),
+         f"records={len(sink.records)}")
+
+
+if __name__ == "__main__":
+    run()

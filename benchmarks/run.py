@@ -13,6 +13,7 @@ for CI; table selection via ``--only table5,table9``.
   kernels kernel reference-path microbenchmarks
   sharded mesh-sharded sampler scaling curve (per visible shard count)
   roofline per-cell roofline terms (reads results/dryrun.json)
+  obs     telemetry span overhead, disabled and enabled (docs/observability.md)
 """
 
 from __future__ import annotations
@@ -33,6 +34,7 @@ def main() -> None:
     from benchmarks import (
         dtdg_bench,
         kernels_bench,
+        obs_bench,
         roofline,
         sharded_bench,
         table3_linkpred,
@@ -57,6 +59,7 @@ def main() -> None:
             dtdg_bench.bench_discretize_jit(scale=0.01 if fast else 0.02),
         )),
         ("kernels", kernels_bench.run),
+        ("obs", lambda: obs_bench.run(n=20_000 if fast else 100_000)),
         ("sharded", lambda: sharded_bench.bench_sharded_sampler(
             num_batches=10 if fast else 20)),
         ("roofline", roofline.run),

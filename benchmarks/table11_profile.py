@@ -1,15 +1,14 @@
-"""Paper Table 11: runtime breakdown of TGAT training via the built-in
-profiler (data loading / hooks / sampler / forward / backward+opt)."""
+"""Paper Table 11: runtime breakdown of TGAT training via the telemetry
+span layer (data loading / train step), rendered with ``span_report``."""
 
 from __future__ import annotations
 
-import numpy as np
+import jax
 
 from repro.core import TRAIN_KEY
-from repro.core.tg_hooks import RecencyNeighborHook
 from repro.data import generate
+from repro.obs import MemorySink, Telemetry, span_report
 from repro.tg import DataSpec, Experiment, ModelSpec, SamplerSpec, TrainSpec
-from repro.utils import Profiler
 
 from benchmarks.common import emit
 
@@ -24,26 +23,37 @@ def run(scale: float = 0.01, dataset: str = "wikipedia") -> None:
     ).compile(data)
     tr.train_epoch()  # warm compile
 
-    prof = Profiler(block=True)
+    tel = Telemetry()
+    sink = tel.attach(MemorySink())
     tr.reset_epoch_state()
     with tr.manager.activate(TRAIN_KEY):
         loader = tr._loader(tr.train_data)
         it = iter(loader)
         while True:
-            with prof("data_loading"):
+            with tel.span("data_loading"):
                 try:
                     batch = next(it)
                 except StopIteration:
                     break
                 bt = {k: batch[k] for k in batch.keys()}
-            with prof("train_step"):
+            with tel.span("train_step"):
                 tr.params, tr.opt_state, _ = tr._train_step(
                     tr.params, tr.opt_state, bt)
-    total = prof.total()
-    for path, secs in sorted(prof.times.items()):
-        emit(f"table11/{dataset}/{path}", secs / max(prof.counts[path], 1),
+                # Spans time dispatch only; drain async work so the span
+                # includes device time (Table 11 measures wall breakdown).
+                jax.effects_barrier()
+
+    times, counts = {}, {}
+    for r in sink.records:
+        if r["kind"] != "span":
+            continue
+        times[r["path"]] = times.get(r["path"], 0.0) + r["dur_s"]
+        counts[r["path"]] = counts.get(r["path"], 0) + 1
+    total = max(sum(times.values()), 1e-12)
+    for path, secs in sorted(times.items()):
+        emit(f"table11/{dataset}/{path}", secs / max(counts[path], 1),
              f"pct={100 * secs / total:.1f}")
-    print(prof.report(), flush=True)
+    print(span_report(sink.records), flush=True)
 
 
 if __name__ == "__main__":

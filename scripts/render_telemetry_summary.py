@@ -1,0 +1,43 @@
+"""Render a telemetry JSONL into a GitHub-flavored markdown summary.
+
+Usage::
+
+    python scripts/render_telemetry_summary.py telemetry.jsonl >> "$GITHUB_STEP_SUMMARY"
+
+Prints the per-phase span timing table (``repro.obs.span_report`` in
+markdown mode) plus a short counter/histogram digest — the CI job summary
+a reviewer reads instead of downloading the artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(path: str) -> str:
+    """The markdown summary for the JSONL file at ``path``."""
+    sys.path.insert(0, "src")
+    from repro.obs import span_report
+
+    records = [json.loads(ln) for ln in open(path)]
+    out = ["### Telemetry: per-phase timing", "",
+           span_report(records, min_pct=0.0, markdown=True), ""]
+    counters = [r for r in records if r["kind"] == "counter"]
+    hists = [r for r in records if r["kind"] == "hist"]
+    if counters:
+        out += ["### Counters", "", "| counter | value |", "| --- | ---: |"]
+        out += [f"| {r['name']} | {r['value']:g} |" for r in counters]
+        out.append("")
+    if hists:
+        out += ["### Latency histograms", "",
+                "| histogram | count | p50 (s) | p99 (s) |",
+                "| --- | ---: | ---: | ---: |"]
+        out += [f"| {r['name']} | {r['count']} | {r['p50']:.2e} "
+                f"| {r['p99']:.2e} |" for r in hists]
+        out.append("")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1] if len(sys.argv) > 1 else "telemetry.jsonl"))

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from functools import partial
 from typing import Iterator, Optional
 
@@ -363,6 +364,15 @@ class PrefetchLoader:
     prefetched batches land on the same device set as the ``shard_map``
     sampler state and the replicated model step (see ``docs/sharding.md``).
 
+    ``telemetry`` (a ``repro.obs.Telemetry``; disabled default) makes the
+    queue dynamics observable (``docs/observability.md``): a
+    ``loader/stage`` span around each producer-side hook+staging pass, a
+    ``loader/prefetch_wait`` histogram of how long the consumer blocked
+    per batch, ``loader/producer_stall`` / ``loader/consumer_stall``
+    counters (bounded-queue full on put / empty on get), a
+    ``loader/queue_depth`` gauge sampled at each dequeue, and a
+    ``loader/batches`` counter.
+
     ``staging`` enables the reusable host staging buffers
     (``_HostStagingPool``) so the H2D transfer reads from stable,
     re-registered addresses and can donate them; ``None`` (default)
@@ -386,12 +396,15 @@ class PrefetchLoader:
     _END = object()
 
     def __init__(self, inner, device=None, prefetch: int = 2,
-                 staging: Optional[bool] = None):
+                 staging: Optional[bool] = None, telemetry=None):
         if prefetch < 1:
             raise ValueError("prefetch depth must be >= 1")
+        from repro.obs import NULL
+
         self.inner = inner
         self._device = device
         self.prefetch = prefetch
+        self.telemetry = telemetry if telemetry is not None else NULL
         self._active: list = []  # live (stop, thread) pairs, for close()
         self._active_lock = threading.Lock()
         if staging is None:
@@ -414,6 +427,7 @@ class PrefetchLoader:
     def __iter__(self) -> Iterator[Batch]:
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
         stop = threading.Event()
+        tel = self.telemetry
 
         def put_or_stop(item) -> bool:
             """Bounded put that aborts when the consumer has left."""
@@ -422,13 +436,17 @@ class PrefetchLoader:
                     q.put(item, timeout=0.1)
                     return True
                 except queue.Full:
+                    # Back-pressure: the consumer is the bottleneck here.
+                    tel.count("loader/producer_stall")
                     continue
             return False
 
         def produce():
             try:
                 for batch in self.inner:
-                    if not put_or_stop(self._stage(batch)):
+                    with tel.span("loader/stage"):
+                        staged = self._stage(batch)
+                    if not put_or_stop(staged):
                         return
                 put_or_stop(self._END)
             except BaseException as e:  # surfaced on the consumer side
@@ -440,6 +458,7 @@ class PrefetchLoader:
         thread.start()
         try:
             while True:
+                wait_t0 = time.perf_counter()
                 try:
                     item = q.get(timeout=0.2)
                 except queue.Empty:
@@ -449,13 +468,20 @@ class PrefetchLoader:
                         raise RuntimeError(
                             "PrefetchLoader producer thread died without "
                             "signalling end-of-stream or an error")
+                    # Starvation: the producer is the bottleneck here.
+                    tel.count("loader/consumer_stall")
                     continue
+                if tel.enabled:
+                    tel.observe("loader/prefetch_wait",
+                                time.perf_counter() - wait_t0)
+                    tel.gauge("loader/queue_depth", q.qsize())
                 if item is self._END:
                     return
                 if isinstance(item, BaseException):
                     # Re-raising the instance keeps the producer-side
                     # traceback (it rode along on __traceback__).
                     raise item
+                tel.count("loader/batches")
                 yield item
         finally:
             stop.set()

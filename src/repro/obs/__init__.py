@@ -1,0 +1,39 @@
+"""Structured telemetry for the whole stack (``docs/observability.md``).
+
+One write-side API — :class:`~repro.obs.telemetry.Telemetry` spans,
+counters, gauges, and latency histograms — emits typed JSONL records
+(``repro.obs.records``) through pluggable sinks (``repro.obs.sinks``):
+no-op by default, in-memory for tests, append-JSONL for runs. The train
+pipelines (``TrainSpec.telemetry``), ``PrefetchLoader``, the serving
+tiers, and the storage layer all instrument through this package, and
+``benchmarks/common.py`` emits BENCH_JSON rows as the same schema's
+``bench`` records. ``repro.obs.profiler`` adds the JAX runtime hooks
+(``jax.profiler`` trace capture, device-memory gauges).
+"""
+
+from repro.obs.profiler import device_memory_gauges, trace_capture
+from repro.obs.records import bench_record, validate
+from repro.obs.sinks import FileSink, MemorySink, NullSink, Sink
+from repro.obs.telemetry import (
+    NULL,
+    EwmaGauge,
+    Histogram,
+    Telemetry,
+    span_report,
+)
+
+__all__ = [
+    "Telemetry",
+    "NULL",
+    "EwmaGauge",
+    "Histogram",
+    "span_report",
+    "Sink",
+    "NullSink",
+    "MemorySink",
+    "FileSink",
+    "validate",
+    "bench_record",
+    "trace_capture",
+    "device_memory_gauges",
+]

@@ -1,0 +1,77 @@
+"""JAX-level observability: profiler trace capture and device-memory gauges.
+
+The span/counter layer (``repro.obs.telemetry``) sees host wall-clock
+only; the two hooks here reach into the JAX runtime for the rest:
+
+  * :func:`trace_capture` wraps a code region in ``jax.profiler.trace``,
+    writing a TensorBoard/XProf trace (per-op device timelines, HLO) to
+    a log directory — the "zoom in" tool once a span points at a slow
+    phase (capture recipe in ``docs/observability.md``);
+  * :func:`device_memory_gauges` snapshots every visible device's
+    ``memory_stats()`` into gauges (``device{i}/bytes_in_use`` etc.).
+    CPU devices report no stats (``memory_stats()`` is ``None``) and are
+    skipped, so the call is safe on any backend.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional
+
+from repro.obs.telemetry import Telemetry
+
+# memory_stats keys worth exporting when present (backend-dependent).
+_MEM_KEYS = ("bytes_in_use", "peak_bytes_in_use", "bytes_limit",
+             "num_allocs", "bytes_reserved")
+
+
+@contextlib.contextmanager
+def trace_capture(logdir: str, telemetry: Optional[Telemetry] = None):
+    """Capture a ``jax.profiler`` trace of the enclosed region.
+
+    Writes the trace under ``logdir`` (view with TensorBoard's profile
+    plugin or XProf). When ``telemetry`` is given, the region also emits
+    a ``profiler/trace`` span whose attrs carry the log directory, so the
+    JSONL stream records that (and where) a trace was taken. The context
+    degrades to a no-op if the installed JAX has no profiler (some
+    minimal builds), rather than failing the run being profiled.
+    """
+    import jax
+
+    trace = getattr(getattr(jax, "profiler", None), "trace", None)
+    tel = telemetry if telemetry is not None else Telemetry()
+    with tel.span("profiler/trace", logdir=str(logdir)):
+        if trace is None:  # pragma: no cover - full jax always has it
+            yield
+        else:
+            with trace(str(logdir)):
+                yield
+
+
+def device_memory_gauges(telemetry: Telemetry,
+                         prefix: str = "device") -> Dict[str, float]:
+    """Snapshot per-device memory stats into ``telemetry`` gauges.
+
+    For each visible device with ``memory_stats()`` support (GPU/TPU;
+    CPU returns ``None`` and is skipped) sets gauges named
+    ``{prefix}{i}/{key}`` for the well-known keys present. Returns the
+    gauges set (empty on CPU-only hosts), so callers can log or assert
+    on them directly.
+    """
+    import jax
+
+    out: Dict[str, float] = {}
+    for i, dev in enumerate(jax.devices()):
+        stats = None
+        try:
+            stats = dev.memory_stats()
+        except Exception:  # pragma: no cover - backend-specific
+            continue
+        if not stats:
+            continue
+        for key in _MEM_KEYS:
+            if key in stats:
+                name = f"{prefix}{i}/{key}"
+                out[name] = float(stats[key])
+                telemetry.gauge(name, stats[key])
+    return out

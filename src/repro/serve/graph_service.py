@@ -28,6 +28,16 @@ live inference service:
 All chaos behavior is injectable via
 :class:`~repro.serve.faults.FaultInjector` so the failure paths are tested
 deterministically, not hoped for.
+
+Pass ``telemetry=`` (a :class:`repro.obs.Telemetry`) to make the service
+observable (``docs/observability.md``): per-tier request-latency
+histograms (``serve/latency/model`` / ``serve/latency/edgebank``), a
+``serve/latency/model_call`` histogram of the raw model-tier call time
+feeding the EWMA, ingest/flush/shed/degrade/probe counters, and a
+``serve/model_latency_ewma`` gauge. The EWMA itself now lives in
+:class:`repro.obs.EwmaGauge` with the exact coefficients
+(``0.7 * prev + 0.3 * lat``) the private bookkeeping used, so breaker
+decisions are bit-identical with telemetry on, off, or absent.
 """
 
 from __future__ import annotations
@@ -45,6 +55,7 @@ import numpy as np
 
 from repro.core.device_sampler import DeviceRecencySampler
 from repro.distributed import checkpoint as ckpt
+from repro.obs import NULL, EwmaGauge
 from repro.models.tg.common import link_decoder, link_decoder_init
 from repro.models.tg.edgebank import EdgeBank
 from repro.nn.linear import dense, dense_init
@@ -182,13 +193,16 @@ class OnlineGraphService:
                  fail_threshold: int = 3,
                  probe_every: int = 8,
                  edgebank_window: Optional[int] = None,
-                 fault_injector=None):
+                 fault_injector=None,
+                 telemetry=None):
         """``model_fn``/``embed_fn`` override the learned tier (signature of
         :func:`_link_scores` / :func:`learned_embed` minus ``params``);
         ``latency_budget`` (seconds) bounds the EWMA model latency before
         degrading; ``fail_threshold`` consecutive model faults open the
         circuit breaker; every ``probe_every``-th degraded flush probes the
-        model to let it close."""
+        model to let it close. ``telemetry`` (a ``repro.obs.Telemetry``)
+        enables the counters/histograms in the module docstring — the
+        no-sink default records nothing and changes no behavior."""
         self.num_nodes = int(num_nodes)
         self.k = int(k)
         self.max_batch = int(max_batch)
@@ -196,6 +210,7 @@ class OnlineGraphService:
         self.latency_budget = latency_budget
         self.fail_threshold = int(fail_threshold)
         self.probe_every = max(1, int(probe_every))
+        self.telemetry = telemetry if telemetry is not None else NULL
 
         self.sampler = DeviceRecencySampler(self.num_nodes, self.k)
         self.edgebank = EdgeBank(self.num_nodes, window=edgebank_window)
@@ -219,7 +234,10 @@ class OnlineGraphService:
                       "events_out_of_order": 0, "model_errors": 0,
                       "probes": 0}
 
-        self._lat_ewma: Optional[float] = None
+        # Model-tier latency EWMA: the same float sequence the private
+        # bookkeeping produced (decay/alpha = 0.7/0.3, first sample passes
+        # through), now readable as a telemetry gauge too.
+        self._lat = EwmaGauge(alpha=0.3, decay=0.7)
         self._failures = 0
         self._degraded_flushes = 0
 
@@ -271,9 +289,11 @@ class OnlineGraphService:
             src, dst, t, eid = payload
             if eid >= 0 and eid in self._applied:
                 self.stats["events_deduped"] += 1
+                self.telemetry.count("serve/events_deduped")
                 continue
             if t < self._last_t:
                 self.stats["events_out_of_order"] += 1
+                self.telemetry.count("serve/events_out_of_order")
             self._last_t = max(self._last_t, t)
             if eid >= 0:
                 self._applied.add(eid)
@@ -283,6 +303,7 @@ class OnlineGraphService:
                 self.edgebank.update_memory(src, dst, t)
             self._event_cursor += 1
             self.stats["events_applied"] += 1
+            self.telemetry.count("serve/events_applied")
 
     # ------------------------------------------------------------ serving
 
@@ -366,27 +387,37 @@ class OnlineGraphService:
     def _resolve(self, req: _Request, resp: Response) -> None:
         resp.latency_s = time.monotonic() - req.enqueue_t
         self.stats[resp.status.value] += 1
+        tel = self.telemetry
+        if tel.enabled:
+            tel.count(f"serve/requests_{resp.status.value}")
+            if resp.tier is not None:
+                # Per-tier enqueue-to-resolve latency distribution.
+                tel.observe(f"serve/latency/{resp.tier}", resp.latency_s)
         req.pending._resolve(resp)
 
     def _choose_tier(self) -> str:
         if self._failures >= self.fail_threshold or self._over_budget():
             self._degraded_flushes += 1
+            self.telemetry.count("serve/degraded_flushes")
             if self._degraded_flushes % self.probe_every == 0:
                 self.stats["probes"] += 1
+                self.telemetry.count("serve/probes")
                 return "model"  # probe so the breaker can close
             return "edgebank"
         return "model"
 
     def _over_budget(self) -> bool:
         return (self.latency_budget is not None
-                and self._lat_ewma is not None
-                and self._lat_ewma > self.latency_budget)
+                and self._lat.value is not None
+                and self._lat.value > self.latency_budget)
 
     def _flush(self, batch: list[_Request]) -> None:
+        self.telemetry.count("serve/flushes")
         now = time.monotonic()
         live = []
         for r in batch:
             if now > r.deadline:
+                self.telemetry.count("serve/shed")
                 self._resolve(r, Response(Status.REJECTED,
                                           detail="deadline exceeded"))
             else:
@@ -441,6 +472,7 @@ class OnlineGraphService:
     def _record_failure(self) -> None:
         self._failures += 1
         self.stats["model_errors"] += 1
+        self.telemetry.count("serve/model_errors")
 
     def _run_links(self, links: list[_Request]) -> np.ndarray:
         B = len(links)
@@ -468,8 +500,11 @@ class OnlineGraphService:
         return [h[i] for i in range(h.shape[0])]
 
     def _observe_latency(self, lat: float) -> None:
-        self._lat_ewma = (lat if self._lat_ewma is None
-                          else 0.7 * self._lat_ewma + 0.3 * lat)
+        ewma = self._lat.update(lat)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.observe("serve/latency/model_call", lat)
+            tel.gauge("serve/model_latency_ewma", ewma)
 
     # --------------------------------------------------------- durability
 

@@ -80,7 +80,7 @@ class WindowIterator:
 
     def __init__(self, store: "EventStore", batch_size: Optional[int],
                  time_window: Optional[int], start: Union[None, int, dict],
-                 emit_empty: bool, release: bool):
+                 emit_empty: bool, release: bool, telemetry=None):
         if (batch_size is None) == (time_window is None):
             raise ValueError("set exactly one of batch_size / time_window")
         if batch_size is not None and batch_size <= 0:
@@ -94,11 +94,14 @@ class WindowIterator:
             if time_window <= 0:
                 raise ValueError(
                     f"time_window must be positive, got {time_window}")
+        from repro.obs import NULL
+
         self._store = store
         self._batch_size = batch_size
         self._ticks = time_window
         self._emit_empty = emit_empty
         self._release = release
+        self._telemetry = telemetry if telemetry is not None else NULL
         span = store.time_span
         self._t0, self._t_end = span[0], span[1] + 1
         if isinstance(start, dict):
@@ -143,9 +146,11 @@ class WindowIterator:
             hi = min(lo + self._batch_size, n)
             w = self._store.edge_window(lo, hi)
             self._row = hi
+            self._telemetry.count("storage/windows_read")
             yield w
             if self._release:
                 self._store.release()
+                self._telemetry.count("storage/windows_released")
 
     def _iter_time(self) -> Iterator[EventWindow]:
         while True:
@@ -157,9 +162,11 @@ class WindowIterator:
             self._tick += 1
             self._row = hi
             if hi > lo or self._emit_empty:
+                self._telemetry.count("storage/windows_read")
                 yield self._store.edge_window(lo, hi, window=(t, t_next))
                 if self._release:
                     self._store.release()
+                    self._telemetry.count("storage/windows_released")
 
 
 class EventStore:
@@ -270,7 +277,8 @@ class EventStore:
                      time_window: Optional[int] = None, *,
                      start: Union[None, int, dict] = None,
                      emit_empty: bool = False,
-                     release: bool = False) -> WindowIterator:
+                     release: bool = False,
+                     telemetry=None) -> WindowIterator:
         """Iterate the stream as :class:`EventWindow` host batches.
 
         Exactly one of ``batch_size`` (fixed event count, CTDG-style) or
@@ -281,9 +289,12 @@ class EventStore:
         cursor restored from a checkpoint. ``release=True`` calls
         :meth:`release` after each yielded window, bounding a memmap
         backend's resident set by O(window) instead of O(touched stream).
+        ``telemetry`` (a ``repro.obs.Telemetry``) counts
+        ``storage/windows_read`` / ``storage/windows_released`` per
+        window yielded/released (``docs/observability.md``).
         """
         return WindowIterator(self, batch_size, time_window, start,
-                              emit_empty, release)
+                              emit_empty, release, telemetry)
 
     # -- residency -------------------------------------------------------
     def release(self) -> None:

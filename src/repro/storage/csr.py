@@ -54,7 +54,8 @@ def streaming_csr(store, *, num_nodes: Optional[int] = None,
                   chunk_size: int = 1 << 20,
                   scratch_dir: Optional[str] = None,
                   with_keys: bool = True,
-                  release: bool = True) -> dict:
+                  release: bool = True,
+                  telemetry=None) -> dict:
     """Build the node-major/time-ascending doubled-edge CSR from a store.
 
     Returns ``{"adj_nbr", "adj_t", "adj_e", "indptr"}`` int64 (the shared
@@ -63,8 +64,15 @@ def streaming_csr(store, *, num_nodes: Optional[int] = None,
     ``DeviceUniformSampler``'s sharded path consumes directly. Peak
     residency is O(chunk) beyond the outputs; pass ``scratch_dir`` to park
     the O(E) outputs on disk too. ``release=True`` drops the store's
-    mapped pages after each window (memmap backends).
+    mapped pages after each window (memmap backends). ``telemetry`` (a
+    ``repro.obs.Telemetry``) times each pass as a ``storage/csr_pass1`` /
+    ``storage/csr_pass2`` span and counts windows per pass
+    (``storage/csr_windows``, on top of the window iterator's own
+    read/release counters).
     """
+    from repro.obs import NULL
+
+    tel = telemetry if telemetry is not None else NULL
     n = int(num_nodes if num_nodes is not None else store.num_nodes)
     E = store.num_edge_events
 
@@ -72,16 +80,19 @@ def streaming_csr(store, *, num_nodes: Optional[int] = None,
     deg = np.zeros(n, dtype=np.int64)
     tvals_parts = []
     last_t = None
-    for w in store.iter_windows(batch_size=chunk_size, release=release):
-        deg += np.bincount(w.src, minlength=n)
-        deg += np.bincount(w.dst, minlength=n)
-        if with_keys and len(w):
-            u = np.unique(np.asarray(w.t, dtype=np.int64))
-            if last_t is not None and len(u) and u[0] == last_t:
-                u = u[1:]
-            if len(u):
-                tvals_parts.append(u)
-                last_t = int(u[-1])
+    with tel.span("storage/csr_pass1", events=E):
+        for w in store.iter_windows(batch_size=chunk_size, release=release,
+                                    telemetry=tel):
+            tel.count("storage/csr_windows")
+            deg += np.bincount(w.src, minlength=n)
+            deg += np.bincount(w.dst, minlength=n)
+            if with_keys and len(w):
+                u = np.unique(np.asarray(w.t, dtype=np.int64))
+                if last_t is not None and len(u) and u[0] == last_t:
+                    u = u[1:]
+                if len(u):
+                    tvals_parts.append(u)
+                    last_t = int(u[-1])
     indptr = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
     m = int(indptr[-1])
     assert m == 2 * E, "degree pass disagrees with the event count"
@@ -99,29 +110,33 @@ def streaming_csr(store, *, num_nodes: Optional[int] = None,
     adj_key = (_alloc(scratch_dir, "adj_key", (m,), np.int64)
                if with_keys else None)
     cursor = indptr[:-1].copy()
-    for w in store.iter_windows(batch_size=chunk_size, release=release):
-        c = len(w)
-        if c == 0:
-            continue
-        # Doubled entries in event order: (src->dst) then (dst->src).
-        nodes = np.empty(2 * c, np.int64)
-        nodes[0::2], nodes[1::2] = w.src, w.dst
-        nbrs = np.empty(2 * c, np.int64)
-        nbrs[0::2], nbrs[1::2] = w.dst, w.src
-        times = np.repeat(np.asarray(w.t, np.int64), 2)
-        es = np.repeat(np.asarray(w.eids, np.int64), 2)
-        order = np.argsort(nodes, kind="stable")
-        snodes = nodes[order]
-        uniq, starts, counts = np.unique(snodes, return_index=True,
-                                         return_counts=True)
-        pos = cursor[snodes] + (np.arange(2 * c) - np.repeat(starts, counts))
-        adj_nbr[pos] = nbrs[order]
-        st = times[order]
-        adj_t[pos] = st
-        adj_e[pos] = es[order]
-        if with_keys:
-            adj_key[pos] = snodes * base + np.searchsorted(tvals, st)
-        cursor[uniq] += counts
+    with tel.span("storage/csr_pass2", entries=m):
+        for w in store.iter_windows(batch_size=chunk_size, release=release,
+                                    telemetry=tel):
+            tel.count("storage/csr_windows")
+            c = len(w)
+            if c == 0:
+                continue
+            # Doubled entries in event order: (src->dst) then (dst->src).
+            nodes = np.empty(2 * c, np.int64)
+            nodes[0::2], nodes[1::2] = w.src, w.dst
+            nbrs = np.empty(2 * c, np.int64)
+            nbrs[0::2], nbrs[1::2] = w.dst, w.src
+            times = np.repeat(np.asarray(w.t, np.int64), 2)
+            es = np.repeat(np.asarray(w.eids, np.int64), 2)
+            order = np.argsort(nodes, kind="stable")
+            snodes = nodes[order]
+            uniq, starts, counts = np.unique(snodes, return_index=True,
+                                             return_counts=True)
+            pos = cursor[snodes] + (
+                np.arange(2 * c) - np.repeat(starts, counts))
+            adj_nbr[pos] = nbrs[order]
+            st = times[order]
+            adj_t[pos] = st
+            adj_e[pos] = es[order]
+            if with_keys:
+                adj_key[pos] = snodes * base + np.searchsorted(tvals, st)
+            cursor[uniq] += counts
     out = {"adj_nbr": adj_nbr, "adj_t": adj_t, "adj_e": adj_e,
            "indptr": indptr}
     if with_keys:

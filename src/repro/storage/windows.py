@@ -30,17 +30,21 @@ class StoreEventLoader:
     mode (``DGDataLoader``'s CTDG/DTDG split). ``start`` resumes from a
     row or a ``WindowIterator.state_dict`` cursor; the live cursor is
     exposed via :meth:`state_dict` for mid-epoch checkpointing.
+    ``telemetry`` (a ``repro.obs.Telemetry``) forwards to
+    ``iter_windows`` for the window read/release counters.
     """
 
     def __init__(self, store: EventStore, hook_manager=None,
                  batch_size: Optional[int] = None,
                  time_window: Optional[int] = None, *,
                  start: Union[None, int, dict] = None,
-                 emit_empty: bool = False, release: bool = False):
+                 emit_empty: bool = False, release: bool = False,
+                 telemetry=None):
         self.store = store
         self.manager = hook_manager
         self._kw = dict(batch_size=batch_size, time_window=time_window,
-                        emit_empty=emit_empty, release=release)
+                        emit_empty=emit_empty, release=release,
+                        telemetry=telemetry)
         # Validate eagerly (and fix the resume point even if iteration
         # starts later).
         self._windows = store.iter_windows(start=start, **self._kw)

@@ -121,7 +121,19 @@ class Experiment:
 
         return generate(self.data.dataset, scale=self.data.scale)
 
-    def compile(self, data=None):
+    def _telemetry(self, telemetry=None):
+        """The run's ``repro.obs.Telemetry``: the explicit override, else a
+        ``FileSink`` writer at ``TrainSpec.telemetry``, else ``None`` (the
+        pipelines then default to their own disabled instance)."""
+        if telemetry is not None:
+            return telemetry
+        if self.train.telemetry is not None:
+            from repro.obs import FileSink, Telemetry
+
+            return Telemetry(FileSink(self.train.telemetry))
+        return None
+
+    def compile(self, data=None, telemetry=None):
         """Assemble the pipeline this experiment describes.
 
         Inspects the ``TimeDelta`` discretization axis and the task (see
@@ -131,9 +143,13 @@ class Experiment:
         generated dataset with a pre-built ``DGData`` — or an
         ``EventStore``, which (like ``DataSpec.storage``) backs the stream
         with the store's columns and runs event pipelines out-of-core
-        (``docs/storage.md``).
+        (``docs/storage.md``). ``telemetry`` (a ``repro.obs.Telemetry``)
+        overrides the ``TrainSpec.telemetry`` JSONL writer; either way the
+        instance lands on ``pipeline.telemetry`` and instruments the whole
+        run (``docs/observability.md``).
         """
         d, m, t = self.data, self.model, self.train
+        tel = self._telemetry(telemetry)
         store = self._store(data)
         stream = store.to_data() if store is not None else self._dataset(data)
 
@@ -154,6 +170,7 @@ class Experiment:
                     model_kwargs=dict(m.kwargs), sampler_spec=self.sampler,
                     val_ratio=d.val_ratio, test_ratio=d.test_ratio,
                     data_shards=t.data_shards, store=store,
+                    telemetry=tel,
                 )
             if m.name not in DTDG_MODELS:
                 raise ValueError(
@@ -171,6 +188,7 @@ class Experiment:
                 eval_negatives=t.eval_negatives, seed=t.seed,
                 val_ratio=d.val_ratio, test_ratio=d.test_ratio,
                 compiled=t.compiled, chunk_size=t.chunk_size,
+                telemetry=tel,
                 **dict(m.kwargs),
             )
 
@@ -215,9 +233,10 @@ class Experiment:
         """
         from repro.train.loop import TrainLoop
 
-        pipeline = self.compile(data)
+        tel = self._telemetry()
+        pipeline = self.compile(data, telemetry=tel)
         t = self.train
-        history = TrainLoop(pipeline).fit(
+        history = TrainLoop(pipeline, telemetry=tel).fit(
             epochs=t.epochs, eval_every=t.eval_every, eval_split=t.eval_split,
             ckpt_dir=t.ckpt_dir, ckpt_every=t.ckpt_every, log=log,
         )

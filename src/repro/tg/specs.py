@@ -222,6 +222,13 @@ class TrainSpec(_SpecBase):
     over the data axis (gradients psum-summed; TGN memory synchronized by
     the DistTGL masked psum). Requires ``SamplerSpec.device=True`` and a
     ``batch_size`` divisible by ``data_shards``.
+
+    ``telemetry`` is a JSONL path: when set, ``Experiment.compile`` builds
+    a ``repro.obs.Telemetry`` with a ``FileSink`` at that path and threads
+    it through the pipeline, loader, storage, and train loop — every span,
+    counter, gauge, and histogram of the run lands in one
+    schema-validated file (``docs/observability.md``). ``None`` (default)
+    keeps telemetry disabled at near-zero overhead.
     """
 
     lr: Optional[float] = None
@@ -237,6 +244,7 @@ class TrainSpec(_SpecBase):
     compiled: bool = True
     chunk_size: Optional[int] = None
     data_shards: int = 1
+    telemetry: Optional[str] = None
 
     def __post_init__(self):
         if self.data_shards < 1:

@@ -54,6 +54,7 @@ from repro.core import (
 )
 from repro.distributed import checkpoint as ckpt
 from repro.models.tg import dygformer, graphmixer, snapshot, tgat, tgn, tpnet
+from repro.obs import MemorySink, Telemetry
 from repro.models.tg.common import bce_link_loss, link_decoder
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.tg.specs import SamplerSpec
@@ -134,6 +135,33 @@ def weighted_mrr(pos_rows, neg_rows, mask_rows) -> float:
 # ----------------------------------------------------------------------
 # The epoch engine
 # ----------------------------------------------------------------------
+def history_from_records(records) -> Dict[str, Any]:
+    """Rebuild a ``TrainLoop.fit`` history dict from telemetry records.
+
+    Consumes the ``train/epoch`` / ``train/eval`` / ``train/ckpt`` span
+    records one ``fit`` emits (in order) and returns the exact history
+    contract — ``{"loss", "train_secs", "eval", "ckpts"}`` with the same
+    values the pipeline produced (they ride the span attrs verbatim; span
+    durations are *not* used, so the numbers are bit-identical to the
+    pre-telemetry hand-rolled dict). Non-span and unrelated records are
+    ignored, so a shared sink's full stream can be passed unfiltered.
+    """
+    history: Dict[str, Any] = {"loss": [], "train_secs": [], "eval": [],
+                               "ckpts": []}
+    for r in records:
+        if r.get("kind") != "span":
+            continue
+        attrs = r.get("attrs", {})
+        if r["name"] == "train/epoch":
+            history["loss"].append(attrs["loss"])
+            history["train_secs"].append(attrs["secs"])
+        elif r["name"] == "train/eval":
+            history["eval"].append((attrs["epoch"], attrs["metric"]))
+        elif r["name"] == "train/ckpt":
+            history["ckpts"].append(attrs["path"])
+    return history
+
+
 class TrainLoop:
     """Multi-epoch driver over any pipeline with the standard surface.
 
@@ -148,33 +176,52 @@ class TrainLoop:
     The loop is deliberately dumb — all task/pipeline intelligence lives in
     the pipeline object — which is what lets the CTDG/DTDG × link/node
     quadrants share one engine.
+
+    Every ``fit`` emits ``train/epoch`` / ``train/eval`` / ``train/ckpt``
+    spans through ``telemetry`` (defaulting to the pipeline's own
+    ``Telemetry``, so one spec-configured sink sees the whole run), and
+    the returned history is itself rebuilt from those records
+    (:func:`history_from_records`) — the records are the source of truth,
+    not a parallel bookkeeping path.
     """
 
-    def __init__(self, pipeline):
+    def __init__(self, pipeline, telemetry: Optional[Telemetry] = None):
         self.pipeline = pipeline
+        if telemetry is None:
+            telemetry = getattr(pipeline, "telemetry", None)
+        # A private instance when neither the caller nor the pipeline has
+        # one: fit() attaches its history sink here, which must never
+        # mutate a shared singleton.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
 
     def fit(self, epochs: int = 1, eval_every: int = 0,
             eval_split: str = "val", ckpt_dir: Optional[str] = None,
             ckpt_every: int = 0, log=None) -> Dict[str, Any]:
         """Run the epoch loop; see the class docstring for the contract."""
-        history: Dict[str, Any] = {"loss": [], "train_secs": [], "eval": [],
-                                   "ckpts": []}
-        for epoch in range(epochs):
-            loss, secs = self.pipeline.train_epoch()
-            history["loss"].append(loss)
-            history["train_secs"].append(secs)
-            if log is not None:
-                log(f"epoch {epoch}: loss={loss:.4f} ({secs:.1f}s)")
-            if eval_every and (epoch + 1) % eval_every == 0:
-                metric, _ = self.pipeline.evaluate(eval_split)
-                history["eval"].append((epoch, metric))
+        tel = self.telemetry
+        mem = tel.attach(MemorySink())  # tee: history comes from records
+        try:
+            for epoch in range(epochs):
+                with tel.span("train/epoch", epoch=epoch) as sp:
+                    loss, secs = self.pipeline.train_epoch()
+                    sp["loss"], sp["secs"] = loss, secs
                 if log is not None:
-                    log(f"epoch {epoch}: {eval_split} metric={metric:.4f}")
-            if ckpt_dir and ckpt_every and (epoch + 1) % ckpt_every == 0:
-                history["ckpts"].append(
-                    self.pipeline.save_checkpoint(ckpt_dir, epoch)
-                )
-        return history
+                    log(f"epoch {epoch}: loss={loss:.4f} ({secs:.1f}s)")
+                if eval_every and (epoch + 1) % eval_every == 0:
+                    with tel.span("train/eval", epoch=epoch,
+                                  split=eval_split) as sp:
+                        metric, _ = self.pipeline.evaluate(eval_split)
+                        sp["metric"] = metric
+                    if log is not None:
+                        log(f"epoch {epoch}: {eval_split} "
+                            f"metric={metric:.4f}")
+                if ckpt_dir and ckpt_every and (epoch + 1) % ckpt_every == 0:
+                    with tel.span("train/ckpt", epoch=epoch) as sp:
+                        sp["path"] = self.pipeline.save_checkpoint(
+                            ckpt_dir, epoch)
+        finally:
+            tel.detach(mem)
+        return history_from_records(mem.records)
 
 
 # ----------------------------------------------------------------------
@@ -234,9 +281,13 @@ class CTDGLinkPipeline:
         data_shards: int = 1,
         fused=None,
         store=None,
+        telemetry: Optional[Telemetry] = None,
     ):
         if model_name not in CTDG_LINK_MODELS:
             raise ValueError(f"unknown CTDG model {model_name!r}")
+        # Per-pipeline telemetry (docs/observability.md): a fresh disabled
+        # instance by default so TrainLoop can tee sinks onto it safely.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
         spec = sampler_spec or SamplerSpec(
             kind=sampler, k=k, device=device_sampling, prefetch=prefetch,
             checkpoint_adjacency=uniform_checkpoint_adjacency,
@@ -673,7 +724,14 @@ class CTDGLinkPipeline:
         # With an out-of-core store, drop its resident pages after each
         # batch is handed off — hooks copy what they keep, so the epoch's
         # peak RSS stays near one window of the stream.
-        on_batch = self._store.release if self._store is not None else None
+        on_batch = None
+        if self._store is not None:
+            store, tel = self._store, self.telemetry
+
+            def on_batch():
+                store.release()
+                tel.count("storage/windows_released")
+
         loader = DGDataLoader(DGraph(data), self.manager,
                               batch_size=self.batch_size, on_batch=on_batch)
         if self.device_sampling:
@@ -682,7 +740,8 @@ class CTDGLinkPipeline:
             # a sampler mesh, batches are staged with the mesh-replicated
             # NamedSharding so they land on the sharded state's device set.
             return PrefetchLoader(loader, device=self._replicated,
-                                  prefetch=self.prefetch)
+                                  prefetch=self.prefetch,
+                                  telemetry=self.telemetry)
         return loader
 
     def _batch_tensors(self, batch) -> Dict[str, Any]:
@@ -736,52 +795,68 @@ class CTDGLinkPipeline:
 
     def train_epoch(self) -> Tuple[float, float]:
         """One epoch over the train split. Returns (mean loss, seconds)."""
-        self.reset_epoch_state()
-        t0 = time.perf_counter()
-        losses = []
-        with self.manager.activate(TRAIN_KEY):
-            for batch in self._loader(self.train_data):
-                bt = self._batch_tensors(batch)
-                if self.model_name in CTDG_STATELESS:
-                    self.params, self.opt_state, loss = self._train_step(
-                        self.params, self.opt_state, bt
-                    )
-                else:
-                    self.params, self.opt_state, self.model_state, loss = self._train_step(
-                        self.params, self.opt_state, self.model_state, bt
-                    )
-                losses.append(loss)
-        losses = [float(l) for l in losses]
-        return float(np.mean(losses)), time.perf_counter() - t0
+        tel = self.telemetry
+        with tel.span("ctdg/epoch", model=self.model_name) as sp:
+            self.reset_epoch_state()
+            t0 = time.perf_counter()
+            losses = []
+            with self.manager.activate(TRAIN_KEY):
+                for batch in self._loader(self.train_data):
+                    bt = self._batch_tensors(batch)
+                    # Dispatch time only: the jitted step is async, so the
+                    # span bounds Python+dispatch; device time shows up as
+                    # the next batch's wait (see docs/observability.md).
+                    with tel.span("ctdg/step"):
+                        if self.model_name in CTDG_STATELESS:
+                            self.params, self.opt_state, loss = \
+                                self._train_step(
+                                    self.params, self.opt_state, bt)
+                        else:
+                            (self.params, self.opt_state, self.model_state,
+                             loss) = self._train_step(
+                                self.params, self.opt_state,
+                                self.model_state, bt)
+                    losses.append(loss)
+            losses = [float(l) for l in losses]
+            mean, secs = float(np.mean(losses)), time.perf_counter() - t0
+            sp["loss"], sp["steps"] = mean, len(losses)
+        return mean, secs
 
     def evaluate(self, split: str = "val") -> Tuple[float, float]:
         """One-vs-many MRR on val/test (warm state from train[, val])."""
-        self.reset_epoch_state()
-        # Warm the samplers/state through earlier splits without predicting.
-        with self.manager.activate(TRAIN_KEY):
-            warm = [self.train_data] + ([self.val_data] if split == "test" else [])
-            for d in warm:
-                for batch in self._loader(d):
+        tel = self.telemetry
+        with tel.span("ctdg/eval", split=split) as sp:
+            self.reset_epoch_state()
+            # Warm samplers/state through earlier splits w/o predicting.
+            with tel.span("ctdg/warm"), self.manager.activate(TRAIN_KEY):
+                warm = [self.train_data] + (
+                    [self.val_data] if split == "test" else [])
+                for d in warm:
+                    for batch in self._loader(d):
+                        bt = self._batch_tensors(batch)
+                        if self.model_name in CTDG_STATEFUL:
+                            _, self.model_state = self._eval_step(
+                                self.params, self.model_state, bt
+                            )
+            data = self.val_data if split == "val" else self.test_data
+            t0 = time.perf_counter()
+            rrs, masks = [], []
+            with self.manager.activate(EVAL_KEY):
+                for batch in self._loader(data):
                     bt = self._batch_tensors(batch)
-                    if self.model_name in CTDG_STATEFUL:
-                        _, self.model_state = self._eval_step(
-                            self.params, self.model_state, bt
-                        )
-        data = self.val_data if split == "val" else self.test_data
-        t0 = time.perf_counter()
-        rrs, masks = [], []
-        with self.manager.activate(EVAL_KEY):
-            for batch in self._loader(data):
-                bt = self._batch_tensors(batch)
-                if self.model_name in CTDG_STATELESS:
-                    pos, neg = self._eval_step(self.params, bt)
-                else:
-                    (pos, neg), self.model_state = self._eval_step(
-                        self.params, self.model_state, bt
-                    )
-                rrs.append(mrr(pos, neg, bt["batch_mask"]) * float(bt["batch_mask"].sum()))
-                masks.append(float(bt["batch_mask"].sum()))
-        return float(np.sum(rrs) / max(np.sum(masks), 1.0)), time.perf_counter() - t0
+                    with tel.span("ctdg/eval_step"):
+                        if self.model_name in CTDG_STATELESS:
+                            pos, neg = self._eval_step(self.params, bt)
+                        else:
+                            (pos, neg), self.model_state = self._eval_step(
+                                self.params, self.model_state, bt
+                            )
+                    w = float(bt["batch_mask"].sum())
+                    rrs.append(mrr(pos, neg, bt["batch_mask"]) * w)
+                    masks.append(w)
+            out = float(np.sum(rrs) / max(np.sum(masks), 1.0))
+            sp["mrr"] = out
+        return out, time.perf_counter() - t0
 
 
 # ----------------------------------------------------------------------
@@ -903,11 +978,15 @@ class DTDGLinkPipeline(SnapshotPairPipeline):
         compiled: bool = True,
         chunk_size: Optional[int] = None,
         device=None,
+        telemetry: Optional[Telemetry] = None,
     ):
         if model_name not in snapshot.SNAPSHOT_MODELS:
             raise ValueError(f"unknown DTDG model {model_name!r}")
         self.model_name = model_name
         self.data = data
+        # Fresh instance (not the NULL singleton) so TrainLoop's history
+        # sink never leaks onto unrelated pipelines.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.unit = TimeDelta.coerce(snapshot_unit)
         self.num_negatives = num_negatives
         self.eval_negatives = eval_negatives
@@ -1066,10 +1145,11 @@ class DTDGLinkPipeline(SnapshotPairPipeline):
         if self._cursor == 0:
             self.reset_epoch_state()
         chi = min(start + (self.chunk_size or max(hi - lo, 1)), hi)
-        xs = self._pair_xs(start, chi, self.num_negatives)
-        (self.params, self.opt_state, self.model_state), ls = \
-            self._train_scan(self.params, self.opt_state,
-                             self.model_state, xs)
+        with self.telemetry.span("dtdg/chunk", lo=start, hi=chi):
+            xs = self._pair_xs(start, chi, self.num_negatives)
+            (self.params, self.opt_state, self.model_state), ls = \
+                self._train_scan(self.params, self.opt_state,
+                                 self.model_state, xs)
         self._cursor = chi
         return [float(l) for l in np.asarray(ls)]
 
@@ -1080,30 +1160,37 @@ class DTDGLinkPipeline(SnapshotPairPipeline):
         whole split in one call). A restored mid-epoch snapshot cursor
         resumes from where the checkpoint left off.
         """
-        lo, hi = self._split_pairs("train")
-        if self._cursor == 0:
-            self.reset_epoch_state()
-        start = max(self._cursor, lo)
-        t0 = time.perf_counter()
-        losses = []
-        if self.compiled:
-            while True:
-                chunk_losses = self.train_chunk()
-                if chunk_losses is None:
-                    break
-                losses.extend(chunk_losses)
-        else:
-            with self.manager.activate(TRAIN_KEY):
-                for p in range(start, hi):
-                    x = self._pair_x(p, self._hook_negatives(p))
-                    (self.params, self.opt_state, self.model_state), loss = \
-                        self._train_step(self.params, self.opt_state,
-                                         self.model_state, x)
-                    losses.append(float(loss))
-                    self._cursor = p + 1
-        self._cursor = 0
-        secs = time.perf_counter() - t0
-        return float(np.mean(losses)) if losses else 0.0, secs
+        tel = self.telemetry
+        with tel.span("dtdg/epoch", model=self.model_name,
+                      compiled=self.compiled) as sp:
+            lo, hi = self._split_pairs("train")
+            if self._cursor == 0:
+                self.reset_epoch_state()
+            start = max(self._cursor, lo)
+            t0 = time.perf_counter()
+            losses = []
+            if self.compiled:
+                while True:
+                    chunk_losses = self.train_chunk()
+                    if chunk_losses is None:
+                        break
+                    losses.extend(chunk_losses)
+            else:
+                with self.manager.activate(TRAIN_KEY):
+                    for p in range(start, hi):
+                        x = self._pair_x(p, self._hook_negatives(p))
+                        with tel.span("dtdg/step"):
+                            (self.params, self.opt_state,
+                             self.model_state), loss = self._train_step(
+                                self.params, self.opt_state,
+                                self.model_state, x)
+                        losses.append(float(loss))
+                        self._cursor = p + 1
+            self._cursor = 0
+            secs = time.perf_counter() - t0
+            mean = float(np.mean(losses)) if losses else 0.0
+            sp["loss"], sp["pairs"] = mean, len(losses)
+        return mean, secs
 
     def evaluate(self, split: str = "val") -> Tuple[float, float]:
         """One-vs-many MRR on val/test. Returns (MRR, seconds).
@@ -1112,43 +1199,48 @@ class DTDGLinkPipeline(SnapshotPairPipeline):
         advance-only scan (carried across the split boundary), then the
         split's pairs are scored in one scanned call per chunk.
         """
-        lo, hi = self._split_pairs(split)
-        self.manager.reset_state()
-        t0 = time.perf_counter()
-        # Local state: evaluation re-warms from scratch and must not clobber
-        # a mid-epoch training state (checkpoint-resume safety).
-        state = snapshot.init_state(self.model_name, self.cfg)
-        if self._has_state and lo > 0:
+        tel = self.telemetry
+        with tel.span("dtdg/eval", split=split) as sp:
+            lo, hi = self._split_pairs(split)
+            self.manager.reset_state()
+            t0 = time.perf_counter()
+            # Local state: evaluation re-warms from scratch and must not
+            # clobber a mid-epoch training state (checkpoint-resume safety).
+            state = snapshot.init_state(self.model_name, self.cfg)
+            if self._has_state and lo > 0:
+                if self.compiled:
+                    st = self.snapshots
+                    warm = {"src": st.src[:lo], "dst": st.dst[:lo],
+                            "mask": st.mask[:lo]}
+                    state = self._advance_scan(self.params, state, warm)
+                else:
+                    st = self.snapshots
+                    for p in range(lo):
+                        state = self._advance_step(
+                            self.params, state,
+                            {"src": st.src[p], "dst": st.dst[p],
+                             "mask": st.mask[p]},
+                        )
+            pos_rows, neg_rows, mask_rows = [], [], []
             if self.compiled:
-                st = self.snapshots
-                warm = {"src": st.src[:lo], "dst": st.dst[:lo],
-                        "mask": st.mask[:lo]}
-                state = self._advance_scan(self.params, state, warm)
+                for clo, chi in self._chunks(lo, hi):
+                    xs = self._pair_xs(clo, chi, self.eval_negatives)
+                    state, (pos, neg) = self._eval_scan(self.params, state,
+                                                        xs)
+                    pos_rows.extend(np.asarray(pos))
+                    neg_rows.extend(np.asarray(neg))
+                    mask_rows.extend(np.asarray(xs["nmask"]))
             else:
-                st = self.snapshots
-                for p in range(lo):
-                    state = self._advance_step(
-                        self.params, state,
-                        {"src": st.src[p], "dst": st.dst[p],
-                         "mask": st.mask[p]},
-                    )
-        pos_rows, neg_rows, mask_rows = [], [], []
-        if self.compiled:
-            for clo, chi in self._chunks(lo, hi):
-                xs = self._pair_xs(clo, chi, self.eval_negatives)
-                state, (pos, neg) = self._eval_scan(self.params, state, xs)
-                pos_rows.extend(np.asarray(pos))
-                neg_rows.extend(np.asarray(neg))
-                mask_rows.extend(np.asarray(xs["nmask"]))
-        else:
-            with self.manager.activate(EVAL_KEY):
-                for p in range(lo, hi):
-                    x = self._pair_x(p, self._hook_negatives(p))
-                    state, (pos, neg) = self._eval_step(self.params, state, x)
-                    pos_rows.append(np.asarray(pos))
-                    neg_rows.append(np.asarray(neg))
-                    mask_rows.append(np.asarray(x["nmask"]))
-        out = weighted_mrr(pos_rows, neg_rows, mask_rows)
+                with self.manager.activate(EVAL_KEY):
+                    for p in range(lo, hi):
+                        x = self._pair_x(p, self._hook_negatives(p))
+                        state, (pos, neg) = self._eval_step(self.params,
+                                                            state, x)
+                        pos_rows.append(np.asarray(pos))
+                        neg_rows.append(np.asarray(neg))
+                        mask_rows.append(np.asarray(x["nmask"]))
+            out = weighted_mrr(pos_rows, neg_rows, mask_rows)
+            sp["mrr"] = out
         return out, time.perf_counter() - t0
 
     # -- checkpointing ---------------------------------------------------

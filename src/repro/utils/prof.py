@@ -1,69 +1,99 @@
 """Performance monitoring utilities (paper §4: "Performance monitoring
 utilities ... help identify bottlenecks"; Table 11 runtime breakdown).
 
-``Profiler`` accumulates wall time per named section across a run and
-prints a Table-11-style percentage breakdown. Sections nest (dotted
-paths); JAX async dispatch is handled by blocking on section exit when
-``block=True``.
+**Deprecated** — ``Profiler`` is now a thin shim over the structured
+telemetry layer (``repro.obs.Telemetry``); constructing one raises a
+``DeprecationWarning``. New code should use ``Telemetry`` spans with a
+``MemorySink`` and ``repro.obs.span_report`` for the Table-11-style
+breakdown (see ``docs/observability.md`` for the migration recipe). The
+shim keeps the historical surface — ``times``/``counts`` per dotted
+section path, ``total()``, ``report()``, ``reset()``, nesting, and
+``block=True`` draining JAX async dispatch on section exit — but every
+section now flows through ``Telemetry.span``, so a legacy-profiled run
+can tee its sections into any sink alongside the rest of the run's
+records.
 """
 
 from __future__ import annotations
 
 import contextlib
-import time
+import warnings
 from collections import defaultdict
 from typing import Dict, Iterator, Optional
 
+from repro.obs import MemorySink, Telemetry, span_report
+
 
 class Profiler:
+    """Deprecated span-accumulating profiler (use ``repro.obs.Telemetry``).
+
+    Backed by a private ``Telemetry`` + ``MemorySink``: each ``with
+    profiler(name)`` section is a ``Telemetry.span``, and ``times`` /
+    ``counts`` aggregate the emitted span records by dotted path —
+    identical keys and semantics to the historical dict-accumulating
+    implementation.
+    """
+
     def __init__(self, block: bool = False):
-        self.times: Dict[str, float] = defaultdict(float)
-        self.counts: Dict[str, int] = defaultdict(int)
-        self._stack: list = []
+        warnings.warn(
+            "repro.utils.Profiler is deprecated; use repro.obs.Telemetry "
+            "spans with a MemorySink and repro.obs.span_report (see "
+            "docs/observability.md)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        self._telemetry = Telemetry()
+        self._sink = self._telemetry.attach(MemorySink())
         self._block = block
 
     @contextlib.contextmanager
     def __call__(self, name: str) -> Iterator[None]:
-        path = ".".join([*(s for s, _ in self._stack), name])
-        t0 = time.perf_counter()
-        self._stack.append((name, t0))
-        try:
-            yield
-        finally:
-            if self._block:
-                import jax
+        with self._telemetry.span(name):
+            try:
+                yield
+            finally:
+                if self._block:
+                    import jax
 
-                jax.effects_barrier()
-            dt = time.perf_counter() - t0
-            self._stack.pop()
-            self.times[path] += dt
-            self.counts[path] += 1
+                    # Inside the span: drain async dispatch so the span's
+                    # duration includes device time, as before.
+                    jax.effects_barrier()
+
+    def _aggregate(self):
+        times: Dict[str, float] = defaultdict(float)
+        counts: Dict[str, int] = defaultdict(int)
+        for r in self._sink.records:
+            if r.get("kind") == "span":
+                times[r["path"]] += r["dur_s"]
+                counts[r["path"]] += 1
+        return times, counts
+
+    @property
+    def times(self) -> Dict[str, float]:
+        """Accumulated wall seconds per dotted section path."""
+        return self._aggregate()[0]
+
+    @property
+    def counts(self) -> Dict[str, int]:
+        """Section entry counts per dotted section path."""
+        return self._aggregate()[1]
 
     def total(self) -> float:
+        """Summed seconds of top-level (undotted) sections."""
         return sum(v for k, v in self.times.items() if "." not in k)
 
     def report(self, min_pct: float = 0.5) -> str:
-        total = max(self.total(), 1e-12)
-        lines = [f"{'section':<40s}{'calls':>8s}{'seconds':>10s}{'%':>7s}"]
-        for path in sorted(self.times, key=lambda p: (p.count("."), -self.times[p])):
-            pct = 100.0 * self.times[path] / total
-            if pct < min_pct:
-                continue
-            depth = path.count(".")
-            name = "  " * depth + path.split(".")[-1]
-            lines.append(
-                f"{name:<40s}{self.counts[path]:>8d}"
-                f"{self.times[path]:>10.3f}{pct:>6.1f}%"
-            )
-        return "\n".join(lines)
+        """Table-11-style percentage breakdown of the recorded sections."""
+        return span_report(self._sink.records, min_pct=min_pct)
 
     def reset(self) -> None:
-        self.times.clear()
-        self.counts.clear()
+        """Drop all recorded sections."""
+        self._sink.drain()
 
 
 @contextlib.contextmanager
 def profile_section(profiler: Optional[Profiler], name: str):
+    """``with profiler(name)`` that no-ops when ``profiler`` is ``None``."""
     if profiler is None:
         yield
     else:

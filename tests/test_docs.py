@@ -20,6 +20,8 @@ def test_readme_and_docs_exist():
     assert (ROOT / "docs" / "sharding.md").exists()
     assert (ROOT / "docs" / "serving.md").exists()
     assert (ROOT / "docs" / "storage.md").exists()
+    assert (ROOT / "docs" / "observability.md").exists()
+    assert (ROOT / "docs" / "benchmarks.md").exists()
 
 
 def test_relative_doc_links_resolve():
@@ -66,6 +68,11 @@ DOCUMENTED_MODULES = [
     "repro.storage.mmap",
     "repro.storage.csr",
     "repro.storage.windows",
+    "repro.obs.records",
+    "repro.obs.sinks",
+    "repro.obs.telemetry",
+    "repro.obs.profiler",
+    "repro.utils.prof",
     # Test infrastructure is public surface too: the shared kernel-parity
     # harness and the jaxpr-inspection helpers are how new kernel families
     # get their acceptance coverage.

@@ -1,0 +1,288 @@
+"""Structured telemetry (``repro.obs``): span nesting + monotonic timing,
+histogram quantiles against numpy, JSONL schema round-trip through
+``FileSink``, the near-zero disabled fast path, ``TrainLoop`` history
+parity with the records it emits, and the end-to-end acceptance run — one
+sink observing a CTDG epoch, a serving chaos burst, and a windowed
+out-of-core storage epoch + streaming-CSR build, every record
+schema-valid."""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    FileSink,
+    MemorySink,
+    NullSink,
+    Telemetry,
+    bench_record,
+    span_report,
+    validate,
+)
+from repro.obs.telemetry import _H_GROWTH
+
+
+# ------------------------------------------------------------------ spans
+
+def test_span_nesting_and_monotonicity():
+    tel = Telemetry()
+    sink = tel.attach(MemorySink())
+    with tel.span("outer", tag="x") as sp:
+        with tel.span("inner"):
+            time.sleep(0.002)
+        sp["result"] = 7
+    spans = [r for r in sink.records if r["kind"] == "span"]
+    assert [s["path"] for s in spans] == ["outer.inner", "outer"]
+    inner, outer = spans
+    assert outer["name"] == "outer" and inner["name"] == "inner"
+    # monotonic clock: inner starts after outer, outer spans inner
+    assert inner["t0"] >= outer["t0"]
+    assert outer["dur_s"] >= inner["dur_s"] > 0
+    assert outer["attrs"] == {"tag": "x", "result": 7}
+    for s in spans:
+        validate(s)
+
+
+def test_span_attrs_survive_exceptions():
+    tel = Telemetry()
+    sink = tel.attach(MemorySink())
+    with pytest.raises(RuntimeError):
+        with tel.span("boom") as sp:
+            sp["partial"] = 1
+            raise RuntimeError("x")
+    (rec,) = sink.records
+    assert rec["attrs"] == {"partial": 1}
+
+
+def test_disabled_span_yields_writable_scratch():
+    tel = Telemetry()  # no sinks: disabled
+    assert not tel.enabled
+    with tel.span("anything") as sp:
+        sp["loss"] = 1.0  # must not raise
+    tel.count("c")
+    tel.gauge("g", 1.0)
+    tel.observe("h", 0.1)
+    assert tel.counter_value("c") == 0  # nothing recorded
+
+
+def test_null_sink_keeps_telemetry_disabled():
+    tel = Telemetry(NullSink())
+    assert not tel.enabled
+
+
+# -------------------------------------------------------------- histogram
+
+def test_histogram_quantiles_vs_numpy():
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=-6.0, sigma=1.5, size=5000)
+    tel = Telemetry(MemorySink())
+    for s in samples:
+        tel.observe("lat", float(s))
+    h = tel.histogram("lat")
+    assert h.count == len(samples)
+    assert h.sum == pytest.approx(samples.sum())
+    for q in (0.5, 0.9, 0.99):
+        true = float(np.quantile(samples, q))
+        est = h.quantile(q)
+        # upper-edge estimate: >= truth (up to rank rounding), within one
+        # bucket ratio (~1.33) of it
+        assert est >= true * 0.999
+        assert est <= true * _H_GROWTH * 1.05
+    assert h.quantile(1.0) == pytest.approx(samples.max())
+
+
+def test_histogram_snapshot_record():
+    tel = Telemetry(MemorySink())
+    for v in (1e-5, 1e-5, 3.0):
+        tel.observe("x", v)
+    rec = tel.histogram("x").snapshot("x")
+    validate(rec)
+    assert rec["count"] == 3
+    assert sum(c for _, c in rec["buckets"]) == 3
+    # bucket upper edges bound their contents
+    assert any(edge >= 3.0 for edge, _ in rec["buckets"])
+
+
+# ------------------------------------------------------- sinks and schema
+
+def test_filesink_jsonl_roundtrip(tmp_path):
+    path = str(tmp_path / "tel.jsonl")
+    tel = Telemetry(FileSink(path))
+    with tel.span("work", n=3):
+        tel.count("things", 2)
+        tel.observe("lat", 0.01)
+        tel.gauge("depth", 4)
+    tel.flush()
+    lines = open(path).read().splitlines()
+    records = [json.loads(ln) for ln in lines]
+    kinds = [r["kind"] for r in records]
+    assert kinds == ["span", "counter", "gauge", "hist"]
+    for r in records:
+        validate(r)
+    assert records[0]["attrs"] == {"n": 3}
+
+
+def test_validate_rejects_malformed():
+    with pytest.raises(ValueError):
+        validate({"kind": "nope"})
+    with pytest.raises(ValueError):
+        validate({"kind": "span", "name": "a"})  # missing fields
+    with pytest.raises(ValueError):
+        validate({"kind": "counter", "name": "a", "value": "high"})
+    with pytest.raises(ValueError):
+        validate([])  # not a dict
+
+
+def test_bench_record_matches_legacy_fields():
+    rec = bench_record("bench/x", 12.345, "pct=1", ts=1700000000.123456,
+                       rev="abc1234", backend="cpu", device_count=1)
+    validate(rec)
+    assert rec["kind"] == "bench"
+    assert rec["us"] == 12.3  # round(value, 1), as the legacy writer did
+    assert rec["ts"] == 1700000000.123
+    assert rec["name"] == "bench/x" and rec["derived"] == "pct=1"
+    assert rec["backend"] == "cpu" and rec["device_count"] == 1
+
+
+def test_attach_detach_tee():
+    tel = Telemetry(MemorySink())
+    extra = tel.attach(MemorySink())
+    tel.count("a")
+    tel.detach(extra)
+    tel.flush()
+    # the detached sink saw nothing (flush came after detach)
+    assert extra.records == []
+    assert tel.enabled
+
+
+# ------------------------------------------------------- disabled overhead
+
+def test_disabled_overhead_is_negligible():
+    tel = Telemetry()
+    n = 50_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with tel.span("hot"):
+            pass
+        tel.count("c")
+        tel.observe("h", 0.1)
+    per_iter = (time.perf_counter() - t0) / n
+    # one nullcontext + two early returns; generous bound for slow CI
+    assert per_iter < 20e-6, f"disabled telemetry costs {per_iter:.2e}s/iter"
+
+
+# --------------------------------------------------- train-history parity
+
+class _ScriptedPipeline:
+    """Duck-typed pipeline returning scripted values (no JAX involved)."""
+
+    def __init__(self):
+        self.losses = [(0.9, 1.5), (0.7, 1.4), (0.5, 1.3)]
+        self.metrics = iter([0.11, 0.22])
+        self.saved = 0
+
+    def train_epoch(self):
+        return self.losses.pop(0)
+
+    def evaluate(self, split):
+        return next(self.metrics), 0.01
+
+    def save_checkpoint(self, ckpt_dir, step):
+        self.saved += 1
+        return f"{ckpt_dir}/ckpt_{step}"
+
+
+def test_trainloop_history_from_records_parity(tmp_path):
+    from repro.train.loop import TrainLoop, history_from_records
+
+    tel = Telemetry()
+    sink = tel.attach(MemorySink())
+    loop = TrainLoop(_ScriptedPipeline(), telemetry=tel)
+    history = loop.fit(epochs=3, eval_every=2, eval_split="val",
+                       ckpt_dir=str(tmp_path), ckpt_every=3)
+    expected = {
+        "loss": [0.9, 0.7, 0.5],
+        "train_secs": [1.5, 1.4, 1.3],
+        "eval": [(1, 0.11)],
+        "ckpts": [f"{tmp_path}/ckpt_2"],
+    }
+    assert history == expected  # identical keys AND values
+    # and the records alone rebuild the same history
+    assert history_from_records(sink.records) == expected
+    for r in sink.records:
+        validate(r)
+
+
+# -------------------------------------------------- end-to-end acceptance
+
+def test_single_sink_observes_train_serve_and_storage(tmp_path):
+    """ISSUE acceptance: one ``repro.obs`` sink sees a CTDG link epoch, a
+    serving chaos run, and a windowed out-of-core storage epoch (plus a
+    streaming-CSR build), and every emitted record validates."""
+    from repro.core import DGData
+    from repro.core.loader import PrefetchLoader
+    from repro.serve import FaultInjector, OnlineGraphService
+    from repro.storage import InMemoryStore, StoreEventLoader, streaming_csr
+    from repro.train.loop import CTDGLinkPipeline, TrainLoop
+
+    path = str(tmp_path / "run.jsonl")
+    tel = Telemetry(FileSink(path))
+    mem = tel.attach(MemorySink())
+
+    # -- one CTDG link epoch through TrainLoop --------------------------
+    from repro.data import generate
+
+    data = generate("tiny").slice_events(0, 300)
+    pipe = CTDGLinkPipeline("tgat", data, batch_size=100, seed=0,
+                            telemetry=tel)
+    TrainLoop(pipe).fit(epochs=1)
+    assert any(r["kind"] == "span" and r["name"] == "ctdg/epoch"
+               for r in mem.records)
+    assert any(r["kind"] == "span" and r["name"] == "ctdg/step"
+               for r in mem.records)
+
+    # -- one serving chaos burst ----------------------------------------
+    inj = FaultInjector(seed=0, dup_p=0.1, fail_p=0.3)
+    rng = np.random.default_rng(1)
+    events = [(int(rng.integers(40)), int(rng.integers(40)), 100 + i, i)
+              for i in range(80)]
+    with OnlineGraphService(40, k=4, flush_interval=0.002,
+                            fault_injector=inj, telemetry=tel) as svc:
+        svc.ingest_many(inj.perturb_events(events))
+        svc.drain()
+        rs = [svc.submit_link(i % 40, (i * 3 + 1) % 40, 500).result(30)
+              for i in range(10)]
+    assert all(r.status is not None for r in rs)
+    assert tel.counter_value("serve/events_applied") > 0
+
+    # -- one windowed storage epoch + streaming CSR ---------------------
+    src = rng.integers(0, 40, 400)
+    dst = rng.integers(0, 40, 400)
+    t = np.sort(rng.integers(0, 5000, 400))
+    store = InMemoryStore.from_data(
+        DGData.from_arrays(src, dst, t, granularity="s"))
+    loader = PrefetchLoader(
+        StoreEventLoader(store, batch_size=100, telemetry=tel),
+        telemetry=tel)
+    assert len(list(loader)) == 4
+    streaming_csr(store, chunk_size=150, telemetry=tel)
+    assert tel.counter_value("storage/windows_read") > 0
+    assert tel.counter_value("storage/csr_windows") > 0
+    assert tel.counter_value("loader/batches") == 4
+
+    # -- every record in the shared JSONL file validates ----------------
+    tel.flush()
+    records = [json.loads(ln) for ln in open(path).read().splitlines()]
+    assert len(records) == len(mem.records)
+    for r in records:
+        validate(r)
+    names = {r["name"] for r in records}
+    # all three subsystems landed in ONE file
+    assert "ctdg/epoch" in names
+    assert "storage/csr_pass1" in names
+    assert any(n.startswith("serve/") for n in names)
+    # and the report renders without blowing up
+    assert "section" in span_report(records, min_pct=0.0)
+    assert "|" in span_report(records, min_pct=0.0, markdown=True)

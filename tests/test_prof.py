@@ -1,10 +1,17 @@
 import time
 
+import pytest
+
 from repro.utils import Profiler
 
 
+def _make_profiler():
+    with pytest.warns(DeprecationWarning, match="repro.obs.Telemetry"):
+        return Profiler()
+
+
 def test_profiler_accumulates_and_reports():
-    p = Profiler()
+    p = _make_profiler()
     for _ in range(3):
         with p("outer"):
             with p("inner"):
@@ -16,3 +23,14 @@ def test_profiler_accumulates_and_reports():
     assert "outer" in rep and "inner" in rep
     p.reset()
     assert p.total() == 0.0
+
+
+def test_profiler_shim_emits_span_records():
+    # The shim is a Telemetry front: sections land as span records with
+    # dotted paths in its private sink.
+    p = _make_profiler()
+    with p("a"):
+        with p("b"):
+            pass
+    paths = [r["path"] for r in p._sink.records if r["kind"] == "span"]
+    assert paths == ["a.b", "a"]

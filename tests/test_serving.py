@@ -188,11 +188,15 @@ def test_chaos_never_deadlocks_and_degrades_gracefully():
     duplicated/reordered event stream. The service must resolve every
     request with an explicit status, shed over-deadline requests, and keep
     serving EdgeBank answers while the model tier is down."""
+    from repro.obs import MemorySink, Telemetry, validate
+
     inj = FaultInjector(seed=0, drop_p=0.05, dup_p=0.05, reorder_p=0.15,
                         reorder_span=3, slow_p=0.5, slow_s=0.02,
                         fail_p=0.6)
+    sink = MemorySink()
+    tel = Telemetry(sink)
     svc = _mk(num_nodes=60, fault_injector=inj, fail_threshold=2,
-              probe_every=3, latency_budget=0.05)
+              probe_every=3, latency_budget=0.05, telemetry=tel)
     try:
         stream = inj.perturb_events(_events(150, num_nodes=60, seed=1))
         svc.ingest_many(stream)
@@ -219,5 +223,23 @@ def test_chaos_never_deadlocks_and_degrades_gracefully():
         tallied = sum(svc.stats[s] for s in
                       ("ok", "degraded", "rejected", "failed"))
         assert tallied == len(results)
+
+        # telemetry mirrors the stats dict and records schema-valid output
+        assert tel.counter_value("serve/events_deduped") == \
+            svc.stats["events_deduped"]
+        assert tel.counter_value("serve/model_errors") == \
+            svc.stats["model_errors"]
+        by_status = sum(tel.counter_value(f"serve/requests_{s}")
+                        for s in ("ok", "degraded", "rejected", "failed"))
+        assert by_status == len(results)
+        # per-tier latency histograms saw every tiered (ok/degraded) answer
+        answered = sum(
+            tel.histogram(f"serve/latency/{tier}").count
+            for tier in ("model", "edgebank")
+            if tel.histogram(f"serve/latency/{tier}") is not None)
+        assert answered == svc.stats["ok"] + svc.stats["degraded"]
+        tel.flush()
+        for rec in sink.records:
+            validate(rec)
     finally:
         svc.stop()
